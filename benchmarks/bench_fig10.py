@@ -1,0 +1,61 @@
+"""Fig. 10: average cost AND runtime vs quantization bits b.
+
+|Θ| = 2^{b−1}(2^b+1); runtime measured per H2T2 round (jit-compiled, CPU).
+Also benchmarks the fused Pallas hedge kernel (interpret mode) against the
+vmapped jnp path at each b — the kernel is the TPU fleet-serving variant."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import avg_costs_all_policies, timed
+from repro.core import HIConfig, h2t2_init
+from repro.data import dataset_trace
+from repro.kernels.hedge.ops import fleet_hedge_step
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    horizon = 1000 if quick else 5000
+    bits_list = [2, 4] if quick else [2, 3, 4, 5, 6]
+    for b in bits_list:
+        cfg = HIConfig(bits=b, eps=0.05, eta=1.0)
+        t0 = time.perf_counter()
+        costs = avg_costs_all_policies("breakhis", beta=0.3, horizon=horizon,
+                                       bits=b, seeds=2)
+        wall = time.perf_counter() - t0
+        # Per-round policy-update latency (jit'd scan over the trace).
+        from repro.core.policy import run_stream
+
+        tr = dataset_trace("breakhis", horizon, jax.random.PRNGKey(0), beta=0.3)
+        f = jax.jit(lambda: run_stream(cfg, tr.fs, tr.hrs, tr.betas,
+                                       jax.random.PRNGKey(1))[1].loss)
+        us_round = timed(f) / horizon
+        rows.append(
+            f"fig10_bits{b}_cost,{us_round:.2f},"
+            f"h2t2={costs['h2t2']:.4f};n_experts={cfg.n_experts};wall_s={wall:.1f}")
+    # Fleet hedge kernel vs jnp reference (batched streams, one round).
+    for b in bits_list:
+        cfg = HIConfig(bits=b)
+        g = cfg.grid
+        s = 16 if quick else 64
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 6)
+        l = jnp.arange(g)[:, None]
+        u = jnp.arange(g)[None, :]
+        logw = jnp.where(l <= u, 0.0, -1e30)[None].repeat(s, 0).astype(jnp.float32)
+        args = (logw, jax.random.uniform(ks[1], (s,)), jax.random.uniform(ks[2], (s,)),
+                jnp.zeros((s,), jnp.int32), jnp.ones((s,), jnp.int32),
+                jnp.full((s,), 0.3))
+        us_k = timed(lambda *a: fleet_hedge_step(cfg, *a, use_kernel=True), *args)
+        us_r = timed(lambda *a: fleet_hedge_step(cfg, *a, use_kernel=False), *args)
+        rows.append(f"fig10_bits{b}_hedge_kernel,{us_k:.1f},"
+                    f"jnp_ref_us={us_r:.1f};streams={s};interpret=True")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,44 @@
+"""Fig. 2: FPR vs FNR and average cost, single- vs two-threshold policies
+(BreakHis + Synthetic, δ₁=0.7, δ₋₁=1, β=0.3)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HIConfig, offline
+from repro.data import dataset_trace
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    cfg = HIConfig(bits=4, delta_fp=0.7, delta_fn=1.0)
+    horizon = 2000 if quick else 10_000
+    for name in ("breakhis", "synthetic"):
+        t0 = time.perf_counter()
+        tr = dataset_trace(name, horizon, jax.random.PRNGKey(0), beta=0.3)
+        fp, fn, cost = offline.fpr_fnr_cost_surface(cfg, tr.fs, tr.hrs, beta=0.3)
+        cost = np.asarray(cost)
+        fp, fn = np.asarray(fp), np.asarray(fn)
+        # Best two-threshold point.
+        best2 = np.unravel_index(np.argmin(cost), cost.shape)
+        # Best single-threshold point = symmetric band (G−k, k).
+        g = cfg.grid
+        singles = [(g - k, k) for k in range(g // 2 + 1, g)] + [(0, 0)]
+        best1 = min(singles, key=lambda lu: cost[lu])
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(
+            f"fig2_{name}_two_threshold,{us:.0f},"
+            f"fpr={fp[best2]:.3f};fnr={fn[best2]:.3f};cost={cost[best2]:.4f}")
+        rows.append(
+            f"fig2_{name}_single_threshold,{us:.0f},"
+            f"fpr={fp[best1]:.3f};fnr={fn[best1]:.3f};cost={cost[best1]:.4f}")
+        assert cost[best2] <= cost[best1] + 1e-6
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

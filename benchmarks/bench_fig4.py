@@ -1,0 +1,39 @@
+"""Fig. 4 / Fig. 6 / Fig. 7: average cost vs β for the six §5 policies on
+every dataset (manuscript + appendix). --delta1 0.25 reproduces Fig. 7."""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+from benchmarks.common import APPENDIX_DATASETS, MANUSCRIPT_DATASETS, avg_costs_all_policies
+
+POLICIES = ["no_offload", "full_offload", "hi_single", "offline_single",
+            "offline_two", "h2t2"]
+
+
+def run(quick: bool = False, delta_fp: float = 0.7,
+        datasets=None, betas=None) -> List[str]:
+    rows = []
+    datasets = datasets or (MANUSCRIPT_DATASETS if quick
+                            else MANUSCRIPT_DATASETS + APPENDIX_DATASETS)
+    betas = betas or ([0.2, 0.4] if quick else [0.1, 0.2, 0.3, 0.4, 0.5, 0.6])
+    horizon = 2000 if quick else 10_000
+    seeds = 2 if quick else 3
+    for name in datasets:
+        for beta in betas:
+            t0 = time.perf_counter()
+            costs = avg_costs_all_policies(
+                name, beta, horizon=horizon, delta_fp=delta_fp, seeds=seeds)
+            us = (time.perf_counter() - t0) * 1e6
+            derived = ";".join(f"{p}={costs[p]:.4f}" for p in POLICIES)
+            rows.append(f"fig4_{name}_beta{beta:g},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--delta1", type=float, default=0.7)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("\n".join(run(quick=args.quick, delta_fp=args.delta1)))

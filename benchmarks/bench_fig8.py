@@ -1,0 +1,36 @@
+"""Fig. 8: average cost vs cost-asymmetry ratio δ₁/δ₋₁ ∈ (1/10, 10), β=0.4.
+
+The paper's claim: the two-threshold gain over single-threshold GROWS with
+asymmetry and vanishes near δ₁/δ₋₁ = 1."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import avg_costs_all_policies
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    ratios = [0.1, 0.5, 1.0, 2.0, 10.0] if quick else \
+        [0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0]
+    horizon = 2000 if quick else 10_000
+    for name in (["breakhis"] if quick else ["breakhis", "chest", "breach"]):
+        for r in ratios:
+            # Normalize so max(δ₁, δ₋₁) = 1 (paper's normalization).
+            dfp, dfn = (1.0, 1.0 / r) if r > 1 else (r, 1.0)
+            t0 = time.perf_counter()
+            costs = avg_costs_all_policies(
+                name, beta=0.4, horizon=horizon, delta_fp=dfp, delta_fn=dfn,
+                seeds=2)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append(
+                f"fig8_{name}_ratio{r:g},{us:.0f},"
+                f"h2t2={costs['h2t2']:.4f};hi_single={costs['hi_single']:.4f};"
+                f"offline_two={costs['offline_two']:.4f};"
+                f"offline_single={costs['offline_single']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

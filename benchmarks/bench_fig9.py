@@ -1,0 +1,34 @@
+"""Fig. 9: average cost vs learning rate η (β=0.4, δ₁=0.7, δ₋₁=1).
+
+Shows the paper's point that the bound-optimal η* (Corollary 1) is not the
+empirical minimum, and η = 1 is a good default."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import avg_costs_all_policies
+from repro.core import HIConfig
+from repro.core.regret import corollary1_params
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    horizon = 2000 if quick else 10_000
+    etas = [0.01, 0.1, 1.0, 4.0] if quick else [0.003, 0.01, 0.05, 0.2, 0.5, 1.0, 2.0, 8.0]
+    eta_star = corollary1_params(HIConfig(bits=4), horizon)[1]
+    etas = sorted(set(etas + [round(eta_star, 4)]))
+    for name in (["breakhis"] if quick else ["breakhis", "chest"]):
+        for eta in etas:
+            t0 = time.perf_counter()
+            costs = avg_costs_all_policies(
+                name, beta=0.4, horizon=horizon, eta=eta, seeds=2)
+            us = (time.perf_counter() - t0) * 1e6
+            star = " (eta*)" if abs(eta - eta_star) < 1e-3 else ""
+            rows.append(f"fig9_{name}_eta{eta:g}{star},{us:.0f},"
+                        f"h2t2={costs['h2t2']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,45 @@
+"""Kernel microbenchmarks (CPU: interpret-mode correctness path; timings are
+for the jnp reference oracles, which are the XLA fallbacks on TPU too)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # Attention oracle at serving-ish shapes.
+    for (b, s, h, hkv, d) in ([(1, 256, 4, 2, 64)] if quick
+                              else [(1, 256, 4, 2, 64), (2, 1024, 8, 2, 64)]):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.bfloat16)
+        f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+        us = timed(f, q, k, v)
+        flops = 4 * b * s * s * h * d / 2
+        rows.append(f"attn_ref_b{b}_s{s}_h{h},{us:.0f},gflops_eff={flops/us/1e3:.1f}")
+    # SSD oracle.
+    for (b, s, h, p, n) in ([(1, 512, 4, 32, 16)] if quick
+                            else [(1, 512, 4, 32, 16), (2, 2048, 8, 64, 64)]):
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32) * 0.3
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        bb = jax.random.normal(ks[3], (b, s, 1, n)) * 0.3
+        cc = jax.random.normal(ks[4], (b, s, 1, n)) * 0.3
+        f = jax.jit(lambda *args: ssd_ref(*args, chunk=128)[0])
+        us = timed(f, x, dt, a, bb, cc)
+        rows.append(f"ssd_ref_b{b}_s{s}_h{h},{us:.0f},chunk=128")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,44 @@
+"""BEYOND-PAPER (§6 open problem): online multiclass HI via a learned risk
+threshold τ — cost vs β on a synthetic 3-class stream, vs naive policies and
+the offline-best fixed τ (which contains Theorem 3's rule when calibrated)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HIConfig
+from repro.core.multiclass import mc_no_offload_loss, mc_offline_best, mc_run_stream
+
+COST = jnp.asarray([[0.0, 0.7, 0.9],
+                    [1.0, 0.0, 0.6],
+                    [0.8, 0.5, 0.0]])
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = []
+    t = 2000 if quick else 10_000
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    key = jax.random.PRNGKey(0)
+    ky, kn = jax.random.split(key)
+    y = jax.random.randint(ky, (t,), 0, 3)
+    logits = 1.4 * jax.nn.one_hot(y, 3) + jax.random.normal(kn, (t, 3))
+    fs = jax.nn.softmax(logits, axis=-1)
+    for beta in ([0.2, 0.4] if quick else [0.1, 0.2, 0.3, 0.4, 0.5]):
+        betas = jnp.full((t,), beta)
+        t0 = time.perf_counter()
+        _, out = mc_run_stream(cfg, fs, COST, betas, y, jax.random.PRNGKey(1))
+        us = (time.perf_counter() - t0) * 1e6
+        algo = float(jnp.sum(out.loss)) / t
+        no = float(mc_no_offload_loss(fs, COST, y)) / t
+        best = float(mc_offline_best(cfg, fs, COST, betas, y)) / t
+        rows.append(f"multiclass_beta{beta:g},{us:.0f},"
+                    f"mc_h2t2={algo:.4f};no_offload={no:.4f};"
+                    f"full_offload={beta:.4f};offline_tau={best:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

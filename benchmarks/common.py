@@ -1,0 +1,59 @@
+"""Shared benchmark plumbing: policies run over calibrated dataset traces."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HIConfig, baselines, offline, run_stream
+from repro.data import dataset_trace
+
+MANUSCRIPT_DATASETS = ["breakhis", "chest", "phishing", "synthetic", "breach"]
+APPENDIX_DATASETS = ["chestxray", "resnetdogs", "logisticdogs", "xract"]
+
+
+def avg_costs_all_policies(
+    name: str, beta: float, horizon: int = 10_000,
+    delta_fp: float = 0.7, delta_fn: float = 1.0,
+    bits: int = 4, eta: float = 1.0, eps: float = 0.05,
+    seeds: int = 3, seed0: int = 0,
+) -> Dict[str, float]:
+    """Average per-round cost of the paper's six §5 policies on one dataset."""
+    cfg = HIConfig(bits=bits, delta_fp=delta_fp, delta_fn=delta_fn,
+                   eps=eps, eta=eta)
+    tr = dataset_trace(name, horizon, jax.random.PRNGKey(seed0 + 99), beta=beta)
+    t = horizon
+
+    h2t2, single = [], []
+    for s in range(seeds):
+        _, o = run_stream(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(s))
+        h2t2.append(float(jnp.sum(o.loss)) / t)
+        _, so = baselines.run_single_threshold(
+            cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(1000 + s))
+        single.append(float(jnp.sum(so.loss)) / t)
+
+    return {
+        "no_offload": float(jnp.sum(
+            baselines.no_offload_losses(cfg, tr.fs, tr.hrs, tr.betas))) / t,
+        "full_offload": float(jnp.sum(
+            baselines.full_offload_losses(cfg, tr.fs, tr.hrs, tr.betas))) / t,
+        "hi_single": sum(single) / len(single),
+        "offline_single": float(offline.best_single_threshold(
+            cfg, tr.fs, tr.hrs, tr.betas).best_loss) / t,
+        "offline_two": float(offline.best_two_threshold(
+            cfg, tr.fs, tr.hrs, tr.betas).best_loss) / t,
+        "h2t2": sum(h2t2) / len(h2t2),
+    }
+
+
+def timed(fn, *args, reps: int = 5) -> float:
+    """us per call after warmup (jit compile excluded)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6

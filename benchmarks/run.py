@@ -1,0 +1,72 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) — one row per measured
+configuration, matching the paper's artifacts:
+
+    fig2    FPR/FNR/cost of single- vs two-threshold optima
+    fig4    avg cost vs β, six policies × nine datasets (+ Fig. 6/7 via flags)
+    fig8    avg cost vs asymmetry δ₁/δ₋₁
+    fig9    avg cost vs learning rate η
+    fig10   cost + runtime vs quantization bits (+ hedge-kernel microbench)
+    regret  Theorem-2 empirical regret growth + slope
+    kernels attention/SSD oracle microbenchmarks
+    drift   BEYOND-PAPER: discounted-hedge adaptation under mid-stream shift
+    multiclass BEYOND-PAPER: online K-class HI via learned risk threshold (paper §6)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    bench_drift,
+    bench_multiclass,
+    bench_fig2,
+    bench_fig4,
+    bench_fig8,
+    bench_fig9,
+    bench_fig10,
+    bench_kernels,
+    bench_regret,
+)
+
+MODULES = {
+    "fig2": bench_fig2,
+    "fig4": bench_fig4,
+    "fig8": bench_fig8,
+    "fig9": bench_fig9,
+    "fig10": bench_fig10,
+    "regret": bench_regret,
+    "kernels": bench_kernels,
+    "drift": bench_drift,
+    "multiclass": bench_multiclass,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced horizons/sweeps (CI-sized)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(MODULES)
+    print("name,us_per_call,derived")
+    failed = False
+    for name in names:
+        try:
+            for row in MODULES[name].run(quick=args.quick):
+                print(row)
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failed = True
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Section 6 / Theorem 3: K-class decision regions of a calibrated model
+(ASCII rendering of the paper's Fig. 5 for K = 3).
+
+    PYTHONPATH=src python examples/multiclass_demo.py [--beta 0.4]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multiclass_regions, multiclass_rule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--beta", type=float, default=0.4)
+    ap.add_argument("--res", type=int, default=30)
+    args = ap.parse_args()
+
+    k = 3
+    # A representative asymmetric cost matrix (rows: true, cols: predicted).
+    c = jnp.asarray([[0.0, 0.7, 0.9],
+                     [1.0, 0.0, 0.6],
+                     [0.8, 0.5, 0.0]])
+    res = args.res
+    marks = "012·"  # class regions + offload
+    print(f"K=3 calibrated decision regions, β={args.beta} "
+          f"(rows: f₀ → 1 top to bottom; cols: f₁ → 1 left to right; '·' = offload)")
+    for i in range(res, -1, -1):
+        f0 = i / res
+        row = []
+        for j in range(res + 1):
+            f1 = j / res * (1 - f0)
+            f2 = 1.0 - f0 - f1
+            if f2 < -1e-9:
+                row.append(" ")
+                continue
+            f = jnp.asarray([f0, f1, max(f2, 0.0)])
+            lab = int(multiclass_regions(f[None], c, args.beta)[0])
+            row.append(marks[lab])
+        print("".join(row))
+    # Expected-cost sanity on a few points.
+    for f in ([1, 0, 0], [0.34, 0.33, 0.33], [0.1, 0.6, 0.3]):
+        d = multiclass_rule(jnp.asarray(f, jnp.float32), c, jnp.asarray(args.beta))
+        print(f"f={f} → {'offload' if bool(d.offload) else f'class {int(d.pred)}'}"
+              f" (E[cost]={float(d.expected_cost):.3f})")
+
+
+if __name__ == "__main__":
+    main()

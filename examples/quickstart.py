@@ -1,0 +1,54 @@
+"""Quickstart: run H2T2 on a calibrated BreakHis-like stream and compare with
+every baseline from the paper's §5.
+
+    PYTHONPATH=src python examples/quickstart.py [--dataset breakhis] [--beta 0.3]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HIConfig, baselines, offline, run_stream
+from repro.data import dataset_trace, empirical_confusion
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="breakhis")
+    ap.add_argument("--beta", type=float, default=0.3)
+    ap.add_argument("--horizon", type=int, default=10_000)
+    ap.add_argument("--bits", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = HIConfig(bits=args.bits, delta_fp=0.7, delta_fn=1.0, eps=0.05, eta=1.0)
+    tr = dataset_trace(args.dataset, args.horizon, jax.random.PRNGKey(0),
+                       beta=args.beta)
+    acc, fp, fn = empirical_confusion(tr)
+    print(f"dataset={args.dataset}  LDL argmax: acc={acc:.2%} fp={fp:.2%} fn={fn:.2%}")
+    print(f"experts |Θ| = {cfg.n_experts} (b={args.bits})\n")
+
+    _, out = run_stream(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(1))
+    t = args.horizon
+    results = {
+        "No-offload": float(jnp.sum(baselines.no_offload_losses(
+            cfg, tr.fs, tr.hrs, tr.betas))) / t,
+        "Full-offload": float(jnp.sum(baselines.full_offload_losses(
+            cfg, tr.fs, tr.hrs, tr.betas))) / t,
+        "HI single-threshold (online)": float(jnp.sum(
+            baselines.run_single_threshold(cfg, tr.fs, tr.hrs, tr.betas,
+                                           jax.random.PRNGKey(2))[1].loss)) / t,
+        "offline θ† (single)": float(offline.best_single_threshold(
+            cfg, tr.fs, tr.hrs, tr.betas).best_loss) / t,
+        "offline θ⃗* (two)": float(offline.best_two_threshold(
+            cfg, tr.fs, tr.hrs, tr.betas).best_loss) / t,
+        "H2T2 (ours)": float(jnp.sum(out.loss)) / t,
+    }
+    width = max(len(k) for k in results)
+    for k, v in sorted(results.items(), key=lambda kv: kv[1]):
+        print(f"  {k:<{width}}  avg cost = {v:.4f}")
+    print(f"\noffload rate = {float(jnp.mean(out.offload)):.2%}, "
+          f"explore rate = {float(jnp.mean(out.explored)):.2%}")
+
+
+if __name__ == "__main__":
+    main()

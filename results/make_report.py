@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the sweep JSONLs."""
+import json
+import sys
+
+
+def load(path):
+    out = []
+    for line in open(path):
+        line = line.strip()
+        if line.startswith("{"):
+            out.append(json.loads(line))
+    return out
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | ok | peak GB/dev | fits 16G | compile s | collectives (full-depth count) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for d in recs:
+        m = d.get("memory") or {}
+        c = d.get("collectives_fulldepth") or {}
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{'✅' if d['ok'] else '❌ ' + d.get('error', '')[:60]} | "
+            f"{m.get('peak_bytes', 0)/2**30:.1f} | "
+            f"{'yes' if d.get('fits_hbm') else 'no'} | "
+            f"{d.get('compile_seconds', '')} | {int(c.get('count', 0))} |")
+    return "\n".join(rows)
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
+            "MODEL_FLOPS | useful ratio | peak GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for d in recs:
+        r = d.get("roofline")
+        if not r:
+            continue
+        t = r["terms_seconds"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {fmt_s(t['compute'])} | "
+            f"{fmt_s(t['memory'])} | {fmt_s(t['collective'])} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{(r.get('memory') or {}).get('peak_bytes', 0)/2**30:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    suffix = sys.argv[2] if len(sys.argv) > 2 else ""   # e.g. "_optimized"
+    if which in ("dryrun", "both"):
+        path = f"results/dryrun_sweep{suffix or '_final'}.jsonl"
+        try:
+            print(dryrun_table(load(path)))
+        except FileNotFoundError:
+            print(dryrun_table(load("results/dryrun_sweep.jsonl")))
+        print()
+    if which in ("roofline", "both"):
+        try:
+            print(roofline_table(load(f"results/roofline_sweep{suffix}.jsonl")))
+        except FileNotFoundError:
+            print("(roofline sweep not found)")

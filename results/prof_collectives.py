@@ -1,0 +1,47 @@
+"""Top-collective profiler: lower one (arch, shape, strategy) with unrolled
+depth-2, group collective ops by (kind, shape), print descending total bytes."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse, re, sys
+from collections import defaultdict
+import jax
+from repro.configs import get_config, get_shape
+from repro.launch import builders
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import _SHAPE_RE, _shape_bytes, _COLL_KINDS
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--strategy", default="auto")
+ap.add_argument("--groups", type=int, default=2)
+ap.add_argument("--top", type=int, default=20)
+args = ap.parse_args()
+
+cfg = builders.override_groups(get_config(args.arch), args.groups)
+shape = get_shape(args.shape)
+mesh = make_production_mesh()
+fn, fargs, shard = builders.build_dryrun_step(cfg, shape, mesh, strategy=args.strategy, unroll=True, microbatches=1)
+with mesh:
+    compiled = jax.jit(fn, in_shardings=shard).lower(*fargs).compile()
+agg = defaultdict(lambda: [0, 0.0])
+for line in compiled.as_text().splitlines():
+    s = line.strip()
+    kind = None
+    for k in _COLL_KINDS:
+        if f" {k}(" in s or f"= {k}(" in s or f"{k}-start(" in s:
+            kind = k; break
+    if kind is None: continue
+    shapes = _SHAPE_RE.findall(s)
+    if not shapes: continue
+    dt, dims = max(shapes, key=lambda x: _shape_bytes(*x))
+    payload = _shape_bytes(dt, dims) * (2 if kind == "all-reduce" else 1)
+    key = (kind, f"{dt}[{dims}]")
+    agg[key][0] += 1
+    agg[key][1] += payload
+total = sum(v[1] for v in agg.values())
+print(f"total collective bytes/device (depth-{args.groups}): {total/2**30:.2f} GiB")
+for (kind, shp), (cnt, byt) in sorted(agg.items(), key=lambda kv: -kv[1][1])[:args.top]:
+    print(f"{byt/2**30:9.3f} GiB  x{cnt:4d}  {kind:20s} {shp}")
+ca = compiled.cost_analysis()
+print("flops/dev %.3e  bytes/dev %.3e" % (ca.get("flops",0), ca.get("bytes accessed",0)))

@@ -1,0 +1,6 @@
+"""repro — H2T2 hierarchical-inference serving framework (JAX / TPU).
+
+Reproduction + extension of "Inference Offloading for Cost-Sensitive Binary
+Classification at the Edge" (AAAI 2026). See README.md / DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,56 @@
+"""Config registry: `get_config(arch)` / `--arch <id>`."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, pad_to
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+from repro.configs.recurrentgemma_2b import CONFIG as _recurrentgemma_2b
+from repro.configs.mamba2_780m import CONFIG as _mamba2_780m
+from repro.configs.deepseek_coder_33b import CONFIG as _deepseek_coder_33b
+from repro.configs.llava_next_34b import CONFIG as _llava_next_34b
+from repro.configs.whisper_small import CONFIG as _whisper_small
+from repro.configs.deepseek_v2_236b import CONFIG as _deepseek_v2_236b
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral_8x7b
+from repro.configs.granite_3_2b import CONFIG as _granite_3_2b
+from repro.configs.yi_34b import CONFIG as _yi_34b
+from repro.configs.qwen2_1_5b import CONFIG as _qwen2_1_5b
+from repro.configs.paper_hi import LDL_CONFIG, RDL_CONFIG
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _recurrentgemma_2b,
+        _mamba2_780m,
+        _deepseek_coder_33b,
+        _llava_next_34b,
+        _whisper_small,
+        _deepseek_v2_236b,
+        _mixtral_8x7b,
+        _granite_3_2b,
+        _yi_34b,
+        _qwen2_1_5b,
+        LDL_CONFIG,
+        RDL_CONFIG,
+    ]
+}
+
+ASSIGNED = [
+    "recurrentgemma-2b", "mamba2-780m", "deepseek-coder-33b", "llava-next-34b",
+    "whisper-small", "deepseek-v2-236b", "mixtral-8x7b", "granite-3-2b",
+    "yi-34b", "qwen2-1.5b",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+
+
+__all__ = [
+    "ARCHS", "ASSIGNED", "ModelConfig", "InputShape", "SHAPES",
+    "get_config", "get_shape", "pad_to", "LDL_CONFIG", "RDL_CONFIG",
+]

@@ -1,0 +1,129 @@
+"""ModelConfig — one dataclass describing every supported backbone family.
+
+Families: dense (GQA/MQA attention + MLP), moe (routed experts), ssm (Mamba2
+SSD), hybrid (RG-LRU recurrent + local attention), encdec (whisper-style),
+vlm (dense decoder consuming patch embeddings), audio (= encdec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def pad_to(x: int, multiple: int = 256) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    # Block pattern, repeated through depth ('attn', 'rec', 'ssm', 'moe').
+    pattern: Tuple[str, ...] = ("attn",)
+    # Attention extras.
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None      # persistent SWA (mixtral, rg local attn)
+    long_context_window: int = 8192           # window used only for long_500k decode
+    # MoE.
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    dense_ff: Optional[int] = None            # d_ff of any leading dense MLP layers
+    n_dense_layers: int = 0                   # leading layers that use dense MLP
+    # MLA (deepseek-v2).
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0                      # 0 ⇒ direct q projection
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # SSM (mamba2).
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    conv_width: int = 4
+    # RG-LRU (recurrentgemma).
+    lru_width: Optional[int] = None
+    # Encoder-decoder (whisper) / frontends.
+    n_encoder_layers: int = 0
+    n_frames: int = 1500                      # encoder positions (stub frontend)
+    n_patches: int = 0                        # VLM prefix patch embeddings (stub)
+    # Misc.
+    norm: str = "rmsnorm"                     # rmsnorm | layernorm
+    act: str = "silu"                         # silu (swiglu) | gelu
+    tie_embeddings: bool = False
+    dtype: jnp.dtype = jnp.bfloat16
+    source: str = ""                          # citation
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 so the embedding/LM head shard
+        16-way on the model axis (MaxText-style padding; loss masks the tail)."""
+        return pad_to(self.vocab)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kinds through the depth, repeating the pattern."""
+        p = self.pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """CPU-smoke-sized variant of the same family (≤2 layers, d_model ≤ 512,
+        ≤4 experts), preserving the block pattern and divisibility structure."""
+        small = dict(
+            n_layers=max(2, len(self.pattern)),
+            d_model=256,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads > 1 else 1,
+            head_dim=64,
+            d_ff=512,
+            vocab=512,
+            n_frames=64,
+            n_patches=min(self.n_patches, 16),
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else None,
+            long_context_window=64,
+        )
+        if self.n_experts:
+            small.update(n_experts=4, top_k=min(self.top_k, 2), d_ff=128,
+                         n_shared_experts=min(self.n_shared_experts, 1),
+                         dense_ff=256 if self.dense_ff else None,
+                         n_dense_layers=min(self.n_dense_layers, 1))
+        if self.use_mla:
+            small.update(kv_lora_rank=64, q_lora_rank=64 if self.q_lora_rank else 0,
+                         qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32, head_dim=48)
+        if self.family == "ssm":
+            small.update(ssm_state=16, ssm_head_dim=32)
+        if self.family in ("encdec", "audio"):
+            small.update(n_encoder_layers=2)
+        if self.family == "hybrid":
+            small.update(lru_width=256)
+        small.update(overrides)
+        return dataclasses.replace(self, name=self.name + "-smoke", **small)

@@ -1,0 +1,17 @@
+"""deepseek-coder-33b — dense llama-arch GQA [arXiv:2401.14196]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=19_200,
+    vocab=32_256,
+    pattern=("attn",),
+    rope_theta=100_000.0,
+    source="arXiv:2401.14196 (DeepSeek-Coder-33B)",
+)

@@ -1,0 +1,28 @@
+"""deepseek-v2-236b — MoE 160 routed experts top-6 + 2 shared, MLA attention
+with kv_lora=512 [arXiv:2405.04434]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,               # MLA: per-head keys decompressed from latent
+    head_dim=192,                 # qk_nope(128) + qk_rope(64)
+    d_ff=1536,                    # per routed expert
+    vocab=102_400,
+    pattern=("moe",),
+    n_experts=160,
+    top_k=6,
+    n_shared_experts=2,
+    n_dense_layers=1,             # first layer uses a dense MLP
+    dense_ff=12_288,
+    use_mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    source="arXiv:2405.04434 (DeepSeek-V2 236B)",
+)

@@ -1,0 +1,19 @@
+"""llava-next-34b — VLM: Yi-34B language decoder consuming anyres patch
+embeddings from a stub vision frontend [hf:llava-hf/llava-v1.6]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20_480,
+    vocab=64_000,
+    pattern=("attn",),
+    rope_theta=5_000_000.0,
+    n_patches=2880,               # anyres: (4 tiles + 1 base) x 576 patches (stub)
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (34B variant dims per Yi-34B)",
+)

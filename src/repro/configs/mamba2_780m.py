@@ -1,0 +1,23 @@
+"""mamba2-780m — attention-free SSM with state-space duality (SSD)
+[arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,                    # attention-free
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                       # no separate MLP; the Mamba2 block is the mixer
+    vocab=50_280,
+    pattern=("ssm",),
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_groups=1,
+    conv_width=4,
+    norm="rmsnorm",
+    source="arXiv:2405.21060 (Mamba2-780m)",
+)

@@ -1,0 +1,34 @@
+"""The paper's own hierarchical pair, expressed in this framework:
+a lightweight edge LDL (MobileNet-class capacity) and a server RDL.
+Both are small decoder backbones with binary heads; the paper's policy layer
+(repro.core) is model-agnostic, so these stand in for the MobileNet/ResNet
+pairs of Table 2 when running end-to-end serving examples."""
+from repro.configs.base import ModelConfig
+
+LDL_CONFIG = ModelConfig(
+    name="paper-ldl",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=1024,
+    vocab=512,
+    pattern=("attn",),
+    source="paper §5: MobileNet-class edge LDL stand-in",
+)
+
+RDL_CONFIG = ModelConfig(
+    name="paper-rdl",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=3072,
+    vocab=512,
+    pattern=("attn",),
+    source="paper §5: remote RDL stand-in",
+)

@@ -1,0 +1,21 @@
+"""recurrentgemma-2b — hybrid RG-LRU + local attention, 2 recurrent : 1 attn
+pattern [arXiv:2402.19427, Griffin/RecurrentGemma]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,                 # MQA
+    head_dim=256,
+    d_ff=7680,
+    vocab=256_000,
+    pattern=("rec", "rec", "attn"),
+    sliding_window=2048,          # local attention window
+    lru_width=2560,
+    rope_theta=10_000.0,
+    act="gelu",
+    source="arXiv:2402.19427 (RecurrentGemma-2B)",
+)

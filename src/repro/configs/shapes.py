@@ -1,0 +1,37 @@
+"""The four assigned input shapes.
+
+Decode shapes lower `serve_step` (one new token against a KV cache of seq_len);
+train_4k lowers `train_step`; prefill_32k lowers `prefill_step`.
+long_500k decodes against a sliding-window cache (window = cfg.long_context_window,
+or the family's native recurrent state) — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    s.name: s
+    for s in [
+        InputShape("train_4k", seq_len=4_096, global_batch=256, kind="train"),
+        InputShape("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
+        InputShape("decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
+        InputShape("long_500k", seq_len=524_288, global_batch=1, kind="decode"),
+    ]
+}
+
+
+def get_shape(name: str) -> InputShape:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise KeyError(f"unknown shape {name!r}; choose from {sorted(SHAPES)}")

@@ -1,0 +1,22 @@
+"""whisper-small — encoder-decoder with conv/mel frontend STUB: input_specs()
+provides precomputed frame embeddings [arXiv:2212.04356]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,                  # decoder layers
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab=51_865,
+    pattern=("attn",),
+    n_frames=1500,
+    norm="layernorm",
+    act="gelu",
+    rope_theta=0.0,               # whisper uses learned positions, not rope
+    source="arXiv:2212.04356 (Whisper-small)",
+)

@@ -1,0 +1,32 @@
+# The paper's primary contribution: H2T2 two-threshold hierarchical-inference
+# policy, calibrated-model closed forms, offline optima, and paper baselines.
+from repro.core.types import HIConfig, StreamSpec
+from repro.core.policy import (
+    H2T2State,
+    StepOutput,
+    h2t2_init,
+    h2t2_step,
+    pseudo_loss,
+    quantize,
+    region_masks,
+    run_fleet,
+    run_stream,
+)
+from repro.core.calibrated import (
+    CalibratedDecision,
+    calibrated_rule,
+    chow_rule,
+    multiclass_regions,
+    multiclass_rule,
+    optimal_thresholds,
+)
+from repro.core import baselines, multiclass, offline, regret
+
+__all__ = [
+    "HIConfig", "StreamSpec", "H2T2State", "StepOutput",
+    "h2t2_init", "h2t2_step", "pseudo_loss", "quantize", "region_masks",
+    "run_fleet", "run_stream",
+    "CalibratedDecision", "calibrated_rule", "chow_rule",
+    "multiclass_regions", "multiclass_rule", "optimal_thresholds",
+    "baselines", "multiclass", "offline", "regret",
+]

@@ -1,0 +1,114 @@
+"""Baseline policies from the paper's §5 benchmark suite.
+
+  1. No-offload  — accept the LDL argmax inference as-is.
+  2. Full-offload — offload every sample.
+  3. HI-single-threshold — the state-of-the-art single-threshold online HI
+     policy (Moothedath, Champati, Gross 2024), reimplemented on the same
+     quantized grid with the same ε-exploration pseudo-loss machinery so the
+     comparison isolates one- vs two-threshold structure.
+Offline optima θ† and θ⃗* live in repro.core.offline.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import HIConfig
+
+
+def _phi(cfg: HIConfig, pred1: jnp.ndarray, h_r: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(
+        pred1,
+        jnp.where(h_r == 0, cfg.delta_fp, 0.0),
+        jnp.where(h_r == 1, cfg.delta_fn, 0.0),
+    )
+
+
+def no_offload_losses(cfg: HIConfig, fs, hrs, betas) -> jnp.ndarray:
+    """Per-round loss of the No-offload policy (argmax local inference)."""
+    return _phi(cfg, fs >= 0.5, hrs)
+
+
+def full_offload_losses(cfg: HIConfig, fs, hrs, betas) -> jnp.ndarray:
+    return betas
+
+
+class SingleThresholdState(NamedTuple):
+    log_w: jnp.ndarray   # (G+1,) log weights over thresholds θ = k/G, k = 0..G
+    t: jnp.ndarray
+    n_offloads: jnp.ndarray
+
+
+class SingleStepOutput(NamedTuple):
+    offload: jnp.ndarray
+    pred: jnp.ndarray
+    loss: jnp.ndarray
+
+
+def single_threshold_init(cfg: HIConfig) -> SingleThresholdState:
+    zero = jnp.zeros((), jnp.int32)
+    return SingleThresholdState(
+        log_w=jnp.zeros(cfg.grid + 1, cfg.dtype), t=zero, n_offloads=zero
+    )
+
+
+def single_threshold_step(
+    cfg: HIConfig,
+    state: SingleThresholdState,
+    f: jnp.ndarray,
+    beta: jnp.ndarray,
+    h_r: jnp.ndarray,
+    key: jax.Array,
+) -> Tuple[SingleThresholdState, SingleStepOutput]:
+    """Hedge over single offloading thresholds on confidence c = max(f, 1−f).
+
+    Expert θ offloads iff c < θ; local inference is argmax. Partial feedback is
+    handled exactly as H2T2: offloaded rounds reveal h_r; ε-exploration offloads
+    unambiguous rounds so the local-side pseudo-loss stays unbiased.
+    """
+    g = cfg.grid
+    conf = jnp.maximum(f, 1.0 - f)
+    thetas = jnp.arange(g + 1, dtype=cfg.dtype) / g
+    offload_mask = conf < thetas                              # (G+1,)
+
+    log_total = jax.nn.logsumexp(state.log_w)
+    masked = jnp.where(offload_mask, state.log_w, -jnp.inf)
+    q = jnp.exp(jax.nn.logsumexp(masked) - log_total)         # P(offloading expert)
+
+    k_psi, k_zeta = jax.random.split(key)
+    psi = jax.random.uniform(k_psi)
+    zeta = jax.random.bernoulli(k_zeta, cfg.eps)
+    in_offload = psi <= q
+    offload = in_offload | zeta
+    explored = zeta & ~in_offload
+
+    pred_local = (f >= 0.5).astype(jnp.int32)
+    phi_local = _phi(cfg, pred_local == 1, h_r)
+    loss = jnp.where(offload, beta, phi_local)
+    pred = jnp.where(offload, h_r.astype(jnp.int32), pred_local)
+
+    # Pseudo-loss per expert, mirroring H2T2 Eq. (10).
+    lt = jnp.where(offload & offload_mask, beta, 0.0)
+    lt = lt + jnp.where(explored & ~offload_mask, phi_local / cfg.eps, 0.0)
+    log_w = state.log_w - cfg.eta * lt
+    log_w = log_w - jnp.max(log_w)
+
+    new_state = SingleThresholdState(
+        log_w=log_w, t=state.t + 1,
+        n_offloads=state.n_offloads + offload.astype(jnp.int32),
+    )
+    return new_state, SingleStepOutput(offload=offload, pred=pred, loss=loss)
+
+
+def run_single_threshold(
+    cfg: HIConfig, fs, hrs, betas, key
+) -> Tuple[SingleThresholdState, SingleStepOutput]:
+    keys = jax.random.split(key, fs.shape[0])
+
+    def body(st, xs):
+        f, hr, beta, k = xs
+        return single_threshold_step(cfg, st, f, beta, hr, k)
+
+    return jax.lax.scan(body, single_threshold_init(cfg), (fs, hrs, betas, keys))

@@ -1,0 +1,82 @@
+"""Closed-form optimal policies for calibrated local models.
+
+Theorem 1 (binary): with calibrated confidence f = P(h_r = 1 | x),
+    predict 1 iff f ≥ δ₁/(δ₁+δ₋₁);
+    offload iff β/δ₋₁ ≤ f < 1 − β/δ₁;
+    E[l_t] = min{β, δ₁(1−f), δ₋₁ f}.
+
+Theorem 3 (K-class): with calibrated softmax vector f and cost matrix C,
+    h* = argmin_k fᵀC_k; offload iff min_k fᵀC_k > β;
+    E[l_t] = min{β, min_k fᵀC_k}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.types import HIConfig
+
+
+class CalibratedDecision(NamedTuple):
+    offload: jnp.ndarray       # bool
+    pred: jnp.ndarray          # int32 — local prediction if not offloaded
+    expected_cost: jnp.ndarray  # float — Bayes expected per-round cost
+
+
+def optimal_thresholds(cfg: HIConfig, beta: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(θ_l*, θ_u*) of Theorem 1 (Eq. 7). Collapses (no offload region) when
+    β ≥ δ₁δ₋₁/(δ₁+δ₋₁), i.e. half the harmonic mean (Remark 1)."""
+    theta_l = beta / cfg.delta_fn
+    theta_u = 1.0 - beta / cfg.delta_fp
+    # When the region is empty the decision threshold is δ₁/(δ₁+δ₋₁) (Eq. 6).
+    split = cfg.delta_fp / (cfg.delta_fp + cfg.delta_fn)
+    empty = theta_l >= theta_u
+    theta_l = jnp.where(empty, split, theta_l)
+    theta_u = jnp.where(empty, split, theta_u)
+    return theta_l, theta_u
+
+
+def calibrated_rule(cfg: HIConfig, f: jnp.ndarray, beta: jnp.ndarray) -> CalibratedDecision:
+    """Apply Theorem 1 elementwise to confidences f."""
+    theta_l, theta_u = optimal_thresholds(cfg, beta)
+    offload = (theta_l <= f) & (f < theta_u)
+    split = cfg.delta_fp / (cfg.delta_fp + cfg.delta_fn)
+    pred = (f >= split).astype(jnp.int32)
+    exp_cost = jnp.minimum(beta, jnp.minimum(cfg.delta_fp * (1.0 - f), cfg.delta_fn * f))
+    return CalibratedDecision(offload=offload, pred=pred, expected_cost=exp_cost)
+
+
+def chow_rule(f: jnp.ndarray, beta: jnp.ndarray) -> CalibratedDecision:
+    """Chow's rule = Theorem 1 with δ₁ = δ₋₁ = 1 (Remark 1(ii))."""
+    cfg = HIConfig(delta_fp=1.0, delta_fn=1.0)
+    return calibrated_rule(cfg, f, beta)
+
+
+def multiclass_rule(
+    f: jnp.ndarray,          # (..., K) calibrated softmax
+    cost_matrix: jnp.ndarray,  # (K, K), C[i, j] = cost of true i predicted j, C[i,i]=0
+    beta: jnp.ndarray,
+) -> CalibratedDecision:
+    """Theorem 3: h* = argmin_k fᵀC_k, offload iff min_k fᵀC_k > β."""
+    # risks[..., j] = Σ_i f_i · C[i, j]
+    risks = jnp.einsum("...i,ij->...j", f, cost_matrix)
+    pred = jnp.argmin(risks, axis=-1).astype(jnp.int32)
+    min_risk = jnp.min(risks, axis=-1)
+    offload = min_risk > beta
+    exp_cost = jnp.minimum(beta, min_risk)
+    return CalibratedDecision(offload=offload, pred=pred, expected_cost=exp_cost)
+
+
+def multiclass_regions(
+    grid: jnp.ndarray,        # (N, K) softmax points on the simplex
+    cost_matrix: jnp.ndarray,
+    beta: float,
+) -> jnp.ndarray:
+    """Label each simplex point with its decision region: K for offload, else argmin.
+
+    Used by examples/multiclass_demo.py to reproduce the Fig. 5 region plot.
+    """
+    d = multiclass_rule(grid, cost_matrix, jnp.asarray(beta))
+    k = cost_matrix.shape[0]
+    return jnp.where(d.offload, k, d.pred)

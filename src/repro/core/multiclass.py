@@ -1,0 +1,115 @@
+"""BEYOND-PAPER: online multiclass HI policy (the paper's §6 open problem).
+
+The paper derives the calibrated K-class rule (Theorem 3: predict
+argmin_k fᵀC_k, offload iff min_k fᵀC_k > β) but leaves the *online,
+uncalibrated* case open, noting the expert space over (K−2)-simplex
+boundaries is combinatorial.
+
+Our compact parametrization: keep the cost-sensitive argmin as the local
+prediction (it only needs the model's softmax, no learning), and learn ONE
+scalar threshold τ on the *estimated risk* r(f) = min_k fᵀC_k — the quantity
+Theorem 3 thresholds at β for calibrated models. For uncalibrated models the
+optimal τ shifts away from β; a Hedge over a quantized τ-grid with the same
+ε-exploration / importance-weighted pseudo-loss machinery as H2T2 learns it
+with partial feedback. |Θ| = 2^b experts regardless of K — compact and
+scalable, trading the full boundary family for the risk-scale family (which
+contains Theorem 3's rule when calibrated, so the oracle is representable).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import HIConfig
+
+
+class MCState(NamedTuple):
+    log_w: jnp.ndarray     # (G+1,) weights over τ = k·r_max/G
+    t: jnp.ndarray
+    n_offloads: jnp.ndarray
+
+
+class MCStepOutput(NamedTuple):
+    offload: jnp.ndarray
+    pred: jnp.ndarray
+    loss: jnp.ndarray
+
+
+def mc_init(cfg: HIConfig) -> MCState:
+    zero = jnp.zeros((), jnp.int32)
+    return MCState(log_w=jnp.zeros(cfg.grid + 1, cfg.dtype), t=zero,
+                   n_offloads=zero)
+
+
+def _risk_and_pred(f: jnp.ndarray, cost: jnp.ndarray):
+    risks = f @ cost                               # (K,) risk of predicting k
+    return jnp.min(risks), jnp.argmin(risks).astype(jnp.int32)
+
+
+def mc_step(
+    cfg: HIConfig,
+    state: MCState,
+    f: jnp.ndarray,          # (K,) softmax vector
+    cost: jnp.ndarray,       # (K, K) cost matrix, C[i, j] = true i predicted j
+    beta: jnp.ndarray,
+    h_r: jnp.ndarray,        # remote label (used only when offloaded)
+    key: jax.Array,
+) -> Tuple[MCState, MCStepOutput]:
+    g = cfg.grid
+    r_max = jnp.max(cost)
+    taus = jnp.arange(g + 1, dtype=cfg.dtype) / g * r_max
+    risk, pred_local = _risk_and_pred(f, cost)
+    offload_mask = risk > taus                     # expert τ offloads iff r > τ
+
+    log_total = jax.nn.logsumexp(state.log_w)
+    q = jnp.exp(jax.nn.logsumexp(
+        jnp.where(offload_mask, state.log_w, -jnp.inf)) - log_total)
+
+    k_psi, k_zeta = jax.random.split(key)
+    psi = jax.random.uniform(k_psi)
+    zeta = jax.random.bernoulli(k_zeta, cfg.eps)
+    in_off = psi <= q
+    offload = in_off | zeta
+    explored = zeta & ~in_off
+
+    phi_local = cost[h_r, pred_local]
+    loss = jnp.where(offload, beta, phi_local)
+    pred = jnp.where(offload, h_r.astype(jnp.int32), pred_local)
+
+    lt = jnp.where(offload & offload_mask, beta, 0.0)
+    lt = lt + jnp.where(explored & ~offload_mask, phi_local / cfg.eps, 0.0)
+    log_w = cfg.decay * state.log_w - cfg.eta * lt
+    log_w = log_w - jnp.max(log_w)
+
+    return (MCState(log_w=log_w, t=state.t + 1,
+                    n_offloads=state.n_offloads + offload.astype(jnp.int32)),
+            MCStepOutput(offload=offload, pred=pred, loss=loss))
+
+
+def mc_run_stream(cfg: HIConfig, fs, cost, betas, hrs, key):
+    keys = jax.random.split(key, fs.shape[0])
+
+    def body(st, xs):
+        f, beta, hr, k = xs
+        return mc_step(cfg, st, f, cost, beta, hr, k)
+
+    return jax.lax.scan(body, mc_init(cfg), (fs, betas, hrs, keys))
+
+
+def mc_offline_best(cfg: HIConfig, fs, cost, betas, hrs) -> jnp.ndarray:
+    """Best fixed-τ cumulative loss (the comparator for regret)."""
+    g = cfg.grid
+    r_max = jnp.max(cost)
+    taus = jnp.arange(g + 1, dtype=fs.dtype) / g * r_max
+    risks = jnp.min(fs @ cost, axis=-1)                       # (T,)
+    preds = jnp.argmin(fs @ cost, axis=-1)
+    phi = cost[hrs, preds]
+    per = jnp.where(risks[None, :] > taus[:, None], betas[None, :], phi[None, :])
+    return jnp.min(jnp.sum(per, axis=-1))
+
+
+def mc_no_offload_loss(fs, cost, hrs) -> jnp.ndarray:
+    preds = jnp.argmin(fs @ cost, axis=-1)
+    return jnp.sum(cost[hrs, preds])

@@ -1,0 +1,136 @@
+"""Offline-optimal fixed-threshold policies (paper baselines θ† and θ⃗*).
+
+Given a full trace (f_t, h_r_t, β_t) these compute the exact cumulative loss of
+EVERY expert on the quantized grid in one vectorized pass, then argmin:
+
+  two-threshold  θ⃗* : experts (l, u), l ≤ u, loss Eq. (3)
+  single-threshold θ†: offload iff confidence max(f, 1−f) < θ, else argmax
+                       (the rule used by prior single-threshold HI works)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import quantize
+from repro.core.types import HIConfig
+
+
+class OfflineResult(NamedTuple):
+    best_loss: jnp.ndarray     # () cumulative loss of the best expert
+    best_expert: jnp.ndarray   # index/tuple of the argmin expert
+    losses: jnp.ndarray        # full expert-loss table
+
+
+def _phi(cfg: HIConfig, pred1: jnp.ndarray, h_r: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(
+        pred1,
+        jnp.where(h_r == 0, cfg.delta_fp, 0.0),
+        jnp.where(h_r == 1, cfg.delta_fn, 0.0),
+    )
+
+
+def two_threshold_losses(
+    cfg: HIConfig, fs: jnp.ndarray, hrs: jnp.ndarray, betas: jnp.ndarray
+) -> jnp.ndarray:
+    """(G, G) cumulative loss L_T(θ⃗) for every grid pair; +inf on invalid l > u."""
+    g = cfg.grid
+    i_f = quantize(fs, cfg.bits)                     # (T,)
+    l = jnp.arange(g)[:, None, None]                 # (G,1,1)
+    u = jnp.arange(g)[None, :, None]                 # (1,G,1)
+    i = i_f[None, None, :]                           # (1,1,T)
+    ambiguous = (l <= i) & (i < u)                   # (G,G,T)
+    pred1 = u <= i
+    phi = _phi(cfg, pred1, hrs[None, None, :])
+    per_round = jnp.where(ambiguous, betas[None, None, :], phi)
+    total = jnp.sum(per_round, axis=-1)
+    valid = jnp.arange(g)[:, None] <= jnp.arange(g)[None, :]
+    return jnp.where(valid, total, jnp.inf)
+
+
+def best_two_threshold(
+    cfg: HIConfig, fs: jnp.ndarray, hrs: jnp.ndarray, betas: jnp.ndarray
+) -> OfflineResult:
+    losses = two_threshold_losses(cfg, fs, hrs, betas)
+    flat = jnp.argmin(losses)
+    l_idx, u_idx = flat // cfg.grid, flat % cfg.grid
+    return OfflineResult(
+        best_loss=losses[l_idx, u_idx],
+        best_expert=jnp.stack([l_idx, u_idx]),
+        losses=losses,
+    )
+
+
+def single_threshold_losses(
+    cfg: HIConfig, fs: jnp.ndarray, hrs: jnp.ndarray, betas: jnp.ndarray
+) -> jnp.ndarray:
+    """(G+1,) cumulative loss of the single-threshold HI rule per threshold θ=k/G.
+
+    Rule (prior HI works): confidence c = max(f, 1−f); offload iff c < θ;
+    otherwise the local prediction is argmax, i.e. 1 iff f ≥ 0.5.
+    θ spans 0..1 inclusive (k = 0..G) so θ† can express both naive policies:
+    θ=0 → never offload, θ=1 → always offload (c < 1 a.s. for c below 1).
+    """
+    g = cfg.grid
+    conf = jnp.maximum(fs, 1.0 - fs)                 # (T,)
+    pred1 = fs >= 0.5
+    phi = _phi(cfg, pred1, hrs)
+    thetas = jnp.arange(g + 1, dtype=fs.dtype) / g   # (G+1,)
+    offload = conf[None, :] < thetas[:, None]        # (G+1, T)
+    per_round = jnp.where(offload, betas[None, :], phi[None, :])
+    return jnp.sum(per_round, axis=-1)
+
+
+def best_single_threshold(
+    cfg: HIConfig, fs: jnp.ndarray, hrs: jnp.ndarray, betas: jnp.ndarray
+) -> OfflineResult:
+    losses = single_threshold_losses(cfg, fs, hrs, betas)
+    k = jnp.argmin(losses)
+    return OfflineResult(best_loss=losses[k], best_expert=k, losses=losses)
+
+
+def fixed_pair_loss(
+    cfg: HIConfig,
+    l_idx: int,
+    u_idx: int,
+    fs: jnp.ndarray,
+    hrs: jnp.ndarray,
+    betas: jnp.ndarray,
+) -> jnp.ndarray:
+    """Cumulative loss of one fixed θ⃗ (used by regret evaluation)."""
+    i_f = quantize(fs, cfg.bits)
+    ambiguous = (l_idx <= i_f) & (i_f < u_idx)
+    pred1 = u_idx <= i_f
+    phi = _phi(cfg, pred1, hrs)
+    return jnp.sum(jnp.where(ambiguous, betas, phi))
+
+
+def fpr_fnr_cost_surface(
+    cfg: HIConfig, fs: jnp.ndarray, hrs: jnp.ndarray, beta: float
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-expert (FPR, FNR, avg cost) surfaces over the (l, u) grid — Fig. 2.
+
+    FPR/FNR here are fractions of all samples, matching Table 2's convention.
+    """
+    g = cfg.grid
+    i_f = quantize(fs, cfg.bits)
+    t = fs.shape[0]
+    l = jnp.arange(g)[:, None, None]
+    u = jnp.arange(g)[None, :, None]
+    i = i_f[None, None, :]
+    ambiguous = (l <= i) & (i < u)
+    pred1 = (u <= i) & ~ambiguous
+    pred0 = (i < l) & ~ambiguous
+    fp = jnp.sum(pred1 & (hrs[None, None, :] == 0), axis=-1) / t
+    fn = jnp.sum(pred0 & (hrs[None, None, :] == 1), axis=-1) / t
+    off = jnp.sum(ambiguous, axis=-1) / t
+    cost = cfg.delta_fp * fp + cfg.delta_fn * fn + beta * off
+    valid = jnp.arange(g)[:, None] <= jnp.arange(g)[None, :]
+    inf = jnp.inf
+    return (
+        jnp.where(valid, fp, inf),
+        jnp.where(valid, fn, inf),
+        jnp.where(valid, cost, inf),
+    )

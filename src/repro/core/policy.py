@@ -1,0 +1,203 @@
+"""H2T2 — HI-Hedge with Two Thresholds (paper Algorithm 1).
+
+Experts are threshold tuples θ⃗ = (θ_l, θ_u), θ ∈ {k/G : k = 0..G-1}, θ_l ≤ θ_u,
+held as a dense (G, G) log-weight matrix (row = l index, col = u index) with an
+upper-triangular validity mask. Confidences are quantized to i_f = ⌊f·G⌋ so that
+  region 1 (predict 0):  i_f <  l
+  region 2 (ambiguous):  l ≤ i_f < u   → offload
+  region 3 (predict 1):  u ≤ i_f
+Weights live in log-space; region masses use logsumexp for numerical stability
+over long horizons (w ← w·e^{-η·l̃} underflows in linear space by T ~ 1e4).
+
+Everything is jit/vmap friendly: `h2t2_step` is a pure function of (state, sample,
+key) and is vmapped over independent edge streams by the serving layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import HIConfig
+
+
+class H2T2State(NamedTuple):
+    log_w: jnp.ndarray      # (G, G) float — log expert weights; -inf on invalid cells
+    t: jnp.ndarray          # () int32 — rounds seen
+    n_offloads: jnp.ndarray  # () int32
+    n_explores: jnp.ndarray  # () int32
+
+
+class StepOutput(NamedTuple):
+    offload: jnp.ndarray      # () bool — was the sample offloaded
+    pred: jnp.ndarray         # () int32 — final inference (local or remote)
+    local_pred: jnp.ndarray   # () int32 — what the local decision would have been
+    loss: jnp.ndarray         # () float — incurred loss l_t (β_t if offloaded, φ_t else)
+    explored: jnp.ndarray     # () bool — E_t
+    q: jnp.ndarray            # () float — region-2 probability mass
+    p: jnp.ndarray            # () float — region-3 probability mass
+
+
+def _valid_mask(g: int, dtype=jnp.float32) -> jnp.ndarray:
+    l = jnp.arange(g)[:, None]
+    u = jnp.arange(g)[None, :]
+    return (l <= u)
+
+
+def h2t2_init(cfg: HIConfig) -> H2T2State:
+    g = cfg.grid
+    valid = _valid_mask(g)
+    log_w = jnp.where(valid, 0.0, -jnp.inf).astype(cfg.dtype)
+    zero = jnp.zeros((), jnp.int32)
+    return H2T2State(log_w=log_w, t=zero, n_offloads=zero, n_explores=zero)
+
+
+def quantize(f: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize confidence f ∈ [0, 1] to the grid index i_f = ⌊f·G⌋ ∈ {0..G-1}."""
+    g = 1 << bits
+    return jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
+
+
+def region_masks(i_f: jnp.ndarray, g: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Boolean masks (G, G) of experts in regions 1/2/3 for quantized conf i_f."""
+    l = jnp.arange(g)[:, None]
+    u = jnp.arange(g)[None, :]
+    valid = l <= u
+    r2 = valid & (l <= i_f) & (i_f < u)          # ambiguous → offload
+    r3 = valid & (u <= i_f)                       # predict 1
+    r1 = valid & (i_f < l)                        # predict 0
+    return r1, r2, r3
+
+
+def _masked_logsumexp(log_w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    masked = jnp.where(mask, log_w, -jnp.inf)
+    m = jnp.max(masked)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    s = jnp.sum(jnp.where(mask, jnp.exp(masked - m_safe), 0.0))
+    return jnp.where(s > 0, m_safe + jnp.log(s), -jnp.inf)
+
+
+def pseudo_loss(
+    cfg: HIConfig,
+    i_f: jnp.ndarray,
+    offloaded: jnp.ndarray,
+    explored: jnp.ndarray,
+    h_r: jnp.ndarray,
+    beta: jnp.ndarray,
+) -> jnp.ndarray:
+    """Unbiased pseudo-loss l̃_t(θ⃗) for every expert (paper Eq. 10).
+
+    Feedback (h_r) is only available when the sample was offloaded (O_t = 1):
+      l̃ = β_t          if O_t = 1 and the expert is ambiguous at i_f,
+      l̃ = φ_t(θ⃗)/ε    if E_t = 1 and the expert is unambiguous at i_f,
+      l̃ = 0            otherwise.
+    φ_t(θ⃗) is the misclassification cost the *expert's own* local prediction
+    would incur against the remote label h_r.
+    """
+    g = cfg.grid
+    _, r2, r3 = region_masks(i_f, g)
+    # Expert-local prediction: 1 in region 3, 0 in region 1 (region 2 offloads).
+    pred1 = r3
+    phi = jnp.where(
+        pred1, jnp.where(h_r == 0, cfg.delta_fp, 0.0),
+        jnp.where(h_r == 1, cfg.delta_fn, 0.0),
+    )
+    amb_term = jnp.where(offloaded & r2, beta, 0.0)
+    una_term = jnp.where(explored & ~r2, phi / cfg.eps, 0.0)
+    return amb_term + una_term
+
+
+def h2t2_step(
+    cfg: HIConfig,
+    state: H2T2State,
+    f: jnp.ndarray,
+    beta: jnp.ndarray,
+    h_r: jnp.ndarray,
+    key: jax.Array,
+) -> Tuple[H2T2State, StepOutput]:
+    """One round of Algorithm 1.
+
+    `h_r` is the remote model's label for this sample; the policy only *uses* it
+    when the sample is offloaded (masked) — passing it unconditionally keeps the
+    step jit-able. The returned loss charges β_t on offload and φ_t otherwise.
+    """
+    g = cfg.grid
+    i_f = quantize(f, cfg.bits)
+    r1, r2, r3 = region_masks(i_f, g)
+
+    log_total = _masked_logsumexp(state.log_w, r1 | r2 | r3)
+    q = jnp.exp(_masked_logsumexp(state.log_w, r2) - log_total)   # P(region 2)
+    p = jnp.exp(_masked_logsumexp(state.log_w, r3) - log_total)   # P(region 3)
+
+    k_psi, k_zeta = jax.random.split(key)
+    psi = jax.random.uniform(k_psi)
+    zeta = jax.random.bernoulli(k_zeta, cfg.eps)
+
+    in_region2 = psi <= q
+    offload = in_region2 | zeta
+    explored = zeta & ~in_region2                                  # E_t
+    local_pred = jnp.where(psi <= q + p, 1, 0).astype(jnp.int32)   # Alg. 1 l.17-20
+
+    # Incurred loss l_t: offload pays β_t; local decision pays φ_t vs h_r proxy.
+    phi_local = jnp.where(
+        local_pred == 1,
+        jnp.where(h_r == 0, cfg.delta_fp, 0.0),
+        jnp.where(h_r == 1, cfg.delta_fn, 0.0),
+    )
+    loss = jnp.where(offload, beta, phi_local)
+    pred = jnp.where(offload, h_r.astype(jnp.int32), local_pred)
+
+    lt = pseudo_loss(cfg, i_f, offload, explored, h_r, beta)
+    # decay < 1 = discounted Hedge (beyond-paper): geometric forgetting of
+    # accumulated losses, for non-stationary streams. decay = 1 is Alg. 1.
+    log_w = cfg.decay * state.log_w - cfg.eta * lt
+    # Periodic renormalization keeps log-weights in float range on long horizons.
+    log_w = log_w - jnp.max(jnp.where(jnp.isfinite(log_w), log_w, -jnp.inf))
+
+    new_state = H2T2State(
+        log_w=log_w,
+        t=state.t + 1,
+        n_offloads=state.n_offloads + offload.astype(jnp.int32),
+        n_explores=state.n_explores + explored.astype(jnp.int32),
+    )
+    return new_state, StepOutput(
+        offload=offload, pred=pred, local_pred=local_pred, loss=loss,
+        explored=explored, q=q, p=p,
+    )
+
+
+def run_stream(
+    cfg: HIConfig,
+    fs: jnp.ndarray,
+    hrs: jnp.ndarray,
+    betas: jnp.ndarray,
+    key: jax.Array,
+    state: Optional[H2T2State] = None,
+) -> Tuple[H2T2State, StepOutput]:
+    """Run H2T2 over a whole (f_t, h_r, β_t) trace with lax.scan.
+
+    Returns the final state and the stacked per-round StepOutput.
+    """
+    if state is None:
+        state = h2t2_init(cfg)
+    keys = jax.random.split(key, fs.shape[0])
+
+    def body(st, xs):
+        f, hr, beta, k = xs
+        st, out = h2t2_step(cfg, st, f, beta, hr, k)
+        return st, out
+
+    return jax.lax.scan(body, state, (fs, hrs, betas, keys))
+
+
+def run_fleet(
+    cfg: HIConfig,
+    fs: jnp.ndarray,       # (S, T)
+    hrs: jnp.ndarray,      # (S, T)
+    betas: jnp.ndarray,    # (S, T)
+    key: jax.Array,
+) -> Tuple[H2T2State, StepOutput]:
+    """vmap `run_stream` over S independent edge streams."""
+    keys = jax.random.split(key, fs.shape[0])
+    return jax.vmap(lambda f, h, b, k: run_stream(cfg, f, h, b, k))(fs, hrs, betas, keys)

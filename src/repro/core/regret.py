@@ -1,0 +1,57 @@
+"""Regret utilities: Corollary 1 parameters, empirical regret, slope fits."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import offline, policy
+from repro.core.types import HIConfig
+
+
+def corollary1_params(cfg: HIConfig, horizon: int) -> Tuple[float, float]:
+    """(ε*, η*) minimizing the Theorem-2 bound: ε* = (ln|Θ|/2β²T)^{1/3},
+    η* = sqrt(2 ε* ln|Θ| / T)."""
+    n = cfg.n_experts
+    beta = max(cfg.beta_max, 1e-6)
+    eps = (math.log(n) / (2.0 * beta * beta * horizon)) ** (1.0 / 3.0)
+    eps = min(max(eps, 1e-4), 1.0)
+    eta = math.sqrt(2.0 * eps * math.log(n) / horizon)
+    return eps, eta
+
+
+def theorem2_bound(cfg: HIConfig, horizon: int) -> float:
+    """R_T ≤ (εβ + η/2ε)·T + ln|Θ|/η."""
+    return (
+        (cfg.eps * cfg.beta_max + cfg.eta / (2.0 * cfg.eps)) * horizon
+        + math.log(cfg.n_experts) / cfg.eta
+    )
+
+
+def empirical_regret(
+    cfg: HIConfig,
+    fs: jnp.ndarray,
+    hrs: jnp.ndarray,
+    betas: jnp.ndarray,
+    key: jax.Array,
+    n_seeds: int = 8,
+) -> Dict[str, float]:
+    """Mean cumulative H2T2 loss over seeds minus the offline best fixed θ⃗."""
+    keys = jax.random.split(key, n_seeds)
+    _, outs = jax.vmap(lambda k: policy.run_stream(cfg, fs, hrs, betas, k))(keys)
+    algo = float(jnp.mean(jnp.sum(outs.loss, axis=-1)))
+    best = float(offline.best_two_threshold(cfg, fs, hrs, betas).best_loss)
+    return {"algo_loss": algo, "best_fixed_loss": best, "regret": algo - best}
+
+
+def regret_slope(
+    horizons: Sequence[int], regrets: Sequence[float]
+) -> float:
+    """Fit log R_T = a + s·log T, return slope s (sublinear ⇔ s < 1; theory 2/3)."""
+    h = np.asarray(horizons, dtype=np.float64)
+    r = np.maximum(np.asarray(regrets, dtype=np.float64), 1e-9)
+    s, _ = np.polyfit(np.log(h), np.log(r), 1)
+    return float(s)

@@ -1,0 +1,79 @@
+"""Shared config/state dataclasses for the HI policy layer.
+
+Notation follows the paper:
+  f_t        LDL confidence for class 1 (softmax), quantized to b bits.
+  delta_fp   δ₁   — normalized false-positive cost.
+  delta_fn   δ₋₁  — normalized false-negative cost.
+  beta_t     β_t  — normalized offloading cost (β_t ≤ β ≤ 1).
+  Θ          expert grid {(θ_l, θ_u) : θ_l ≤ θ_u}, θ ∈ {k/G}, G = 2^b.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HIConfig:
+    """Static configuration of the cost-sensitive HI problem + H2T2 knobs."""
+
+    bits: int = 4                 # confidence quantization b; grid side G = 2^b
+    delta_fp: float = 0.7         # δ₁
+    delta_fn: float = 1.0         # δ₋₁
+    beta_max: float = 1.0         # β — upper bound used in Corollary 1
+    eps: float = 0.05             # ε exploration probability
+    eta: float = 1.0              # η learning rate (paper's §5 default)
+    # BEYOND-PAPER: discount factor on accumulated log-weights (1.0 = paper's
+    # H2T2). γ < 1 geometrically forgets old losses — discounted Hedge — which
+    # re-adapts faster after distribution shift (see bench_drift).
+    decay: float = 1.0
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def grid(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def n_experts(self) -> int:
+        g = self.grid
+        return g * (g + 1) // 2   # = 2^{b-1}(2^b + 1)
+
+    def with_horizon(self, horizon: int) -> "HIConfig":
+        """Return a copy with the regret-minimizing ε*, η* of Corollary 1."""
+        import math
+
+        n = self.n_experts
+        beta = max(self.beta_max, 1e-6)
+        eps = (math.log(n) / (2.0 * beta * beta * horizon)) ** (1.0 / 3.0)
+        eps = min(max(eps, 1e-4), 1.0)
+        eta = math.sqrt(2.0 * eps * math.log(n) / horizon)
+        return dataclasses.replace(self, eps=eps, eta=eta)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """A simulated (f_t, h_r) stream calibrated to a dataset/model pair.
+
+    accuracy/fp/fn are fractions of ALL samples (paper Table 2/3 convention:
+    accuracy + fp + fn = 1). p1 is the class-1 prior under the RDL proxy labels.
+    """
+
+    name: str
+    accuracy: float
+    fp: float
+    fn: float
+    p1: float = 0.5
+    sigma1: float = 0.25          # confidence spread for h_r = 1 samples
+    sigma0: float = 0.25          # confidence spread for h_r = 0 samples
+    note: str = ""
+
+    def __post_init__(self):
+        total = self.accuracy + self.fp + self.fn
+        # The paper's tables round to whole percent (e.g. ResnetDogs 73+15+11=99),
+        # so allow rounding slack.
+        if abs(total - 1.0) > 0.02:
+            raise ValueError(f"{self.name}: accuracy+fp+fn must equal 1, got {total}")
+        if not (self.fn < self.p1 < 1.0 - 1e-9 + self.p1):
+            pass  # p1 sanity is enforced by the calibration solver

@@ -1,0 +1,15 @@
+from repro.data.datasets import DATASETS, calibrate, get_spec
+from repro.data.streams import (
+    Trace,
+    dataset_trace,
+    drift_trace,
+    empirical_confusion,
+    sample_trace,
+)
+from repro.data.tokens import Batch, batch_iterator, classification_batch, synthetic_batch
+
+__all__ = [
+    "DATASETS", "calibrate", "get_spec",
+    "Trace", "dataset_trace", "drift_trace", "empirical_confusion", "sample_trace",
+    "Batch", "batch_iterator", "classification_batch", "synthetic_batch",
+]

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret mode
+# on CPU, targeted at TPU v5e):
+#   hedge           — fused H2T2 fleet step (the paper's core loop)
+#   flash_attention — blockwise causal/windowed GQA attention
+#   ssd             — Mamba2 state-space-duality chunk scan
+from repro.kernels.hedge import ops as hedge_ops
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.ssd import ops as ssd_ops
+
+__all__ = ["hedge_ops", "flash_ops", "ssd_ops"]

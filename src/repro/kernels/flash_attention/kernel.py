@@ -1,0 +1,144 @@
+"""Blockwise (flash) attention Pallas kernel: causal GQA with optional
+sliding window.
+
+TPU adaptation: q/k tiles are MXU-aligned (block_q × head_dim, block_k ×
+head_dim, head_dim a multiple of 128 preferred); the online-softmax running
+max/sum live in VMEM scratch; the KV loop is the innermost grid dimension so
+the accumulator persists across KV steps. Fully-masked KV blocks (beyond the
+causal frontier or the sliding window) are skipped via `pl.when`.
+
+Grid: (batch, q_heads, Sq/block_q, Sk/block_k).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,                 # (bq, d), (bk, d), (bk, d)
+    o_ref,                                # (bq, d)
+    m_scr, l_scr, acc_scr,                # scratch: (bq, 1), (bq, 1), (bq, d)
+    *, scale: float, causal: bool, window, block_q: int, block_k: int,
+    seq_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_scr[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v_ref[0, 0].astype(jnp.float32)
+        m_scr[...] = m_new
+
+    if causal or window is not None:
+        # Skip blocks that are fully masked.
+        q_end = q_start + block_q - 1
+        visible = True
+        if causal:
+            visible = k_start <= q_end
+        if window is not None:
+            visible = visible & (k_start + block_k - 1 > q_start - window)
+
+        @pl.when(visible)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-38)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,          # (B, Sq, H, D)
+    k: jnp.ndarray,          # (B, Sk, Hkv, D)
+    v: jnp.ndarray,          # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    groups = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sq_pad = math.ceil(sq / block_q) * block_q
+    sk_pad = math.ceil(sk / block_k) * block_k
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+
+    # Layout (B, H, S, D) so blocks are contiguous per (batch, head).
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, sq_pad // block_q, sk_pad // block_k)
+    kern = functools.partial(
+        _attn_kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_k=sk)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            # q head h uses kv head h % hkv (matches models.attention._sdpa's
+            # (g, hkv) reshape convention).
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, n=hkv: (bi, hi % n, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, n=hkv: (bi, hi % n, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :sq, :, :]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: exact softmax attention with GQA + causal/window masks."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,          # (B, Sq, H, D)
+    k: jnp.ndarray,          # (B, Sk, Hkv, D)
+    v: jnp.ndarray,          # (B, Sk, Hkv, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, g, hkv, d)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqgkd,bskd->bgkqs", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bgkqs,bskd->bqgkd", probs, v)
+    return ctx.reshape(b, sq, h, d)

@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the fused hedge kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import HIConfig
+from repro.kernels.hedge.kernel import hedge_step_pallas
+from repro.kernels.hedge.ref import hedge_step_ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret"))
+def fleet_hedge_step(
+    cfg: HIConfig,
+    log_w: jnp.ndarray,      # (S, G, G)
+    f: jnp.ndarray,          # (S,) confidences in [0, 1]
+    psi: jnp.ndarray,        # (S,) uniforms
+    zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws
+    h_r: jnp.ndarray,        # (S,) remote labels
+    beta: jnp.ndarray,       # (S,) offload costs
+    use_kernel: bool = True,
+    interpret: bool = None,
+):
+    """One H2T2 round for a whole fleet of streams."""
+    g = cfg.grid
+    i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
+    kw = dict(eta=cfg.eta, eps=cfg.eps, delta_fp=cfg.delta_fp, delta_fn=cfg.delta_fn)
+    if use_kernel:
+        interp = _interpret_default() if interpret is None else interpret
+        return hedge_step_pallas(
+            log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+            zeta.astype(jnp.int32), h_r.astype(jnp.int32),
+            beta.astype(jnp.float32), interpret=interp, **kw)
+    return hedge_step_ref(
+        log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+        zeta.astype(jnp.int32), h_r.astype(jnp.int32),
+        beta.astype(jnp.float32), **kw)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the fused hedge step (mirrors repro.core.policy with
+externally supplied randomness)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def hedge_step_ref(
+    log_w: jnp.ndarray, i_f: jnp.ndarray, psi: jnp.ndarray, zeta: jnp.ndarray,
+    h_r: jnp.ndarray, beta: jnp.ndarray,
+    *, eta: float, eps: float, delta_fp: float, delta_fn: float,
+):
+    s, g, _ = log_w.shape
+    l_idx = jnp.arange(g)[None, :, None]
+    u_idx = jnp.arange(g)[None, None, :]
+    valid = l_idx <= u_idx
+    i_b = i_f[:, None, None]
+    r2 = valid & (l_idx <= i_b) & (i_b < u_idx)
+    r3 = valid & (u_idx <= i_b)
+
+    def logsum(mask):
+        masked = jnp.where(mask, log_w, NEG)
+        m = jnp.maximum(jnp.max(masked, axis=(-2, -1), keepdims=True), NEG)
+        ssum = jnp.sum(jnp.where(mask, jnp.exp(masked - m), 0.0), axis=(-2, -1))
+        return m[..., 0, 0] + jnp.log(jnp.maximum(ssum, 1e-38))
+
+    log_tot = logsum(valid)
+    q = jnp.exp(logsum(r2) - log_tot)
+    p = jnp.exp(logsum(r3) - log_tot)
+    in_r2 = psi <= q
+    offload = in_r2 | (zeta != 0)
+    explored = (zeta != 0) & ~in_r2
+    local_pred = (psi <= q + p).astype(jnp.int32)
+
+    phi = jnp.where(r3,
+                    jnp.where(h_r[:, None, None] == 0, delta_fp, 0.0),
+                    jnp.where(h_r[:, None, None] == 1, delta_fn, 0.0))
+    lt = jnp.where(offload[:, None, None] & r2, beta[:, None, None], 0.0)
+    lt = lt + jnp.where(explored[:, None, None] & valid & ~r2, phi / eps, 0.0)
+    new = log_w - eta * lt
+    new_max = jnp.max(jnp.where(valid, new, NEG), axis=(-2, -1), keepdims=True)
+    new = jnp.where(valid, new - new_max, NEG)
+    return (new.astype(jnp.float32), offload.astype(jnp.int32),
+            explored.astype(jnp.int32), local_pred,
+            q.astype(jnp.float32), p.astype(jnp.float32))

@@ -1,0 +1,122 @@
+"""Mamba2 SSD chunk-scan Pallas kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): the sequential
+recurrence over chunks becomes the innermost grid dimension with the SSM
+state (P × N) carried in VMEM scratch; the within-chunk quadratic part
+(C·Bᵀ ⊙ decay) runs on the MXU per (batch·head, chunk) tile.
+
+Grid: (B·H, S/chunk). Blocks per program: x (chunk, P), dt/decays (chunk,),
+b/c (chunk, N). VMEM ≈ chunk·(P+2N)·4 B + P·N·4 B.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,      # (1, chunk, P)
+    dt_ref,     # (1, chunk)
+    dlog_ref,   # (1, chunk)  — per-step log decay (−dt·a), precomputed
+    b_ref,      # (1, chunk, N)
+    c_ref,      # (1, chunk, N)
+    y_ref,      # (1, chunk, P)
+    state_ref,  # (1, P, N) — final state output (written on last chunk)
+    state_scr,  # VMEM scratch (P, N)
+    *, chunk: int,
+):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    dlog = dlog_ref[0].astype(jnp.float32)    # (Q,)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    cum = jnp.cumsum(dlog)                    # (Q,)
+    # Within-chunk quadratic term.
+    li = cum[:, None]
+    lj = cum[None, :]
+    seg = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    seg = jnp.where(causal, seg, 0.0)
+    scores = (c @ b.T) * seg                  # (Q, Q)
+    y = (scores * dt[None, :]) @ x            # (Q, P)
+
+    # Entering-state contribution: y += (C_q · state) · exp(cum_q)
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))
+    st = state_scr[...]                       # (P, N)
+    y = y + (c @ st.T) * decay_in[:, None]
+
+    # State update: state ← state·exp(cum_Q) + Σ_j exp(cum_Q−cum_j)·dt_j·x_j⊗B_j
+    decay_to_end = jnp.exp(jnp.clip(cum[-1] - cum, -60.0, 0.0))
+    weighted_x = x * (dt * decay_to_end)[:, None]   # (Q, P)
+    new_state = st * jnp.exp(jnp.clip(cum[-1], -60.0, 0.0)) + weighted_x.T @ b
+    state_scr[...] = new_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_ref[0] = state_scr[...].astype(state_ref.dtype)
+
+
+def ssd_pallas(
+    x: jnp.ndarray,       # (B, S, H, P)
+    dt: jnp.ndarray,      # (B, S, H) — post-softplus
+    a: jnp.ndarray,       # (H,) positive decay rates
+    b: jnp.ndarray,       # (B, S, G, N)
+    c: jnp.ndarray,       # (B, S, G, N)
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    # Flatten (B, H) into the leading grid dim; broadcast groups to heads.
+    xt = x.transpose(0, 2, 1, 3).reshape(bs * h, s, p)
+    dtt = dt.transpose(0, 2, 1).reshape(bs * h, s)
+    dlog = (-dt * a[None, None, :]).transpose(0, 2, 1).reshape(bs * h, s)
+    bh = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3).reshape(bs * h, s, n)
+    ch = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3).reshape(bs * h, s, n)
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kern,
+        grid=(bs * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, p, n), lambda i, j: (i, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bs * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bs * h, p, n), x.dtype),
+        ),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, dlog, bh, ch)
+    y = y.reshape(bs, h, s, p).transpose(0, 2, 1, 3)
+    state = state.reshape(bs, h, p, n)
+    return y, state

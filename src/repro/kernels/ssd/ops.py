@@ -1,0 +1,23 @@
+"""jit'd wrapper for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+    c: jnp.ndarray, chunk: int = 128, initial_state=None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if initial_state is not None:
+        raise NotImplementedError("kernel path starts from zero state; "
+                                  "use ssd_reference for seeded scans")
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    return ssd_pallas(x, dt, a, b, c, chunk=chunk, interpret=interp)

@@ -1,0 +1,35 @@
+"""Oracle for the SSD kernel: the models.ssm chunked reference (itself
+validated against the sequential recurrence in tests)."""
+from repro.models.ssm import ssd_reference
+
+
+def ssd_ref(x, dt, a, b, c, chunk=128, initial_state=None):
+    return ssd_reference(x, dt, a, b, c, chunk=chunk, initial_state=initial_state)
+
+
+def ssd_sequential(x, dt, a, b, c):
+    """Exact step-by-step recurrence h ← e^{−dt·a} h + dt·x⊗B; y = C·h."""
+    import jax
+    import jax.numpy as jnp
+
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(-dtt * a[None, :])[..., None, None]   # (B,H,1,1)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, bt)
+        state = state * decay + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((bs, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          ch.transpose(1, 0, 2, 3).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,157 @@
+"""Step builders shared by dryrun / train / serve: assemble (fn, arg specs,
+in_shardings) for a given (arch × shape × mesh × strategy)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, InputShape
+from repro.launch import sharding, specs as spec_lib
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    prefill,
+)
+from repro.models.transformer import RunFlags
+from repro.training import AdamWConfig, TrainState, build_train_step, init_opt_state
+from repro.utils import activation_sharding
+
+
+def model_flags(cfg: ModelConfig, shape: InputShape, mode: str,
+                unroll_chunks: bool = False) -> RunFlags:
+    attn_impl = "chunked" if shape.seq_len * shape.global_batch >= 2**20 else "naive"
+    return RunFlags(
+        mode=mode,
+        window=spec_lib.decode_window(cfg, shape) if mode == "decode" else None,
+        attn_impl=attn_impl if mode != "decode" else "naive",
+        attn_chunk=2048,
+        unroll_chunks=unroll_chunks,
+        remat=(mode == "train"),
+    )
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def default_microbatches(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> int:
+    """Grad-accum factor for train shapes: target ≤ 4 sequences per device per
+    microbatch for small models, ≤ 1 for d_model ≥ 4096 (33B-class activation
+    slabs are ~4× larger per sequence)."""
+    dsize = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_dev = max(1, shape.global_batch // dsize)
+    target = 1 if cfg.d_model >= 4096 else 4
+    m = max(1, per_dev // target)
+    while shape.global_batch % m:
+        m -= 1
+    return m
+
+
+def default_strategy(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> str:
+    """Inference shapes use pure tensor-parallel params when a 1/msize shard
+    of the TOTAL (stored, all-experts) weights fits comfortably in HBM: 2D
+    (ZeRO-flavored) storage only buys memory that inference doesn't need,
+    while paying a per-layer weight all-gather over 'data' (measured
+    ~1 GiB/layer on deepseek-coder decode_32k)."""
+    from repro.models.model import total_param_count
+
+    if shape.kind == "train":
+        return "2d"
+    msize = mesh.shape.get("model", 1)
+    per_dev = 2 * total_param_count(cfg) / msize           # bf16 bytes
+    return "tp" if per_dev < 6 * 2**30 else "2d"
+
+
+def build_dryrun_step(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh: Mesh,
+    strategy: str = "auto",
+    unroll: bool = False,
+    microbatches: Optional[int] = None,
+) -> Tuple[Any, Tuple, Any]:
+    """Returns (fn, abstract args, in_shardings) for lower()."""
+    if strategy == "auto":
+        strategy = default_strategy(cfg, shape, mesh)
+    mode = shape.kind
+    flags = model_flags(cfg, shape, "prefill" if mode == "prefill" else mode,
+                        unroll_chunks=unroll)
+    p_shapes = abstract_params(cfg)
+    p_specs = sharding.param_specs(p_shapes, mesh, strategy)
+    p_shard = sharding.to_named(p_specs, mesh)
+    logical = sharding.logical_axis_map(mesh)
+
+    if mode == "train":
+        batch_specs = spec_lib.train_input_specs(cfg, shape)
+        opt_shapes = jax.eval_shape(init_opt_state, p_shapes)
+        state_shapes = TrainState(params=p_shapes, opt=opt_shapes)
+        mv_specs = sharding.opt_state_specs(p_specs, p_shapes, mesh)
+        mv_shard = sharding.to_named(mv_specs, mesh)
+        opt_shard = type(opt_shapes)(
+            m=mv_shard, v=mv_shard,
+            step=NamedSharding(mesh, P()))
+        state_shard = TrainState(params=p_shard, opt=opt_shard)
+        b_shard = {
+            k: NamedSharding(
+                mesh, sharding.batch_spec(mesh, shape.global_batch,
+                                          extra_dims=len(v.shape) - 1))
+            for k, v in batch_specs.items()
+        }
+        mb = (default_microbatches(cfg, shape, mesh)
+              if microbatches is None else microbatches)
+        step = build_train_step(cfg, AdamWConfig(), flags=flags, unroll=unroll,
+                                microbatches=mb)
+
+        def fn(state, batch):
+            with activation_sharding(mesh, logical):
+                return step(state, batch)
+
+        return fn, (state_shapes, batch_specs), (state_shard, b_shard)
+
+    if mode == "prefill":
+        batch_specs = spec_lib.prefill_input_specs(cfg, shape)
+        b_shard = {
+            k: NamedSharding(
+                mesh, sharding.batch_spec(mesh, shape.global_batch,
+                                          extra_dims=len(v.shape) - 1))
+            for k, v in batch_specs.items()
+        }
+
+        def fn(params, batch):
+            with activation_sharding(mesh, logical):
+                return prefill(params, cfg, batch, flags=flags, unroll=unroll)
+
+        return fn, (p_shapes, batch_specs), (p_shard, b_shard)
+
+    # decode
+    capacity = spec_lib.decode_capacity(cfg, shape)
+    state_shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, capacity))
+    c_specs = sharding.cache_specs(state_shapes, mesh, shape.global_batch)
+    c_shard = sharding.to_named(c_specs, mesh)
+    tok = spec_lib.decode_token_spec(cfg, shape)
+    t_shard = NamedSharding(mesh, sharding.batch_spec(mesh, shape.global_batch))
+    dflags = model_flags(cfg, shape, "decode")
+
+    def fn(params, state, token):
+        with activation_sharding(mesh, logical):
+            return decode_step(params, cfg, state, token, flags=dflags,
+                               unroll=unroll)
+
+    return fn, (p_shapes, state_shapes, tok), (p_shard, c_shard, t_shard)
+
+
+def override_groups(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Depth-reduced config with exactly k scanned groups (lead/tail kept) —
+    used by the roofline delta method."""
+    p = len(cfg.pattern)
+    tail = (cfg.n_layers - cfg.n_dense_layers) % p
+    n_layers = cfg.n_dense_layers + k * p + tail
+    return dataclasses.replace(cfg, n_layers=n_layers)

@@ -1,0 +1,89 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run entry point.
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers and compiles.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh single [--roofline] [--strategy 2d]
+
+Emits one JSON object: memory analysis (bytes/device), cost analysis
+(FLOPs/bytes), collective schedule summary, and — with --roofline — the
+three-term roofline via the delta method (see launch/roofline.py).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPES, get_config, get_shape
+from repro.launch import builders, roofline as roofline_lib
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str,
+            do_roofline: bool, unroll: bool) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "strategy": strategy, "mode": shape.kind,
+        "n_devices": int(mesh.size),
+    }
+    try:
+        meas = roofline_lib.compile_and_measure(
+            cfg, shape, mesh, strategy=strategy, unroll=unroll)
+        result["ok"] = True
+        result["compile_seconds"] = round(time.time() - t0, 1)
+        result["memory"] = meas["memory"]
+        result["fits_hbm"] = meas["memory"]["peak_bytes"] <= HBM_BYTES
+        result["cost_analysis"] = {"flops": meas["flops"], "bytes": meas["bytes"]}
+        result["collectives_fulldepth"] = meas["collective"]
+        if do_roofline:
+            t1 = time.time()
+            result["roofline"] = roofline_lib.roofline(
+                cfg, shape, mesh, strategy=strategy,
+                full_depth_memory=meas["memory"])
+            result["roofline_seconds"] = round(time.time() - t1, 1)
+    except Exception as e:  # noqa: BLE001 — a dry-run failure IS the finding
+        result["ok"] = False
+        result["error"] = f"{type(e).__name__}: {e}"[:500]
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {ASSIGNED} (or 'all')")
+    ap.add_argument("--shape", default="all", choices=[*SHAPES, "all"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default="auto", choices=["auto", "2d", "tp", "fsdp"])
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the layer scan in the full-depth compile")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    ok = True
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                res = run_one(arch, shape, mesh_kind, args.strategy,
+                              args.roofline, args.unroll)
+                print(json.dumps(res))
+                sys.stdout.flush()
+                ok &= res["ok"]
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

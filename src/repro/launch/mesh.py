@@ -1,0 +1,34 @@
+"""Production meshes for TPU v5e pods.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(jax locks the device count on first backend init — dryrun.py must set
+XLA_FLAGS before any jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (CPU tests / examples)."""
+    n = jax.device_count()
+    model = min(model, n)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s per link (~4 links usable per chip)
+HBM_BYTES = 16 * 2**30            # 16 GiB

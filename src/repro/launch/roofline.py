@@ -1,0 +1,175 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds (per step):
+
+    compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_per_device / 819 GB/s
+    collective = collective_payload_bytes_per_device / 50 GB/s (one ICI link)
+
+Sources: `compiled.cost_analysis()` (flops / bytes accessed, per device) and
+the optimized HLO text for collectives. Two corrections:
+
+  * XLA does NOT multiply costs through `while` loops (verified: a 62-layer
+    scan reports one body's FLOPs). We therefore lower depth-1 and depth-2
+    UNROLLED variants of the model and extrapolate:
+        body = c(2) − c(1);  total = c(1) + (G − 1) · body
+    which is exact for a homogeneous scanned stack.
+  * Collective payloads use the largest shape printed on each collective op
+    line (shard-local shapes post-SPMD); all-reduce is weighted 2× (ring
+    sends reduce + broadcast passes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ModelConfig, InputShape
+from repro.launch import builders
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+}
+_SHAPE_RE = re.compile(r"(pred|s8|u8|bf16|f16|s16|u16|f32|s32|u32|f64|s64|u64)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind payload bytes summed over collective ops in the HLO."""
+    out = {k: 0.0 for k in _COLL_KINDS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # Match result-assignment lines: "%x = TYPE[...] kind(...)".
+        m = re.match(r"%?[\w.\-]+\s*=\s*(?:\()?\s*(?:pred|s8|u8|bf16|f16|s16|u16|f32|s32|u32|f64|s64|u64|tuple)", stripped)
+        if m is None:
+            continue
+        kind = None
+        for k in _COLL_KINDS:
+            if f" {k}(" in stripped or f"= {k}(" in stripped or f"{k}-start(" in stripped:
+                kind = k
+                break
+        if kind is None:
+            continue
+        shapes = _SHAPE_RE.findall(stripped)
+        if not shapes:
+            continue
+        payload = max(_shape_bytes(d, s) for d, s in shapes)
+        weight = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += weight * payload
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+def compile_and_measure(
+    cfg: ModelConfig, shape: InputShape, mesh, strategy: str = "2d",
+    unroll: bool = False, microbatches=None,
+) -> Dict[str, Any]:
+    fn, args, shard = builders.build_dryrun_step(
+        cfg, shape, mesh, strategy=strategy, unroll=unroll,
+        microbatches=microbatches)
+    # Decode donates the cache state (arg 1): in-place ring updates instead of
+    # a double-buffered copy of the whole KV cache per step.
+    donate = (1,) if shape.kind == "decode" else ()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shard,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective": coll,
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(ma, "argument_size_in_bytes", 0)
+                           + getattr(ma, "output_size_in_bytes", 0)
+                           + getattr(ma, "temp_size_in_bytes", 0)),
+        },
+    }
+
+
+def _combine(c1: Dict, c2: Dict, groups: int) -> Dict[str, Any]:
+    """total = c1 + (G−1)·(c2 − c1), elementwise on cost fields."""
+    def extrap(a, b):
+        return a + (groups - 1) * (b - a)
+
+    coll = {}
+    for k in list(c1["collective"].keys()):
+        coll[k] = extrap(c1["collective"][k], c2["collective"][k])
+    return {
+        "flops": extrap(c1["flops"], c2["flops"]),
+        "bytes": extrap(c1["bytes"], c2["bytes"]),
+        "collective": coll,
+    }
+
+
+def roofline(
+    cfg: ModelConfig, shape: InputShape, mesh, strategy: str = "2d",
+    full_depth_memory: Optional[Dict] = None,
+) -> Dict[str, Any]:
+    """Delta-method roofline: exact per-layer costs from unrolled depth-1/2
+    lowers, extrapolated to the full depth."""
+    from repro.models.model import active_param_count
+
+    # microbatches=1 so the grad-accum scan (another while loop XLA would
+    # count once) doesn't hide FLOPs: one full-batch pass ≡ the summed
+    # microbatch passes. Collective bytes consequently count the gradient
+    # all-reduce once per step (the accumulate-then-reduce schedule).
+    plan_groups = (cfg.n_layers - cfg.n_dense_layers) // len(cfg.pattern)
+    c1 = compile_and_measure(builders.override_groups(cfg, 1), shape, mesh,
+                             strategy, unroll=True, microbatches=1)
+    c2 = compile_and_measure(builders.override_groups(cfg, 2), shape, mesh,
+                             strategy, unroll=True, microbatches=1)
+    total = _combine(c1, c2, plan_groups)
+
+    compute_s = total["flops"] / PEAK_FLOPS_BF16
+    memory_s = total["bytes"] / HBM_BW
+    collective_s = total["collective"]["total"] / ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+    n_dev = mesh.size
+    hlo_flops_global = total["flops"] * n_dev
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    return {
+        "terms_seconds": terms,
+        "dominant": dominant,
+        "flops_per_device": total["flops"],
+        "bytes_per_device": total["bytes"],
+        "collective_bytes_per_device": total["collective"]["total"],
+        "collective_breakdown": total["collective"],
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "memory": full_depth_memory,
+        "groups": plan_groups,
+    }

@@ -1,0 +1,263 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs per mesh.
+
+Baseline strategy ("2d"): every weight matrix is sharded on its two largest
+dims — row dim over 'data' (ZeRO/FSDP-flavored), column dim over 'model'
+(tensor-parallel-flavored) — whenever divisible, else that dim is replicated.
+Stacked scan params (leading group axis) and expert weights (leading expert
+axis) shard their leading axis over 'model' when divisible (expert
+parallelism), falling back to the 2D rule on the trailing dims.
+
+Alternative strategies (used in §Perf hillclimbing):
+  "tp"    — model-axis only on columns (pure tensor parallel, params
+            replicated over 'data'),
+  "fsdp"  — data-axis only on rows (pure ZeRO-3, no tensor parallel).
+
+All rules are divisibility-safe: jit in_shardings reject uneven shards
+(verified), so any non-divisible dim degrades to replication.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _sizes(mesh: Mesh) -> Tuple[int, int]:
+    return mesh.shape.get("data", 1), mesh.shape.get("model", 1)
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def _matrix_spec(shape, dsize, msize, strategy, leading_stack=0):
+    """Spec for a (possibly stacked) weight tensor."""
+    spec = [None] * len(shape)
+    dims = list(range(leading_stack, len(shape)))
+    if not dims:
+        return P(*spec)
+    if len(dims) == 1:
+        d = dims[0]
+        if strategy != "fsdp" and _fits(shape[d], msize):
+            spec[d] = "model"
+        return P(*spec)
+    # Experts / stacked leading axis beyond the scan stack: shard over model.
+    if len(dims) >= 3 and strategy != "fsdp" and _fits(shape[dims[0]], msize):
+        spec[dims[0]] = "model"
+        if strategy != "tp" and _fits(shape[dims[1]], dsize):
+            spec[dims[1]] = "data"
+        return P(*spec)
+    row, col = dims[-2], dims[-1]
+    if strategy != "tp" and _fits(shape[row], dsize):
+        spec[row] = "data"
+    if strategy != "fsdp" and _fits(shape[col], msize):
+        spec[col] = "model"
+    return P(*spec)
+
+
+def param_specs(
+    params_shape: Any, mesh: Mesh, strategy: str = "2d"
+) -> Any:
+    """Map a param shape-pytree (from jax.eval_shape) to PartitionSpecs."""
+    dsize, msize = _sizes(mesh)
+
+    def spec_for(path: str, shape) -> P:
+        ndim = len(shape)
+        if ndim <= 1:
+            return P()
+        stacked = "/body/" in path            # scan-stacked: skip group axis
+        lead = 1 if stacked else 0
+        if ndim - lead < 1:
+            return P()
+        # Vocab-sized weights: Megatron-style vocab-over-'model' ONLY.
+        # 2D-sharding these makes GSPMD materialize full-vocab logits
+        # (observed: 37 GB/device f32 logits on qwen2 train_4k).
+        if "/embed/" in path:                 # (V, D)
+            return P("model" if _fits(shape[0], msize) else None, None)
+        if "/lm_head/" in path:               # (D, V)
+            return P(None, "model" if _fits(shape[-1], msize) else None)
+        # Depthwise conv (W, C): shard channels over model.
+        if re.search(r"conv_w$", path):
+            spec = [None] * ndim
+            if _fits(shape[-1], msize) and strategy != "fsdp":
+                spec[-1] = "model"
+            return P(*spec)
+        # Expert weights with E not divisible by the model axis (mixtral 8/16):
+        # Megatron-style TP *within* each expert, matching moe_forward's
+        # activation constraints — gate/up column-parallel (f@model), down
+        # row-parallel (f@model on the contraction dim). The generic 2D rule
+        # put 'data' on the contraction, which GSPMD resolved by all-gathering
+        # the full-d_ff hidden (measured 17.5 GiB/step on mixtral prefill).
+        if "/moe/" in path and ndim - lead == 3 and not _fits(
+                shape[lead], msize):
+            spec = [None] * ndim
+            fdim = lead + 1 if path.endswith("/down") else lead + 2
+            # Train ("2d"): hybrid TP+ZeRO — d_ff over ('model','data'),
+            # 256-way storage; the 'data' part is re-gathered at use
+            # (ZeRO-3), the 'model' part is the TP shard matching the
+            # activation constraint. Inference ("tp"): model-only.
+            if strategy == "2d" and _fits(shape[fdim], msize * dsize):
+                spec[fdim] = ("model", "data")
+            elif _fits(shape[fdim], msize):
+                spec[fdim] = "model"
+            return P(*spec)
+        if ndim - lead == 1:
+            return P()
+        # Megatron pairing for second ("row-parallel") projections: their
+        # contraction dim is the previous op's model-sharded output (d_ff,
+        # attn heads, ssm inner), so shard the ROW over 'model' — otherwise
+        # GSPMD all-gathers the full weight at every use (measured 1 GiB/layer
+        # on deepseek-coder decode with tp).
+        if re.search(r"/(down|o|out|out_proj)/w$", path) and ndim - lead == 2:
+            spec = [None] * ndim
+            if _fits(shape[lead], msize) and strategy != "fsdp":
+                spec[lead] = "model"
+            if strategy == "2d" and _fits(shape[lead + 1], dsize):
+                spec[lead + 1] = "data"
+            return P(*spec)
+        return _matrix_spec(shape, dsize, msize, strategy, leading_stack=lead)
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+            t = type(tree)(walk(v, f"{path}/{i}") for i, v in enumerate(tree))
+            return list(t) if isinstance(tree, list) else t
+        if hasattr(tree, "_fields"):
+            return type(tree)(*[walk(getattr(tree, k), f"{path}/{k}")
+                                for k in tree._fields])
+        return spec_for(path, tree.shape)
+
+    return walk(params_shape)
+
+
+def opt_state_specs(param_spec_tree: Any, params_shape: Any, mesh: Mesh) -> Any:
+    """ZeRO-2 optimizer-state specs: m/v inherit the param spec PLUS 'data'
+    on the largest still-unsharded divisible dim. The update is elementwise,
+    so grads reshard in (a reduce-scatter-shaped move) and updated params
+    gather back — param-sized traffic once per step, while the fp32 m/v
+    (8 bytes/param) shard 256-way instead of 16-way."""
+    dsize, _ = _sizes(mesh)
+
+    def augment(spec: P, shape) -> P:
+        used = set()
+        for entry in spec:
+            if isinstance(entry, (tuple, list)):
+                used.update(entry)
+            elif entry is not None:
+                used.add(entry)
+        if len(shape) < 2 or "data" in used:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_dim = 0, -1
+        for i, (ax, dim) in enumerate(zip(parts, shape)):
+            if ax is None and _fits(dim, dsize) and dim > best:
+                best, best_dim = dim, i
+        if best_dim >= 0:
+            parts[best_dim] = "data"
+        return P(*parts)
+
+    flat_spec, treedef = jax.tree.flatten(
+        param_spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_shape = jax.tree.leaves(params_shape)
+    return jax.tree.unflatten(
+        treedef, [augment(s, sh.shape) for s, sh in zip(flat_spec, flat_shape)])
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    """Spec for (B, ...) inputs; shards batch over (pod, data) if divisible."""
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if global_batch % n == 0:
+        return P(axes if len(axes) > 1 else axes[0], *([None] * extra_dims))
+    d = mesh.shape.get("data", 1)
+    if global_batch % d == 0:
+        return P("data", *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def cache_specs(caches_shape: Any, mesh: Mesh, global_batch: int) -> Any:
+    """Decode-cache specs: batch over data when divisible; one trailing dim
+    over 'model' preferring heads > feature > latent; seq dim replicated
+    (ring writes land on one shard)."""
+    dsize, msize = _sizes(mesh)
+    baxes = batch_axes(mesh)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    if global_batch % nb == 0:
+        b_ax: Any = baxes if len(baxes) > 1 else baxes[0]
+    elif global_batch % dsize == 0:
+        b_ax = "data"
+    else:
+        b_ax = None
+
+    def spec_for(path: str, shape) -> P:
+        ndim = len(shape)
+        if ndim == 0:
+            return P()                        # cache index scalar
+        stacked = "/body/" in path
+        lead = 1 if stacked else 0
+        spec = [None] * ndim
+        if ndim - lead <= 1:                  # (stacked) scalar indices
+            return P(*spec)
+        bdim = lead
+        if shape[bdim] and b_ax is not None and (
+                shape[bdim] % nb == 0 if b_ax == baxes else shape[bdim] % dsize == 0):
+            spec[bdim] = b_ax
+        # One dim over 'model': prefer heads/latent dims (index bdim+2..) over
+        # the ring/seq dim (bdim+1), which ring writes keep on one shard.
+        candidates = list(range(bdim + 2, ndim)) + [bdim + 1]
+        for d in candidates:
+            if _fits(shape[d], msize):
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    def walk(tree, path=""):
+        if tree is None:
+            return None
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+            t = [walk(v, f"{path}/{i}") for i, v in enumerate(tree)]
+            return t if isinstance(tree, list) else type(tree)(t)
+        if hasattr(tree, "_fields"):
+            return type(tree)(*[walk(getattr(tree, k), f"{path}/{k}")
+                                for k in tree._fields])
+        return spec_for(path, tree.shape)
+
+    return walk(caches_shape)
+
+
+def logical_axis_map(mesh: Mesh) -> Dict[str, Any]:
+    """Mapping for repro.utils.constrain logical names."""
+    baxes = batch_axes(mesh)
+    return {
+        "batch": baxes if len(baxes) > 1 else baxes[0],
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "vocab": "model",
+        "qseq": "model",
+        "head_dim": "model",
+        "seq": "data",
+    }
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,60 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) input —
+weak-type-correct, shardable, never allocating device memory."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, InputShape
+
+
+def decode_capacity(cfg: ModelConfig, shape: InputShape) -> int:
+    """KV-cache capacity a decode shape implies for this architecture.
+
+    decode_32k keeps the full declared context. long_500k MUST be
+    sub-quadratic: attention layers fall back to the sliding-window variant
+    (cfg.long_context_window; the family's persistent window if smaller),
+    recurrent/SSM layers carry O(1) state anyway. See DESIGN.md §4.
+    """
+    if shape.seq_len > 65536:
+        win = cfg.long_context_window
+        if cfg.sliding_window:
+            win = min(win, cfg.sliding_window)
+        return win
+    return shape.seq_len
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    if shape.seq_len > 65536:
+        return decode_capacity(cfg, shape)
+    return None
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.n_patches if cfg.family == "vlm" else s
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, text), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, text), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model),
+                                                cfg.dtype)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                               cfg.dtype)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    specs.pop("mask")
+    return specs
+
+
+def decode_token_spec(cfg: ModelConfig, shape: InputShape):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)

@@ -1,0 +1,71 @@
+"""Training driver (CPU-scale runs of the reduced configs; the production
+mesh path is exercised by dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 50 \
+        [--full] [--batch 8] [--seq 64] [--microbatches 1] [--ckpt out.npz]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.data import synthetic_batch
+from repro.models import init_params, param_count
+from repro.training import (
+    AdamWConfig,
+    TrainState,
+    build_train_step,
+    checkpoint,
+    init_opt_state,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, help=f"one of {ASSIGNED}")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="use the FULL config (needs accelerators; default is "
+                         "the reduced smoke variant)")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    print(f"arch={cfg.name} params={param_count(params):,}")
+    state = TrainState(params=params, opt=init_opt_state(params))
+    step = jax.jit(build_train_step(
+        cfg, AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        microbatches=args.microbatches))
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        key, sub = jax.random.split(key)
+        batch = synthetic_batch(sub, args.batch, args.seq, cfg.vocab)._asdict()
+        if cfg.family == "vlm":
+            import jax.numpy as jnp
+            batch["patches"] = 0.1 * jax.random.normal(
+                sub, (args.batch, cfg.n_patches, cfg.d_model), cfg.dtype)
+        if cfg.family == "encdec":
+            import jax.numpy as jnp
+            batch["frames"] = 0.1 * jax.random.normal(
+                sub, (args.batch, cfg.n_frames, cfg.d_model), cfg.dtype)
+        state, m = step(state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"grad_norm={float(m['grad_norm']):.2f} "
+                  f"({(i+1)/(time.perf_counter()-t0):.1f} it/s)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state.params)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

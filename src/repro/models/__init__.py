@@ -1,0 +1,16 @@
+from repro.models.model import (
+    DecodeState,
+    active_param_count,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    param_count,
+    prefill,
+)
+from repro.models.transformer import RunFlags, depth_plan
+
+__all__ = [
+    "DecodeState", "RunFlags", "active_param_count", "decode_step", "depth_plan",
+    "forward", "init_decode_state", "init_params", "param_count", "prefill",
+]

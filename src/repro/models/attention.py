@@ -1,0 +1,491 @@
+"""Attention: GQA/MQA (rotary, optional bias/window) and MLA (DeepSeek-V2).
+
+Caches are fixed-capacity ring buffers so `decode_32k` (capacity = seq_len) and
+`long_500k` (capacity = sliding window ⇒ sub-quadratic) share one code path.
+Keys are stored post-rotary at their global positions; ring-slot global
+positions are reconstructed from the write index for masking.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params, apply_rotary, dense, dense_init, rotary_angles
+from repro.utils import constrain
+
+
+class AttnCache(NamedTuple):
+    k: jnp.ndarray        # (B, C, Hkv, hd) — post-rotary keys
+    v: jnp.ndarray        # (B, C, Hkv, hd)
+    index: jnp.ndarray    # () int32 — number of positions written so far
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray     # (B, C, kv_lora) — compressed latent
+    k_rope: jnp.ndarray   # (B, C, rope_dim) — shared rotary key
+    index: jnp.ndarray
+
+
+# ------------------------------- GQA ----------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "q": dense_init(kq, d, cfg.q_dim, dtype, bias=cfg.qkv_bias),
+        "k": dense_init(kk, d, cfg.kv_dim, dtype, bias=cfg.qkv_bias),
+        "v": dense_init(kv, d, cfg.kv_dim, dtype, bias=cfg.qkv_bias),
+        "o": dense_init(ko, cfg.q_dim, d, dtype),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+def _sdpa(
+    q: jnp.ndarray,              # (B, Sq, H, hd)
+    k: jnp.ndarray,              # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,              # (B, Sk, Hkv, hd)
+    mask: Optional[jnp.ndarray],  # broadcastable to (B, H, Sq, Sk) or (Sq, Sk)
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, g, hkv, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqgkd,bskd->bgkqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bgkqs,bskd->bqgkd", probs, v)
+    return ctx.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(
+    q: jnp.ndarray,              # (B, S, H, hd)
+    k: jnp.ndarray,              # (B, S, Hkv, hd)
+    v: jnp.ndarray,              # (B, S, Hkv, hd)
+    causal: bool,
+    window: Optional[int],
+    chunk: int = 1024,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Online-softmax attention scanned over KV chunks — O(S·chunk) memory
+    instead of O(S²). The XLA-level 'flash' used for long prefill; the Pallas
+    kernel is the TPU-optimized variant of the same schedule."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    qg = q.reshape(b, s, g, hkv, hd)
+    # Sequence-shard the query dim over 'model': head counts like 56 don't
+    # divide a 16-way axis, but seq always does — this keeps the (s × chunk)
+    # score blocks and fp32 accumulators distributed instead of replicated.
+    qg = constrain(qg, "batch", "qseq", None, None, None)
+    scale = 1.0 / math.sqrt(hd)
+    kc = k.reshape(b, nc, chunk, hkv, hd)
+    vc = v.reshape(b, nc, chunk, hkv, hd)
+    qpos = jnp.arange(s)
+
+    def _cst(m, l, acc):
+        # Keep every carry leaf on the SAME (batch, qseq@model) layout as qg:
+        # without this, XLA resolves the scan-carry sharding conflict between
+        # the qseq-sharded scores and kv-head-sharded values by FULLY
+        # REPLICATING the fp32 accumulator ("involuntary full
+        # rematerialization", measured 512 GiB/step on mixtral prefill_32k).
+        m = constrain(m, "batch", None, None, "qseq")
+        l = constrain(l, "batch", None, None, "qseq")
+        acc = constrain(acc, "batch", None, None, "qseq", None)
+        return m, l, acc
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        scores = jnp.einsum("bqgkd,bskd->bgkqs", qg, kb).astype(jnp.float32) * scale
+        scores = constrain(scores, "batch", None, None, "qseq", None)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((s, chunk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgkqs,bskd->bgkqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return _cst(m_new, l, acc), None
+
+    init = _cst(
+        jnp.full((b, g, hkv, s), -1e30, jnp.float32),
+        jnp.zeros((b, g, hkv, s), jnp.float32),
+        jnp.zeros((b, g, hkv, s, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(nc), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        unroll=nc if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-38)[..., None]
+    # (b, g, kv, s, d) → (b, s, g, kv, d) → (b, s, h, d)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, hd).astype(q.dtype)
+
+
+def _sdpa_window_blocked(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    window: int, chunk: int, unroll: bool = False,
+) -> jnp.ndarray:
+    """Sliding-window attention, q-chunk blocked: each query chunk attends a
+    SLICED kv span of length L = window+chunk instead of the whole sequence —
+    score traffic s·L vs s·s (5.3× less for mixtral's 4096 window at 32k), and
+    no online-softmax carries (the full receptive field is in-block)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    l_span = min(s, ((window + chunk + chunk - 1) // chunk) * chunk)
+    nq = s // chunk
+    qg = q.reshape(b, s, g, hkv, hd)
+    qg = constrain(qg, "batch", "qseq", None, None, None)
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(_, qc):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qc * chunk, chunk, axis=1)
+        start = jnp.clip(qc * chunk + chunk - l_span, 0, s - l_span)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, start, l_span, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, start, l_span, axis=1)
+        scores = jnp.einsum("bqgkd,bskd->bgkqs", q_blk, k_blk
+                            ).astype(jnp.float32) * scale
+        qpos = qc * chunk + jnp.arange(chunk)
+        kpos = start + jnp.arange(l_span)
+        mask = (kpos[None, :] <= qpos[:, None]) & (
+            kpos[None, :] > qpos[:, None] - window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        ctx = jnp.einsum("bgkqs,bskd->bqgkd", probs, v_blk)
+        return None, ctx
+
+    _, blocks = jax.lax.scan(body, None, jnp.arange(nq),
+                             unroll=nq if unroll else 1)
+    # (nq, b, chunk, g, kv, hd) → (b, s, h, hd)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(b, s, g, hkv, hd)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def causal_mask(sq: int, sk: int, window: Optional[int], offset: int = 0) -> jnp.ndarray:
+    """(sq, sk) mask; query i attends key j iff j ≤ i+offset (and within window)."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def gqa_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                 # (B, S, D)
+    positions: jnp.ndarray,         # (S,)
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_source: Optional[jnp.ndarray] = None,   # cross-attention memory (B, Sk, D)
+    use_flash: bool = False,
+    cache_capacity: Optional[int] = None,
+    attn_impl: str = "naive",                  # naive | chunked
+    chunk: int = 1024,
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, AttnCache]:
+    """Full-sequence attention (train / prefill). Returns output and a cache
+    holding the (post-rotary) K/V of this sequence."""
+    q = _split_heads(dense(p["q"], x), cfg.n_heads)
+    src = x if kv_source is None else kv_source
+    k = _split_heads(dense(p["k"], src), cfg.n_kv_heads)
+    v = _split_heads(dense(p["v"], src), cfg.n_kv_heads)
+    if cfg.rope_theta > 0 and kv_source is None:
+        cos, sin = rotary_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    mask = None
+    if causal and kv_source is None:
+        mask = causal_mask(x.shape[1], src.shape[1], window)
+    if use_flash and kv_source is None:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        ctx = flash_ops.flash_attention(
+            q, k, v, causal=causal, window=window)
+    elif attn_impl == "chunked" and kv_source is None:
+        if causal and window is not None and window + chunk < x.shape[1]:
+            ctx = _sdpa_window_blocked(q, k, v, window=window, chunk=chunk,
+                                       unroll=unroll)
+        else:
+            ctx = _sdpa_chunked(q, k, v, causal=causal, window=window,
+                                chunk=chunk, unroll=unroll)
+    else:
+        ctx = _sdpa(q, k, v, mask)
+    ctx = constrain(ctx, "batch", None, "heads", None)
+    out = constrain(
+        dense(p["o"], ctx.reshape(x.shape[0], x.shape[1], -1)),
+        "batch", None, None)
+    s = src.shape[1]
+    if cache_capacity is not None and cache_capacity > s:
+        pad = ((0, 0), (0, cache_capacity - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    cache = AttnCache(k=k, v=v, index=jnp.asarray(s, jnp.int32))
+    return out, cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> AttnCache:
+    shape = (batch, capacity, cfg.n_kv_heads, cfg.head_dim)
+    return AttnCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def ring_positions(index: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Global position held by each ring slot after `index` writes; -1 if empty.
+
+    Slot j holds the largest p < index with p ≡ j (mod capacity).
+    """
+    j = jnp.arange(capacity)
+    last = index - 1
+    p = last - ((last - j) % capacity)
+    return jnp.where((index > 0) & (p >= 0), p, -1)
+
+
+def gqa_decode(
+    p: Params,
+    cfg: ModelConfig,
+    cache: AttnCache,
+    x: jnp.ndarray,                 # (B, 1, D) — one new token
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, AttnCache]:
+    b = x.shape[0]
+    capacity = cache.k.shape[1]
+    pos = cache.index                                  # scalar global position
+    q = _split_heads(dense(p["q"], x), cfg.n_heads)
+    k = _split_heads(dense(p["k"], x), cfg.n_kv_heads)
+    v = _split_heads(dense(p["v"], x), cfg.n_kv_heads)
+    if cfg.rope_theta > 0:
+        cos, sin = rotary_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    # Decode keeps K/V head_dim-sharded over 'model' (the cache layout):
+    # contracting the sharded head_dim yields a partial-sum all-reduce on the
+    # tiny score tensor instead of all-gathering the whole cache
+    # (measured 2 GiB/layer → 116 MB/layer on deepseek-coder decode_32k).
+    q = constrain(q, "batch", None, None, "head_dim")
+    k = constrain(k, "batch", None, None, "head_dim")
+    v = constrain(v, "batch", None, None, "head_dim")
+    slot = pos % capacity
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    new_index = pos + 1
+    kpos = ring_positions(new_index, capacity)         # (C,)
+    valid = kpos >= 0
+    if window is not None:
+        valid &= kpos > pos - window
+    mask = valid[None, None, None, None, :]            # (1,1,1,1,C) over (b,g,kv,q,s)
+    ctx = _sdpa(q, new_k, new_v, mask)
+    out = dense(p["o"], ctx.reshape(b, 1, -1))
+    return out, AttnCache(k=new_k, v=new_v, index=new_index)
+
+
+def gqa_cross_decode(
+    p: Params, cfg: ModelConfig, mem_cache: AttnCache, x: jnp.ndarray
+) -> jnp.ndarray:
+    """Cross-attention for decode: attend the fixed encoder memory cache."""
+    q = _split_heads(dense(p["q"], x), cfg.n_heads)
+    ctx = _sdpa(q, mem_cache.k, mem_cache.v, None)
+    return dense(p["o"], ctx.reshape(x.shape[0], 1, -1))
+
+
+# ------------------------------- MLA ----------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    p: Params = {
+        "dkv": dense_init(ks[0], d, r, dtype),
+        "kv_norm": layers.norm_init(r, "rmsnorm", dtype),
+        "uk": dense_init(ks[1], r, h * nope, dtype),
+        "uv": dense_init(ks[2], r, h * vd, dtype),
+        "kr": dense_init(ks[3], d, rope, dtype),
+        "o": dense_init(ks[4], h * vd, d, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["dq"] = dense_init(ks[5], d, cfg.q_lora_rank, dtype)
+        p["q_norm"] = layers.norm_init(cfg.q_lora_rank, "rmsnorm", dtype)
+        p["uq"] = dense_init(ks[6], cfg.q_lora_rank, h * (nope + rope), dtype)
+    else:
+        p["uq"] = dense_init(ks[6], d, h * (nope + rope), dtype)
+    return p
+
+
+def _mla_q(p: Params, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    h, nope, rope = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = layers.apply_norm(p["q_norm"], dense(p["dq"], x), "rmsnorm")
+        q = dense(p["uq"], cq)
+    else:
+        q = dense(p["uq"], x)
+    q = q.reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rotary_angles(positions, rope, cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_forward(
+    p: Params, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray,
+    window: Optional[int] = None, cache_capacity: Optional[int] = None,
+    attn_impl: str = "naive", chunk: int = 1024, unroll: bool = False,
+) -> Tuple[jnp.ndarray, MLACache]:
+    """Train/prefill MLA with a causal mask; caches (c_kv, k_rope)."""
+    b, s, _ = x.shape
+    h, nope, rope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv = layers.apply_norm(p["kv_norm"], dense(p["dkv"], x), "rmsnorm")
+    cos, sin = rotary_angles(positions, rope, cfg.rope_theta)
+    k_rope = apply_rotary(dense(p["kr"], x)[:, :, None, :], cos, sin)[:, :, 0, :]
+    scale = 1.0 / math.sqrt(nope + rope)
+    if attn_impl == "chunked":
+        ctx = _mla_chunked(p, cfg, q_nope, q_rope, c_kv, k_rope, window=window,
+                           chunk=chunk, unroll=unroll, scale=scale)
+    else:
+        k_nope = dense(p["uk"], c_kv).reshape(b, s, h, nope)
+        val = dense(p["uv"], c_kv).reshape(b, s, h, vd)
+        scores = (
+            jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope)
+            + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope)
+        ).astype(jnp.float32) * scale
+        mask = causal_mask(s, s, window)
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhqs,bshv->bqhv", probs, val)
+    out = dense(p["o"], ctx.reshape(b, s, h * vd))
+    ck, kr = c_kv, k_rope
+    if cache_capacity is not None and cache_capacity > s:
+        pad = ((0, 0), (0, cache_capacity - s), (0, 0))
+        ck, kr = jnp.pad(ck, pad), jnp.pad(kr, pad)
+    return out, MLACache(c_kv=ck, k_rope=kr, index=jnp.asarray(s, jnp.int32))
+
+
+def _mla_chunked(
+    p: Params, cfg: ModelConfig, q_nope, q_rope, c_kv, k_rope,
+    window: Optional[int], chunk: int, unroll: bool, scale: float,
+) -> jnp.ndarray:
+    """Online-softmax MLA scanned over latent-cache chunks; per-head K/V are
+    decompressed one chunk at a time (O(S·chunk) memory)."""
+    b, s, h = q_nope.shape[0], q_nope.shape[1], cfg.n_heads
+    nope, rope, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    q_nope = constrain(q_nope, "batch", "qseq", None, None)
+    q_rope = constrain(q_rope, "batch", "qseq", None, None)
+    ckc = c_kv.reshape(b, nc, chunk, r)
+    krc = k_rope.reshape(b, nc, chunk, rope)
+    qpos = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, ck, kr = inp
+        k_nope = dense(p["uk"], ck).reshape(b, chunk, h, nope)
+        val = dense(p["uv"], ck).reshape(b, chunk, h, vd)
+        scores = (
+            jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope)
+            + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr)
+        ).astype(jnp.float32) * scale
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        pr = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(pr, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshv->bhqv", pr.astype(val.dtype), val).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((b, h, s), -1e30, jnp.float32),
+        jnp.zeros((b, h, s), jnp.float32),
+        jnp.zeros((b, h, s, vd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(nc), jnp.moveaxis(ckc, 1, 0), jnp.moveaxis(krc, 1, 0)),
+        unroll=nc if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-38)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(c_kv.dtype)     # (b, s, h, vd)
+
+
+def make_mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, capacity, cfg.qk_rope_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(
+    p: Params, cfg: ModelConfig, cache: MLACache, x: jnp.ndarray,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed-matrix decode: attention runs directly on the compressed latent
+    cache (scores via q·W_uk·c_kv), never materializing per-head K/V — the
+    memory win MLA was designed for, adapted to a ring cache."""
+    b = x.shape[0]
+    h, nope, rope, vd, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                            cfg.v_head_dim, cfg.kv_lora_rank)
+    capacity = cache.c_kv.shape[1]
+    pos = cache.index
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[None])        # (B,1,H,·)
+    c_new = layers.apply_norm(p["kv_norm"], dense(p["dkv"], x), "rmsnorm")
+    cos, sin = rotary_angles(pos[None], rope, cfg.rope_theta)
+    kr_new = apply_rotary(dense(p["kr"], x)[:, :, None, :], cos, sin)[:, :, 0, :]
+    slot = pos % capacity
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, slot, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, slot, axis=1)
+    new_index = pos + 1
+    # Absorb W_uk into q: q_abs (B,H,r) = q_nope · W_uk(r→h,nope)
+    w_uk = p["uk"]["w"].reshape(r, h, nope)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+    scale = 1.0 / math.sqrt(nope + rope)
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_abs, c_kv)
+        + jnp.einsum("bhp,bsp->bhs", q_rope[:, 0], k_rope)
+    ).astype(jnp.float32) * scale
+    kpos = ring_positions(new_index, capacity)
+    valid = kpos >= 0
+    if window is not None:
+        valid &= kpos > pos - window
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_c = jnp.einsum("bhs,bsr->bhr", probs, c_kv)      # context in latent space
+    w_uv = p["uv"]["w"].reshape(r, h, vd)
+    ctx = jnp.einsum("bhr,rhv->bhv", ctx_c, w_uv)
+    out = dense(p["o"], ctx.reshape(b, 1, h * vd))
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope, index=new_index)

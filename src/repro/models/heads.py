@@ -1,0 +1,36 @@
+"""Task heads for hierarchical inference: a binary (event-detection) head that
+turns any backbone into an LDL/RDL classifier emitting the confidence f_t that
+repro.core consumes."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense, dense_init
+
+
+def binary_head_init(key, cfg: ModelConfig, hidden: int = 0) -> Params:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    if hidden:
+        return {
+            "h": dense_init(k1, d, hidden, cfg.dtype, bias=True),
+            "out": dense_init(k2, hidden, 2, cfg.dtype, bias=True),
+        }
+    return {"out": dense_init(k2, d, 2, cfg.dtype, bias=True)}
+
+
+def binary_head(p: Params, features: jnp.ndarray) -> jnp.ndarray:
+    """features: (B, S, D) → logits (B, 2), pooled at the last position."""
+    x = features[:, -1, :]
+    if "h" in p:
+        x = jax.nn.tanh(dense(p["h"], x))
+    return dense(p["out"], x).astype(jnp.float32)
+
+
+def confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """f_t = softmax(logits)[class 1] — the LDL output the paper thresholds."""
+    return jax.nn.softmax(logits, axis=-1)[..., 1]

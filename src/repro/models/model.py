@@ -1,0 +1,246 @@
+"""Top-level model API: init / forward / prefill / decode for every family.
+
+Inputs are a dict:
+    tokens  (B, S)  int32           — always present (decoder tokens)
+    patches (B, P, D) dtype         — vlm only (stub frontend embeddings)
+    frames  (B, F, D) dtype         — encdec only (stub conv/mel frontend)
+The VLM prefix occupies the first `n_patches` positions of the declared
+seq_len, so `tokens` carries seq_len − n_patches text positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, transformer
+from repro.models.layers import (
+    Params,
+    apply_norm,
+    dense,
+    dense_init,
+    embed,
+    embedding_init,
+    learned_positions_init,
+    norm_init,
+)
+from repro.models.transformer import RunFlags
+from repro.utils import constrain
+
+MAX_LEARNED_POS = 4096  # whisper-style learned positions table size
+
+
+class DecodeState(NamedTuple):
+    caches: Any                               # per-layer cache pytree
+    memory: Optional[attention.AttnCache]     # encoder / cross-attn K/V (encdec)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    dtype = cfg.dtype
+    p: Params = {
+        "embed": embedding_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": transformer.init_blocks(ks[1], cfg, dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_padded, dtype)
+    if cfg.rope_theta == 0:
+        p["pos"] = learned_positions_init(ks[3], MAX_LEARNED_POS, cfg.d_model, dtype)
+    if cfg.family == "vlm":
+        p["projector"] = dense_init(ks[4], cfg.d_model, cfg.d_model, dtype)
+    if cfg.family == "encdec":
+        enc_cfg = cfg
+        p["enc_pos"] = learned_positions_init(ks[5], cfg.n_frames, cfg.d_model, dtype)
+        import dataclasses
+
+        enc_plain = dataclasses.replace(
+            cfg, family="dense", n_layers=cfg.n_encoder_layers,
+            n_dense_layers=0, pattern=("attn",))
+        p["encoder"] = transformer.init_blocks(ks[6], enc_plain, dtype)
+        p["enc_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["xkv"] = attention.gqa_init(ks[7], cfg, dtype)  # unused q/o kept for shape parity
+    return p
+
+
+def _logits(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"]["table"].T
+    else:
+        logits = dense(p["lm_head"], x)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _encode(p: Params, cfg: ModelConfig, frames: jnp.ndarray,
+            flags: RunFlags, unroll: bool) -> attention.AttnCache:
+    """Encoder stack over stub frame embeddings → cross-attention K/V memory."""
+    import dataclasses
+
+    enc_cfg = dataclasses.replace(
+        cfg, family="dense", n_layers=cfg.n_encoder_layers,
+        n_dense_layers=0, pattern=("attn",))
+    x = frames + p["enc_pos"]["pos"][None, : frames.shape[1], :]
+    positions = jnp.arange(frames.shape[1])
+    # Bidirectional: reuse run_blocks_seq but disable causal masking by calling
+    # blocks with a full window; encoder layers have no cross-attn params.
+    x, _, _ = transformer.run_blocks_seq(
+        p["encoder"], enc_cfg, x, positions,
+        dataclasses.replace(flags, mode="encode"), memory=None, unroll=unroll)
+    x = apply_norm(p["enc_norm"], x, cfg.norm)
+    k = attention._split_heads(dense(p["xkv"]["k"], x), cfg.n_kv_heads)
+    v = attention._split_heads(dense(p["xkv"]["v"], x), cfg.n_kv_heads)
+    return attention.AttnCache(k=k, v=v, index=jnp.asarray(x.shape[1], jnp.int32))
+
+
+def _embed_inputs(p: Params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray]):
+    x = embed(p["embed"], inputs["tokens"])
+    if cfg.family == "vlm" and "patches" in inputs:
+        patches = dense(p["projector"], inputs["patches"].astype(cfg.dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.rope_theta == 0 and "pos" in p:
+        s = x.shape[1]
+        x = x + p["pos"]["pos"][None, (jnp.arange(s) % MAX_LEARNED_POS), :]
+    return x
+
+
+def forward(
+    p: Params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
+    flags: RunFlags = RunFlags(), unroll: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (training). Returns (logits, aux_loss)."""
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(p, cfg, inputs["frames"].astype(cfg.dtype), flags, unroll)
+    x = _embed_inputs(p, cfg, inputs)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = transformer.run_blocks_seq(
+        p["blocks"], cfg, x, positions, flags, memory=memory, unroll=unroll)
+    return _logits(p, cfg, x), aux
+
+
+def prefill(
+    p: Params, cfg: ModelConfig, inputs: Dict[str, jnp.ndarray],
+    flags: RunFlags = RunFlags(), unroll: bool = False,
+    capacity: Optional[int] = None,
+) -> Tuple[jnp.ndarray, DecodeState]:
+    """Process a prompt, returning last-position logits and the decode state.
+
+    `capacity` pads attention caches beyond the prompt length so subsequent
+    decode steps append instead of wrapping the ring.
+    """
+    import dataclasses as _dc
+
+    if capacity is not None:
+        flags = _dc.replace(flags, cache_capacity=capacity)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(p, cfg, inputs["frames"].astype(cfg.dtype), flags, unroll)
+    x = _embed_inputs(p, cfg, inputs)
+    positions = jnp.arange(x.shape[1])
+    x, caches, _ = transformer.run_blocks_seq(
+        p["blocks"], cfg, x, positions, flags, memory=memory, unroll=unroll,
+        collect_caches=True)
+    return _logits(p, cfg, x[:, -1:, :]), DecodeState(caches=caches, memory=memory)
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, capacity: int,
+    memory_len: Optional[int] = None,
+) -> DecodeState:
+    caches = transformer.init_block_caches(cfg, batch, capacity, cfg.dtype)
+    memory = None
+    if cfg.family == "encdec":
+        mlen = memory_len or cfg.n_frames
+        memory = attention.AttnCache(
+            k=jnp.zeros((batch, mlen, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            v=jnp.zeros((batch, mlen, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            index=jnp.asarray(mlen, jnp.int32),
+        )
+    return DecodeState(caches=caches, memory=memory)
+
+
+def decode_step(
+    p: Params, cfg: ModelConfig, state: DecodeState, token: jnp.ndarray,
+    flags: RunFlags = RunFlags(mode="decode"), unroll: bool = False,
+) -> Tuple[jnp.ndarray, DecodeState]:
+    """One decode step: token (B, 1) int32 → (logits (B, 1, V), new state)."""
+    x = embed(p["embed"], token)
+    if cfg.rope_theta == 0 and "pos" in p:
+        # Use the cache index of the first attention layer as the position.
+        idx = jax.tree.leaves(state.caches)[-1]
+        pos = _first_cache_index(state.caches)
+        x = x + p["pos"]["pos"][None, (pos % MAX_LEARNED_POS)[None], :]
+    x = constrain(x, "batch", None, None)
+    x, new_caches = transformer.run_blocks_decode(
+        p["blocks"], cfg, state.caches, x, flags, memory=state.memory,
+        unroll=unroll)
+    return _logits(p, cfg, x), DecodeState(caches=new_caches, memory=state.memory)
+
+
+def _first_cache_index(caches) -> jnp.ndarray:
+    for seg in ("lead", "body", "tail"):
+        for layer in caches[seg] if isinstance(caches[seg], list) else [caches[seg]]:
+            if not layer:
+                continue
+            for v in layer.values():
+                idx = v.index
+                return idx[0] if idx.ndim else idx
+    return jnp.zeros((), jnp.int32)
+
+
+# --------------------------- parameter counting -------------------------------
+
+
+def param_count(p: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(p))
+
+
+def total_param_count(cfg: ModelConfig) -> int:
+    """Total STORED params (all experts), from the abstract param tree."""
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+import numpy as np  # noqa: E402  (used by total_param_count)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Approximate active params per token (MoE: top_k + shared experts only)."""
+    total = 0
+    d = cfg.d_model
+    for kind in cfg.layer_kinds:
+        if kind in ("attn", "moe"):
+            if cfg.use_mla:
+                r = cfg.kv_lora_rank
+                total += d * r + r * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                total += d * cfg.qk_rope_dim
+                if cfg.q_lora_rank:
+                    total += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * (
+                        cfg.qk_nope_dim + cfg.qk_rope_dim)
+                else:
+                    total += d * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                total += cfg.n_heads * cfg.v_head_dim * d
+            else:
+                total += d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+        if kind == "moe":
+            mult = 3 if cfg.act == "silu" else 2
+            total += cfg.top_k * mult * d * cfg.d_ff
+            total += cfg.n_shared_experts * mult * d * cfg.d_ff
+        elif kind == "attn":
+            mult = 3 if cfg.act == "silu" else 2
+            total += mult * d * cfg.d_ff
+        elif kind == "ssm":
+            inner = cfg.ssm_inner
+            total += d * (2 * inner + 2 * cfg.ssm_groups * cfg.ssm_state
+                          + cfg.ssm_heads) + inner * d
+        elif kind == "rec":
+            w = cfg.lru_width or d
+            total += 2 * d * w + 2 * w * w + w * d
+            mult = 3 if cfg.act == "silu" else 2
+            total += mult * d * cfg.d_ff
+    total += cfg.vocab_padded * d * (1 if cfg.tie_embeddings else 2)
+    return total

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+    a_t = exp(−c · softplus(Λ) · r_t)            (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+Full sequences use an associative scan (log-depth on TPU); decode is the
+plain one-step recurrence. The block wraps the LRU with the Griffin
+conv1d(width 4) + GeGLU-style output gate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense, dense_init
+from repro.utils import constrain
+
+_C = 8.0
+
+
+class LRUCache(NamedTuple):
+    h: jnp.ndarray         # (B, W) recurrent state
+    conv: jnp.ndarray      # (B, width−1, W) conv tail
+    index: jnp.ndarray
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin appendix).
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "in_x": dense_init(ks[1], d, w, dtype),
+        "in_gate": dense_init(ks[2], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": dense_init(ks[4], w, w, dtype),
+        "w_i": dense_init(ks[5], w, w, dtype),
+        "lambda": lam,
+        "out": dense_init(ks[6], w, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    return out + b[None, None, :]
+
+
+def _gates(p: Params, x: jnp.ndarray):
+    r = jax.nn.sigmoid(dense(p["w_r"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_i"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r          # log a_t ≤ 0
+    a2 = jnp.exp(2.0 * log_a)
+    gated_x = x.astype(jnp.float32) * i * jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, gated_x
+
+
+def lru_scan(log_a: jnp.ndarray, gx: jnp.ndarray, h0=None) -> jnp.ndarray:
+    """Associative scan of h_t = a_t h_{t−1} + gx_t over axis 1 (seq)."""
+    if h0 is not None:
+        # Fold the carried-in state into the first step.
+        first = gx[:, :1] + jnp.exp(log_a[:, :1]) * h0[:, None, :]
+        gx = jnp.concatenate([first, gx[:, 1:]], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, gx), axis=1)
+    return h
+
+
+def rglru_forward(
+    p: Params, cfg: ModelConfig, xin: jnp.ndarray
+) -> Tuple[jnp.ndarray, LRUCache]:
+    """Full-sequence Griffin recurrent block."""
+    x = dense(p["in_x"], xin)
+    gate = jax.nn.gelu(dense(p["in_gate"], xin))
+    conv_in = x
+    x = _causal_conv(x, p["conv_w"], p["conv_b"])
+    x = constrain(x, "batch", None, "mlp")
+    log_a, gx = _gates(p, x)
+    h = lru_scan(log_a, gx).astype(xin.dtype)
+    out = dense(p["out"], h * gate)
+    tail = conv_in[:, -(cfg.conv_width - 1):, :]
+    return out, LRUCache(h=h[:, -1, :], conv=tail,
+                         index=jnp.asarray(xin.shape[1], jnp.int32))
+
+
+def make_lru_cache(cfg: ModelConfig, batch: int, dtype) -> LRUCache:
+    w = cfg.lru_width or cfg.d_model
+    return LRUCache(
+        h=jnp.zeros((batch, w), dtype),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def rglru_decode(
+    p: Params, cfg: ModelConfig, cache: LRUCache, xin: jnp.ndarray
+) -> Tuple[jnp.ndarray, LRUCache]:
+    x = dense(p["in_x"], xin)                          # (B,1,W)
+    gate = jax.nn.gelu(dense(p["in_gate"], xin))
+    window = jnp.concatenate([cache.conv, x], axis=1)  # (B,width,W)
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    log_a, gx = _gates(p, conv[:, None, :])
+    h = jnp.exp(log_a[:, 0]) * cache.h.astype(jnp.float32) + gx[:, 0]
+    h = h.astype(xin.dtype)
+    out = dense(p["out"], h[:, None, :] * gate)
+    return out, LRUCache(h=h, conv=window[:, 1:, :], index=cache.index + 1)

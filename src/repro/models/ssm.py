@@ -1,0 +1,214 @@
+"""Mamba2 block — SSD (state-space duality) chunked scan + recurrent decode.
+
+Forward follows the "minimal SSD" algorithm of arXiv:2405.21060 §6: the
+sequence is split into chunks; within-chunk interactions use the quadratic
+(attention-like, MXU-friendly) form, across-chunk state is carried by an
+exact associative recurrence. Decode maintains the (H, P, N) state directly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense, dense_init
+from repro.utils import constrain
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, P, N) — SSM state
+    conv: jnp.ndarray       # (B, W-1, conv_dim) — temporal-conv tail
+    index: jnp.ndarray
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    inner = cfg.ssm_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    conv_dim = inner + 2 * g * n
+    # in_proj emits [x (inner), z (inner), B (g·n), C (g·n), dt (h)].
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * inner + 2 * g * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((inner,), dtype),
+        "out_proj": dense_init(ks[2], inner, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    inner, g, n, h = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    x = proj[..., :inner]
+    z = proj[..., inner:2 * inner]
+    b = proj[..., 2 * inner:2 * inner + g * n]
+    c = proj[..., 2 * inner + g * n:2 * inner + 2 * g * n]
+    dt = proj[..., 2 * inner + 2 * g * n:]
+    return x, z, b, c, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq: x (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def _gated_rmsnorm(x: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan(
+    x: jnp.ndarray,       # (B, S, H, P)
+    dt: jnp.ndarray,      # (B, S, H) — post-softplus
+    a: jnp.ndarray,       # (H,) — positive decay rates (state uses exp(-dt·a))
+    b: jnp.ndarray,       # (B, S, G, N)
+    c: jnp.ndarray,       # (B, S, G, N)
+    chunk: int = 128,
+    initial_state: Optional[jnp.ndarray] = None,
+    use_kernel: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+
+        return ssd_ops.ssd(x, dt, a, b, c, chunk=chunk, initial_state=initial_state)
+    return ssd_reference(x, dt, a, b, c, chunk=chunk, initial_state=initial_state)
+
+
+def ssd_reference(x, dt, a, b, c, chunk=128, initial_state=None):
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    rep = h // g
+
+    # log decay per step: Δlog = -dt·a  (a > 0)
+    dlog = -dt * a[None, None, :]                       # (B,S,H)
+    xr = x.reshape(bs, nc, chunk, h, p)
+    dtr = dt.reshape(bs, nc, chunk, h)
+    dlogr = dlog.reshape(bs, nc, chunk, h)
+    br = jnp.repeat(b.reshape(bs, nc, chunk, g, n), rep, axis=3)   # (B,NC,Q,H,N)
+    cr = jnp.repeat(c.reshape(bs, nc, chunk, g, n), rep, axis=3)
+
+    cum = jnp.cumsum(dlogr, axis=2)                     # (B,NC,Q,H)
+    # Within-chunk "attention" matrix L[i,j] = exp(cum_i − cum_j)·(i ≥ j)
+    li = cum[:, :, :, None, :]                          # query i
+    lj = cum[:, :, None, :, :]                          # key j
+    seg = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, 0.0)
+
+    scores = jnp.einsum("bzqhn,bzkhn->bzqkh", cr, br) * seg
+    y_diag = jnp.einsum("bzqkh,bzkh,bzkhp->bzqhp", scores, dtr, xr)
+
+    # Chunk-final states: S_z = Σ_j exp(cum_Q − cum_j)·dt_j·B_j⊗x_j
+    decay_to_end = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))  # (B,NC,Q,H)
+    chunk_states = jnp.einsum(
+        "bzkh,bzkh,bzkhn,bzkhp->bzhpn", decay_to_end, dtr, br, xr)
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))           # (B,NC,H)
+
+    # Inter-chunk recurrence (sequential over NC chunks).
+    def body(carry, inp):
+        st = carry                                      # (B,H,P,N)
+        s_z, d_z = inp                                  # (B,H,P,N), (B,H)
+        new = st * d_z[:, :, None, None] + s_z.astype(jnp.float32)
+        return new, st                                  # emit state ENTERING chunk
+
+    init = (jnp.zeros((bs, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, entering = jax.lax.scan(
+        body,
+        init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)             # (B,NC,H,P,N)
+
+    # Contribution of the entering state to each position.
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))       # exp(cum_i)
+    y_off = jnp.einsum("bzqhn,bzqh,bzhpn->bzqhp", cr, decay_in, entering)
+    y = (y_diag + y_off).reshape(bs, s, h, p).astype(x.dtype)
+    return y, final.astype(x.dtype)
+
+
+def ssm_forward(
+    p: Params, cfg: ModelConfig, xin: jnp.ndarray, chunk: int = 128,
+    use_kernel: bool = False,
+) -> Tuple[jnp.ndarray, SSMCache]:
+    """Full-sequence Mamba2 block: in_proj → conv → SSD → gated norm → out."""
+    bsz, s, _ = xin.shape
+    inner, g, n, h, pd = (cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state,
+                          cfg.ssm_heads, cfg.ssm_head_dim)
+    chunk = min(chunk, s)
+    while s % chunk:       # largest power-of-two-ish divisor ≤ requested chunk
+        chunk //= 2
+    proj = dense(p["in_proj"], xin)
+    x, z, b, c, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([x, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    x = conv_out[..., :inner].reshape(bsz, s, h, pd)
+    b = conv_out[..., inner:inner + g * n].reshape(bsz, s, g, n)
+    c = conv_out[..., inner + g * n:].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = jnp.exp(p["a_log"])
+    x = constrain(x, "batch", None, "heads", None)
+    y, final = ssd_scan(x, dt, a, b, c, chunk=chunk, use_kernel=use_kernel)
+    y = y + x * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = _gated_rmsnorm(y.reshape(bsz, s, inner), z, p["norm_scale"])
+    out = dense(p["out_proj"], y)
+    tail = conv_in[:, -(cfg.conv_width - 1):, :]
+    return out, SSMCache(state=final, conv=tail, index=jnp.asarray(s, jnp.int32))
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    conv_dim = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def ssm_decode(
+    p: Params, cfg: ModelConfig, cache: SSMCache, xin: jnp.ndarray
+) -> Tuple[jnp.ndarray, SSMCache]:
+    """One-token recurrent step: h ← exp(−dt·a)·h + dt·x⊗B ; y = C·h + D·x."""
+    bsz = xin.shape[0]
+    inner, g, n, h, pd = (cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state,
+                          cfg.ssm_heads, cfg.ssm_head_dim)
+    proj = dense(p["in_proj"], xin)                    # (B,1,·)
+    x, z, b, c, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([x, b, c], axis=-1)      # (B,1,conv_dim)
+    window = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B,W,conv_dim)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    x = conv_out[:, :inner].reshape(bsz, h, pd)
+    b = conv_out[:, inner:inner + g * n].reshape(bsz, g, n)
+    c = conv_out[:, inner + g * n:].reshape(bsz, g, n)
+    rep = h // g
+    b = jnp.repeat(b, rep, axis=1)                     # (B,H,N)
+    c = jnp.repeat(c, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])  # (B,H)
+    a = jnp.exp(p["a_log"])
+    decay = jnp.exp(-dt * a[None, :]).astype(x.dtype)  # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(x.dtype), x, b)
+    state = cache.state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, c)
+    y = y + x * p["d_skip"][None, :, None].astype(y.dtype)
+    y = _gated_rmsnorm(y.reshape(bsz, 1, inner), z, p["norm_scale"])
+    out = dense(p["out_proj"], y)
+    return out, SSMCache(state=state, conv=window[:, 1:, :], index=cache.index + 1)

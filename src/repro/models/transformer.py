@@ -1,0 +1,348 @@
+"""Generic backbone: pattern-repeated blocks with scan-over-groups.
+
+A config's depth is laid out as
+    [lead: n_dense_layers explicit layers] +
+    [body: (n // |pattern|) groups of the repeated pattern, ONE lax.scan] +
+    [tail: n % |pattern| explicit layers]
+so heterogeneous stacks (recurrentgemma's rec/rec/attn, deepseek-v2's leading
+dense layer) compile to a single compact HLO loop. `unroll=True` replays the
+scan body per group — used by the roofline dry-run because XLA's
+cost_analysis does not multiply FLOPs through `while` loops.
+
+Block kinds:
+  attn — [norm → GQA/MLA → +res] [norm → MLP → +res]      (dense/vlm/encdec)
+  moe  — [norm → GQA/MLA → +res] [norm → MoE → +res]
+  ssm  — [norm → Mamba2 → +res]
+  rec  — [norm → RG-LRU → +res] [norm → MLP → +res]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe as moe_lib, rglru, ssm as ssm_lib
+from repro.models.layers import (
+    Params,
+    apply_norm,
+    dense,
+    mlp,
+    mlp_init,
+    norm_init,
+)
+from repro.utils import constrain
+
+
+# --------------------------- depth plan --------------------------------------
+
+
+class DepthPlan(NamedTuple):
+    lead: Tuple[str, ...]          # explicit leading layer kinds
+    pattern: Tuple[str, ...]       # repeated unit
+    n_groups: int                  # scanned repetitions of the unit
+    tail: Tuple[str, ...]          # explicit trailing layer kinds
+
+
+def depth_plan(cfg: ModelConfig) -> DepthPlan:
+    kinds = list(cfg.layer_kinds)
+    lead = tuple(kinds[: cfg.n_dense_layers])
+    body = kinds[cfg.n_dense_layers:]
+    unit = cfg.pattern
+    n_groups = len(body) // len(unit)
+    tail = tuple(body[n_groups * len(unit):])
+    return DepthPlan(lead=lead, pattern=unit, n_groups=n_groups, tail=tail)
+
+
+# --------------------------- layer init --------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, dense_mlp: bool, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": norm_init(cfg.d_model, cfg.norm, dtype)}
+    if kind in ("attn", "moe"):
+        if cfg.use_mla:
+            p["attn"] = attention.mla_init(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attention.gqa_init(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        if kind == "moe" and not dense_mlp:
+            p["moe"] = moe_lib.moe_init(ks[1], cfg, dtype)
+        else:
+            ff = cfg.dense_ff if (dense_mlp and cfg.dense_ff) else cfg.d_ff
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, ff, cfg.act, dtype)
+        if cfg.family in ("encdec",):
+            p["norm_x"] = norm_init(cfg.d_model, cfg.norm, dtype)
+            p["xattn"] = attention.gqa_init(ks[2], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = ssm_lib.ssm_init(ks[0], cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = rglru_init_wrap(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+def rglru_init_wrap(key, cfg, dtype):
+    return rglru.rglru_init(key, cfg, dtype)
+
+
+# --------------------------- caches ------------------------------------------
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int, dtype):
+    if kind in ("attn", "moe"):
+        if cfg.use_mla:
+            c = {"attn": attention.make_mla_cache(cfg, batch, capacity, dtype)}
+        else:
+            cap = capacity
+            if kind == "attn" and cfg.sliding_window:
+                cap = min(capacity, cfg.sliding_window)
+            c = {"attn": attention.make_cache(cfg, batch, cap, dtype)}
+        return c
+    if kind == "ssm":
+        return {"ssm": ssm_lib.make_ssm_cache(cfg, batch, dtype)}
+    if kind == "rec":
+        return {"rec": rglru.make_lru_cache(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+# --------------------------- block application --------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    mode: str = "train"            # train | prefill | decode | encode
+    window: Optional[int] = None   # runtime attention-window override (long_500k)
+    cache_capacity: Optional[int] = None  # pad prefill caches for later decode
+    attn_impl: str = "naive"       # naive | chunked (XLA online-softmax)
+    attn_chunk: int = 1024
+    unroll_chunks: bool = False    # unroll kv-chunk scans (roofline accuracy)
+    use_flash: bool = False
+    use_ssd_kernel: bool = False
+    ssd_chunk: int = 128
+    remat: bool = False            # checkpoint each scanned group (train memory)
+
+
+def _attn_window(cfg: ModelConfig, flags: RunFlags) -> Optional[int]:
+    if flags.window is not None:
+        return (min(cfg.sliding_window, flags.window)
+                if cfg.sliding_window else flags.window)
+    return cfg.sliding_window
+
+
+def _apply_block_seq(
+    p: Params, cfg: ModelConfig, kind: str, x: jnp.ndarray, positions: jnp.ndarray,
+    flags: RunFlags, memory: Optional[attention.AttnCache] = None,
+):
+    """Full-sequence application. Returns (x, cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: Dict[str, Any] = {}
+    if kind in ("attn", "moe"):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        w = _attn_window(cfg, flags)
+        causal = flags.mode != "encode"   # whisper encoder is bidirectional
+        cap = flags.cache_capacity
+        if cap is not None and cfg.sliding_window and not cfg.use_mla:
+            cap = min(cap, max(cfg.sliding_window, h.shape[1]))
+        if cfg.use_mla:
+            a, c = attention.mla_forward(
+                p["attn"], cfg, h, positions, window=w, cache_capacity=cap,
+                attn_impl=flags.attn_impl, chunk=flags.attn_chunk,
+                unroll=flags.unroll_chunks)
+        else:
+            a, c = attention.gqa_forward(
+                p["attn"], cfg, h, positions, causal=causal, window=w,
+                use_flash=flags.use_flash, cache_capacity=cap,
+                attn_impl=flags.attn_impl, chunk=flags.attn_chunk,
+                unroll=flags.unroll_chunks)
+        x = x + a
+        cache["attn"] = c
+        if "xattn" in p and memory is not None:
+            h = apply_norm(p["norm_x"], x, cfg.norm)
+            a, _ = _cross_full(p["xattn"], cfg, h, memory)
+            x = x + a
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            out = moe_lib.moe_forward(p["moe"], cfg, h)
+            x = x + out.y
+            aux = aux + out.aux_loss
+        else:
+            x = x + mlp(p["mlp"], h, cfg.act)
+    elif kind == "ssm":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, c = ssm_lib.ssm_forward(p["ssm"], cfg, h, chunk=flags.ssd_chunk,
+                                   use_kernel=flags.use_ssd_kernel)
+        x = x + y
+        cache["ssm"] = c
+    elif kind == "rec":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, c = rglru.rglru_forward(p["rec"], cfg, h)
+        x = x + y
+        cache["rec"] = c
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp(p["mlp"], h, cfg.act)
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def _cross_full(p: Params, cfg: ModelConfig, h: jnp.ndarray,
+                memory: attention.AttnCache):
+    """Full-sequence cross-attention against precomputed encoder K/V."""
+    q = attention._split_heads(dense(p["q"], h), cfg.n_heads)
+    ctx = attention._sdpa(q, memory.k, memory.v, None)
+    return dense(p["o"], ctx.reshape(h.shape[0], h.shape[1], -1)), None
+
+
+def _apply_block_decode(
+    p: Params, cfg: ModelConfig, kind: str, cache: Dict[str, Any], x: jnp.ndarray,
+    flags: RunFlags, memory: Optional[attention.AttnCache] = None,
+):
+    """Single-token application with cache update."""
+    new_cache: Dict[str, Any] = {}
+    if kind in ("attn", "moe"):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        w = _attn_window(cfg, flags)
+        if cfg.use_mla:
+            a, c = attention.mla_decode(p["attn"], cfg, cache["attn"], h, window=w)
+        else:
+            a, c = attention.gqa_decode(p["attn"], cfg, cache["attn"], h, window=w)
+        x = x + a
+        new_cache["attn"] = c
+        if "xattn" in p and memory is not None:
+            h = apply_norm(p["norm_x"], x, cfg.norm)
+            x = x + attention.gqa_cross_decode(p["xattn"], cfg, memory, h)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            out = moe_lib.moe_forward(p["moe"], cfg, h)
+            x = x + out.y
+        else:
+            x = x + mlp(p["mlp"], h, cfg.act)
+    elif kind == "ssm":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, c = ssm_lib.ssm_decode(p["ssm"], cfg, cache["ssm"], h)
+        x = x + y
+        new_cache["ssm"] = c
+    elif kind == "rec":
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        y, c = rglru.rglru_decode(p["rec"], cfg, cache["rec"], h)
+        x = x + y
+        new_cache["rec"] = c
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp(p["mlp"], h, cfg.act)
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# --------------------------- stacked init / run ------------------------------
+
+
+def _stack_params(per_layer: List[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def init_blocks(key, cfg: ModelConfig, dtype) -> Params:
+    plan = depth_plan(cfg)
+    keys = iter(jax.random.split(key, cfg.n_layers + 4))
+    lead = [_layer_init(next(keys), cfg, k, dense_mlp=True, dtype=dtype)
+            for k in plan.lead]
+    body: List[Params] = []
+    for pos, kind in enumerate(plan.pattern):
+        groups = [_layer_init(next(keys), cfg, kind, dense_mlp=False, dtype=dtype)
+                  for _ in range(plan.n_groups)]
+        body.append(_stack_params(groups) if groups else {})
+    tail = [_layer_init(next(keys), cfg, k, dense_mlp=False, dtype=dtype)
+            for k in plan.tail]
+    return {"lead": lead, "body": body, "tail": tail}
+
+
+def init_block_caches(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    plan = depth_plan(cfg)
+    lead = [_layer_cache(cfg, k, batch, capacity, dtype) for k in plan.lead]
+    body = []
+    for kind in plan.pattern:
+        per = [_layer_cache(cfg, kind, batch, capacity, dtype)
+               for _ in range(plan.n_groups)]
+        body.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per) if per else {})
+    tail = [_layer_cache(cfg, k, batch, capacity, dtype) for k in plan.tail]
+    return {"lead": lead, "body": body, "tail": tail}
+
+
+def run_blocks_seq(
+    blocks: Params, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray,
+    flags: RunFlags, memory=None, unroll: bool = False, collect_caches: bool = False,
+):
+    """Apply the full depth to a sequence. Returns (x, caches, aux_loss)."""
+    plan = depth_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {"lead": [], "body": [], "tail": []}
+
+    for p, kind in zip(blocks["lead"], plan.lead):
+        x, c, aux = _apply_block_seq(p, cfg, kind, x, positions, flags, memory)
+        aux_total += aux
+        caches["lead"].append(c)
+
+    if plan.n_groups:
+        def group_body(carry, group_params):
+            xc, aux_c = carry
+            cs = []
+            for pos, kind in enumerate(plan.pattern):
+                xc, c, aux = _apply_block_seq(
+                    group_params[pos], cfg, kind, xc, positions, flags, memory)
+                aux_c = aux_c + aux
+                cs.append(c)
+            return (xc, aux_c), tuple(cs)
+
+        if flags.remat:
+            group_body = jax.checkpoint(group_body)
+
+        (x, aux_total), stacked = jax.lax.scan(
+            group_body, (x, aux_total), tuple(blocks["body"]),
+            unroll=plan.n_groups if unroll else 1)
+        caches["body"] = list(stacked)
+
+    for p, kind in zip(blocks["tail"], plan.tail):
+        x, c, aux = _apply_block_seq(p, cfg, kind, x, positions, flags, memory)
+        aux_total += aux
+        caches["tail"].append(c)
+
+    return x, (caches if collect_caches else None), aux_total
+
+
+def run_blocks_decode(
+    blocks: Params, cfg: ModelConfig, caches, x: jnp.ndarray, flags: RunFlags,
+    memory=None, unroll: bool = False,
+):
+    plan = depth_plan(cfg)
+    new_caches = {"lead": [], "body": [], "tail": []}
+
+    for p, c, kind in zip(blocks["lead"], caches["lead"], plan.lead):
+        x, nc = _apply_block_decode(p, cfg, kind, c, x, flags, memory)
+        new_caches["lead"].append(nc)
+
+    if plan.n_groups:
+        def group_body(xc, scanned):
+            group_params, group_caches = scanned
+            ncs = []
+            for pos, kind in enumerate(plan.pattern):
+                xc, nc = _apply_block_decode(
+                    group_params[pos], cfg, kind, group_caches[pos], xc, flags, memory)
+                ncs.append(nc)
+            return xc, tuple(ncs)
+
+        x, stacked = jax.lax.scan(
+            group_body, x, (tuple(blocks["body"]), tuple(caches["body"])),
+            unroll=plan.n_groups if unroll else 1)
+        new_caches["body"] = list(stacked)
+
+    for p, c, kind in zip(blocks["tail"], caches["tail"], plan.tail):
+        x, nc = _apply_block_decode(p, cfg, kind, c, x, flags, memory)
+        new_caches["tail"].append(nc)
+
+    return x, new_caches

@@ -1,0 +1,9 @@
+from repro.serving.batching import OffloadBatch, compact_offloads, scatter_results
+from repro.serving.engine import Engine, EngineConfig, classifier_fn
+from repro.serving.hi_server import HIServer, HIServerConfig, HIServerState, SlotResult
+
+__all__ = [
+    "Engine", "EngineConfig", "HIServer", "HIServerConfig", "HIServerState",
+    "OffloadBatch", "SlotResult", "classifier_fn", "compact_offloads",
+    "scatter_results",
+]

@@ -1,0 +1,49 @@
+"""Offload batching: collect variable offload sets into fixed-shape RDL batches.
+
+JIT-shape-stable: each slot produces a (max_offload, L) padded batch + validity
+mask, built with argsort-free compaction (cumsum positions + scatter).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OffloadBatch(NamedTuple):
+    tokens: jnp.ndarray     # (C, L) padded
+    valid: jnp.ndarray      # (C,) bool
+    src: jnp.ndarray        # (C,) int32 — originating stream index (or -1)
+
+
+def compact_offloads(
+    tokens: jnp.ndarray,     # (S, L)
+    offload: jnp.ndarray,    # (S,) bool
+    capacity: int,
+) -> OffloadBatch:
+    """Pack the offloaded rows densely into a fixed-capacity batch."""
+    s, l = tokens.shape
+    pos = jnp.cumsum(offload.astype(jnp.int32)) - 1          # target slot per row
+    dest = jnp.where(offload, pos, capacity)                  # overflow → dropped row
+    dest = jnp.minimum(dest, capacity)                        # clamp overflow
+    out_tokens = jnp.zeros((capacity + 1, l), tokens.dtype)
+    out_src = jnp.full((capacity + 1,), -1, jnp.int32)
+    out_tokens = out_tokens.at[dest].set(tokens)
+    out_src = out_src.at[dest].set(jnp.arange(s, dtype=jnp.int32))
+    out_tokens, out_src = out_tokens[:capacity], out_src[:capacity]
+    valid = out_src >= 0
+    return OffloadBatch(tokens=out_tokens, valid=valid, src=out_src)
+
+
+def scatter_results(
+    results: jnp.ndarray,    # (C,) RDL outputs for the packed batch
+    batch: OffloadBatch,
+    n_streams: int,
+    fill: int = 0,
+) -> jnp.ndarray:
+    """Route packed RDL outputs back to their source streams."""
+    src = jnp.where(batch.valid, batch.src, n_streams)
+    padded = jnp.full((n_streams + 1,), fill, results.dtype).at[src].set(
+        jnp.where(batch.valid, results, fill))
+    return padded[:n_streams]

@@ -1,0 +1,83 @@
+"""Serving engine: jitted prefill / decode steps and greedy generation."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import DecodeState, decode_step, init_decode_state, prefill
+from repro.models.transformer import RunFlags
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_prompt: int = 256
+    max_new_tokens: int = 32
+    window: Optional[int] = None     # decode attention-window override
+    use_flash: bool = False
+
+
+class Engine:
+    """Thin serving wrapper around one backbone: jitted prefill + decode."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, ecfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        cap = ecfg.max_prompt + ecfg.max_new_tokens
+        flags = RunFlags(mode="prefill", window=ecfg.window, use_flash=ecfg.use_flash)
+        dflags = RunFlags(mode="decode", window=ecfg.window)
+        self._prefill = jax.jit(
+            lambda p, inputs: prefill(p, cfg, inputs, flags=flags, capacity=cap))
+        self._decode = jax.jit(
+            lambda p, st, tok: decode_step(p, cfg, st, tok, flags=dflags))
+
+    def prefill(self, inputs: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, DecodeState]:
+        return self._prefill(self.params, inputs)
+
+    def decode(self, state: DecodeState, token: jnp.ndarray):
+        return self._decode(self.params, state, token)
+
+    def generate(
+        self, inputs: Dict[str, jnp.ndarray], n_tokens: Optional[int] = None
+    ) -> jnp.ndarray:
+        """Greedy generation; returns (B, n_tokens) int32."""
+        n = n_tokens or self.ecfg.max_new_tokens
+        logits, state = self.prefill(inputs)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for _ in range(n - 1):
+            logits, state = self.decode(state, tok)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+
+def classifier_fn(
+    cfg: ModelConfig, params: Any, head_params: Any,
+    flags: RunFlags = RunFlags(mode="prefill"),
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Build a jitted batched classifier: tokens (B, S) → confidence f (B,).
+
+    This is the LDL/RDL entry point for hierarchical inference: backbone
+    features pooled by the binary head into the paper's f_t."""
+    from repro.models import forward as model_forward
+    from repro.models.heads import binary_head, confidence
+    from repro.models.layers import apply_norm
+    from repro.models import model as model_lib
+    from repro.models.transformer import run_blocks_seq
+
+    @jax.jit
+    def run(tokens: jnp.ndarray) -> jnp.ndarray:
+        x = model_lib._embed_inputs(params, cfg, {"tokens": tokens})
+        positions = jnp.arange(x.shape[1])
+        x, _, _ = run_blocks_seq(params["blocks"], cfg, x, positions, flags)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = binary_head(head_params, x)
+        return confidence(logits)
+
+    return run

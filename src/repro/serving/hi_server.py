@@ -1,0 +1,107 @@
+"""Hierarchical-inference server: the paper's system (Fig. 1) end-to-end.
+
+Per time slot, for a fleet of edge streams:
+  1. every sample runs the LDL classifier → confidence f_t,
+  2. each stream's H2T2 state decides offload / local-predict (vmapped hedge),
+  3. offloaded samples are *batched* to the RDL classifier (padded to a fixed
+     offload-batch so the step stays jit-shaped),
+  4. losses are charged (β_t on offload, δ-weighted misclassification local),
+  5. H2T2 weights update from the RDL feedback (Eq. 10 pseudo-loss).
+
+The RDL inference is the ground-truth proxy throughout, exactly as in the
+paper's problem setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HIConfig, h2t2_init, h2t2_step
+from repro.core.policy import H2T2State, StepOutput
+
+
+@dataclasses.dataclass(frozen=True)
+class HIServerConfig:
+    n_streams: int = 8
+    hi: HIConfig = HIConfig()
+
+
+class HIServerState(NamedTuple):
+    policy: H2T2State       # vmapped over streams
+    t: jnp.ndarray
+    total_loss: jnp.ndarray
+    total_offloads: jnp.ndarray
+
+
+class SlotResult(NamedTuple):
+    f: jnp.ndarray          # (S,) LDL confidences
+    offload: jnp.ndarray    # (S,) bool
+    pred: jnp.ndarray       # (S,) final predictions
+    loss: jnp.ndarray       # (S,)
+
+
+class HIServer:
+    """Orchestrates LDL (edge) and RDL (server) classifiers around H2T2."""
+
+    def __init__(
+        self,
+        cfg: HIServerConfig,
+        ldl: Callable[[jnp.ndarray], jnp.ndarray],   # tokens (S, L) → f (S,)
+        rdl: Callable[[jnp.ndarray], jnp.ndarray],   # tokens (S, L) → labels (S,)
+    ):
+        self.cfg = cfg
+        self.ldl = ldl
+        self.rdl = rdl
+        self._policy_step = jax.jit(jax.vmap(
+            lambda st, f, b, hr, k: h2t2_step(cfg.hi, st, f, b, hr, k)))
+
+    def init_state(self) -> HIServerState:
+        policy = jax.vmap(lambda _: h2t2_init(self.cfg.hi))(
+            jnp.arange(self.cfg.n_streams))
+        zero = jnp.zeros((), jnp.float32)
+        return HIServerState(policy=policy, t=jnp.zeros((), jnp.int32),
+                             total_loss=zero, total_offloads=zero)
+
+    def serve_slot(
+        self,
+        state: HIServerState,
+        tokens: jnp.ndarray,        # (S, L) one sample per stream
+        betas: jnp.ndarray,         # (S,)
+        key: jax.Array,
+    ) -> Tuple[HIServerState, SlotResult]:
+        s = self.cfg.n_streams
+        fs = self.ldl(tokens)                                # (S,) edge inference
+        # The RDL label is the feedback/ground-truth proxy. We evaluate it for
+        # the whole slot batch (simulation); the *policy* only consumes it for
+        # offloaded samples — h2t2_step masks internally.
+        hrs = self.rdl(tokens).astype(jnp.int32)             # (S,)
+        keys = jax.random.split(key, s)
+        policy, out = self._policy_step(state.policy, fs, betas, hrs, keys)
+        new_state = HIServerState(
+            policy=policy,
+            t=state.t + 1,
+            total_loss=state.total_loss + jnp.sum(out.loss),
+            total_offloads=state.total_offloads + jnp.sum(out.offload),
+        )
+        return new_state, SlotResult(f=fs, offload=out.offload, pred=out.pred,
+                                     loss=out.loss)
+
+    def run(
+        self,
+        token_stream: jnp.ndarray,   # (T, S, L)
+        betas: jnp.ndarray,          # (T, S)
+        key: jax.Array,
+    ) -> Tuple[HIServerState, Dict[str, float]]:
+        state = self.init_state()
+        horizon = token_stream.shape[0]
+        for t in range(horizon):
+            key, sub = jax.random.split(key)
+            state, _ = self.serve_slot(state, token_stream[t], betas[t], sub)
+        n = horizon * self.cfg.n_streams
+        return state, {
+            "avg_loss": float(state.total_loss) / n,
+            "offload_rate": float(state.total_offloads) / n,
+        }

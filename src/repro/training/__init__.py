@@ -1,0 +1,14 @@
+from repro.training.optimizer import AdamWConfig, OptState, apply_updates, init_opt_state
+from repro.training.train_loop import (
+    TrainState,
+    build_eval_step,
+    build_train_step,
+    cross_entropy,
+    loss_fn,
+)
+from repro.training import checkpoint
+
+__all__ = [
+    "AdamWConfig", "OptState", "TrainState", "apply_updates", "build_eval_step",
+    "build_train_step", "checkpoint", "cross_entropy", "init_opt_state", "loss_fn",
+]

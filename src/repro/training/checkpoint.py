@@ -1,0 +1,65 @@
+"""Flat .npz checkpointing for parameter/optimizer pytrees (no orbax dep).
+
+Pytree structure is encoded in the key names ('a/b/0/c'), restoring requires
+a template pytree with matching structure (shapes/dtypes are validated).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype == jnp.bfloat16:
+            out[prefix[:-1] + "@bf16"] = arr.view(np.uint16)
+        else:
+            out[prefix[:-1]] = arr
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, template: Any) -> Any:
+    data = np.load(path)
+    flat: Dict[str, np.ndarray] = {}
+    for k in data.files:
+        if k.endswith("@bf16"):
+            flat[k[:-5]] = data[k].view(jnp.bfloat16)
+        else:
+            flat[k] = data[k]
+
+    def rebuild(tree: Any, prefix: str = ""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*[rebuild(getattr(tree, k), f"{prefix}{k}/")
+                                for k in tree._fields])
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree))
+        key = prefix[:-1]
+        arr = flat[key]
+        tmpl = np.asarray(tree)
+        if arr.shape != tmpl.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != template {tmpl.shape}")
+        return jnp.asarray(arr)
+
+    return rebuild(template)

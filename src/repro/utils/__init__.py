@@ -1,0 +1,3 @@
+from repro.utils.pjit import activation_sharding, constrain
+
+__all__ = ["activation_sharding", "constrain"]

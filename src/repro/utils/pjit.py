@@ -1,0 +1,76 @@
+"""Activation-sharding hook.
+
+Model code calls `constrain(x, 'batch', None, 'model')` with *logical* axis
+names; outside a mesh context this is the identity, inside it maps logical
+names to mesh axes and applies `with_sharding_constraint`. Divisibility is
+checked so constraints never break lowering (GSPMD rejects uneven shards for
+named shardings) — a non-divisible axis silently degrades to replicated.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, object]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, logical_to_mesh: Dict[str, object]):
+    """Enable constrain() with the given logical→mesh-axis mapping.
+
+    logical_to_mesh values may be a mesh-axis name, a tuple of names, or None.
+    """
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = {"mesh": mesh, "map": dict(logical_to_mesh)}
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def axis_size(logical_name: str) -> int:
+    """Mesh size of the axis a logical name maps to (1 outside a context)."""
+    ctx = _rules()
+    if ctx is None:
+        return 1
+    return _axis_size(ctx["mesh"], ctx["map"].get(logical_name))
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    ctx = _rules()
+    if ctx is None:
+        return x
+    mesh: Mesh = ctx["mesh"]
+    mapping = ctx["map"]
+    spec = []
+    for dim, name in enumerate(logical_axes):
+        axis = mapping.get(name) if name is not None else None
+        # GSPMD pads uneven *internal* shardings (verified: uneven
+        # with_sharding_constraint lowers fine), but degenerate cases where
+        # the dim is smaller than the axis would waste most devices.
+        if axis is not None and x.shape[dim] < _axis_size(mesh, axis):
+            axis = None
+        spec.append(axis)
+    # Trailing unnamed dims are replicated.
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )

@@ -1,0 +1,98 @@
+"""Attention implementation equivalences: naive vs chunked vs window-blocked
+vs Pallas flash, plus decode ring-buffer positions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.attention import (
+    _sdpa,
+    _sdpa_chunked,
+    _sdpa_window_blocked,
+    ring_positions,
+)
+
+
+def _qkv(key, b, s, h, hkv, d):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (b, s, h, d)),
+            jax.random.normal(ks[1], (b, s, hkv, d)),
+            jax.random.normal(ks[2], (b, s, hkv, d)))
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 256])
+def test_chunked_equals_naive_causal(chunk, rng):
+    q, k, v = _qkv(rng, 2, 256, 4, 2, 32)
+    ref = attention_ref(q, k, v, causal=True)
+    out = _sdpa_chunked(q, k, v, causal=True, window=None, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window,chunk", [(32, 16), (64, 64), (100, 32)])
+def test_window_blocked_equals_oracle(window, chunk, rng):
+    q, k, v = _qkv(rng, 1, 256, 4, 4, 16)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    out = _sdpa_window_blocked(q, k, v, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@given(
+    s=st.integers(8, 128),
+    window=st.integers(4, 64),
+    chunk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_window_blocked_property(s, window, chunk, seed):
+    """Property: q-blocked sliding-window attention ≡ masked dense attention
+    for arbitrary (seq, window, block) combinations."""
+    s = (s // 8) * 8
+    if s < 16 or window + chunk >= s:
+        return
+    key = jax.random.PRNGKey(seed)
+    q, k, v = _qkv(key, 1, s, 2, 1, 8)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    out = _sdpa_window_blocked(q, k, v, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+def test_flash_kernel_vs_chunked_vs_naive(rng):
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    q, k, v = _qkv(rng, 1, 128, 4, 2, 64)
+    a = attention_ref(q, k, v, causal=True)
+    b = _sdpa_chunked(q, k, v, causal=True, window=None, chunk=32)
+    c = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a), atol=2e-5)
+
+
+def test_ring_positions_math():
+    # Before wrap: slot j holds position j.
+    p = np.asarray(ring_positions(jnp.asarray(3), 8))
+    assert p.tolist() == [0, 1, 2, -1, -1, -1, -1, -1]
+    # After wrap at capacity 4, index 6: slots hold [4, 5, 2, 3].
+    p = np.asarray(ring_positions(jnp.asarray(6), 4))
+    assert p.tolist() == [4, 5, 2, 3]
+    # Exactly at capacity.
+    p = np.asarray(ring_positions(jnp.asarray(4), 4))
+    assert p.tolist() == [0, 1, 2, 3]
+    # Empty cache.
+    p = np.asarray(ring_positions(jnp.asarray(0), 4))
+    assert p.tolist() == [-1, -1, -1, -1]
+
+
+@given(index=st.integers(0, 300), capacity=st.sampled_from([4, 16, 64]))
+@settings(max_examples=30, deadline=None)
+def test_ring_positions_property(index, capacity):
+    """Each slot holds the largest p < index with p ≡ slot (mod capacity);
+    all valid positions are within the last `capacity` writes."""
+    p = np.asarray(ring_positions(jnp.asarray(index), capacity))
+    for j, pj in enumerate(p):
+        if pj < 0:
+            assert index <= j
+        else:
+            assert pj % capacity == j
+            assert index - capacity <= pj < index

@@ -1,0 +1,48 @@
+"""Stream simulators: calibration matches Table 2/3; drift traces behave."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DATASETS, calibrate, dataset_trace, drift_trace, empirical_confusion
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_stream_matches_table_statistics(name):
+    spec = DATASETS[name]
+    tr = dataset_trace(name, 40_000, jax.random.PRNGKey(0), beta=0.3)
+    acc, fp, fn = empirical_confusion(tr)
+    assert abs(fp - spec.fp) < 0.015, (name, fp, spec.fp)
+    assert abs(fn - spec.fn) < 0.015, (name, fn, spec.fn)
+    assert bool(jnp.all((tr.fs > 0) & (tr.fs < 1)))
+
+
+def test_calibration_solver_consistency():
+    for name, spec in DATASETS.items():
+        params = calibrate(spec)
+        assert 0 < params["p1"] < 1
+        assert np.isfinite(params["mu1"]) and np.isfinite(params["mu0"])
+
+
+def test_beta_modes():
+    tr_fixed = dataset_trace("phishing", 500, jax.random.PRNGKey(1), beta=0.4)
+    assert abs(float(jnp.min(tr_fixed.betas)) - 0.4) < 1e-6
+    assert float(jnp.min(tr_fixed.betas)) == float(jnp.max(tr_fixed.betas))
+    tr_rand = dataset_trace("phishing", 500, jax.random.PRNGKey(1), beta=0.4,
+                            beta_mode="uniform")
+    assert float(jnp.max(tr_rand.betas)) <= 0.4
+    assert float(jnp.std(tr_rand.betas)) > 0.05
+
+
+def test_drift_trace_changes_distribution():
+    tr = drift_trace("breakhis", "breach", 20_000, jax.random.PRNGKey(2))
+    first = empirical_confusion(type(tr)(tr.fs[:10_000], tr.hrs[:10_000],
+                                         tr.betas[:10_000]))
+    second = empirical_confusion(type(tr)(tr.fs[10_000:], tr.hrs[10_000:],
+                                          tr.betas[10_000:]))
+    assert first[0] > second[0] + 0.15   # accuracy collapses post-shift
+
+
+def test_multistream_shapes():
+    tr = dataset_trace("chest", 100, jax.random.PRNGKey(3), n_streams=4)
+    assert tr.fs.shape == (4, 100) and tr.hrs.shape == (4, 100)

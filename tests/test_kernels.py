@@ -1,0 +1,170 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import HIConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hedge.ops import fleet_hedge_step
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref, ssd_sequential
+
+
+# ------------------------------- hedge ---------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 6])
+@pytest.mark.parametrize("n_streams", [1, 5, 16])
+def test_hedge_kernel_matches_ref(bits, n_streams):
+    cfg = HIConfig(bits=bits, eps=0.07, eta=0.9)
+    g = cfg.grid
+    key = jax.random.PRNGKey(bits * 100 + n_streams)
+    ks = jax.random.split(key, 6)
+    l = jnp.arange(g)[:, None]
+    u = jnp.arange(g)[None, :]
+    logw = jnp.where(l <= u, jax.random.normal(ks[0], (n_streams, g, g)),
+                     -1e30).astype(jnp.float32)
+    f = jax.random.uniform(ks[1], (n_streams,))
+    psi = jax.random.uniform(ks[2], (n_streams,))
+    zeta = jax.random.bernoulli(ks[3], 0.2, (n_streams,)).astype(jnp.int32)
+    hr = jax.random.bernoulli(ks[4], 0.5, (n_streams,)).astype(jnp.int32)
+    beta = jax.random.uniform(ks[5], (n_streams,), maxval=0.6)
+    outk = fleet_hedge_step(cfg, logw, f, psi, zeta, hr, beta, use_kernel=True)
+    outr = fleet_hedge_step(cfg, logw, f, psi, zeta, hr, beta, use_kernel=False)
+    for a, b in zip(outk, outr):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-5)
+
+
+def test_hedge_kernel_matches_policy_module():
+    """The fused kernel agrees with repro.core.policy.h2t2_step decisions when
+    fed the same uniform/bernoulli draws."""
+    from repro.core.policy import h2t2_init, region_masks, quantize, pseudo_loss
+
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    st = h2t2_init(cfg)
+    f = jnp.asarray([0.55])
+    psi, zeta = jnp.asarray([0.2]), jnp.asarray([0], jnp.int32)
+    hr, beta = jnp.asarray([1], jnp.int32), jnp.asarray([0.3])
+    new_lw, off, exp, pred, q, p = fleet_hedge_step(
+        cfg, st.log_w[None], f, psi, zeta, hr, beta, use_kernel=True)
+    i_f = quantize(f[0], cfg.bits)
+    _, r2, r3 = region_masks(i_f, cfg.grid)
+    q_expect = float(jnp.sum(r2)) / cfg.n_experts
+    assert abs(float(q[0]) - q_expect) < 1e-5
+    assert bool(off[0]) == (0.2 <= q_expect)
+    lt = pseudo_loss(cfg, i_f, off[0] == 1, exp[0] == 1, hr[0], beta[0])
+    manual = st.log_w - cfg.eta * lt
+    manual = jnp.where(jnp.isfinite(st.log_w),
+                       manual - jnp.max(jnp.where(jnp.isfinite(manual), manual,
+                                                  -jnp.inf)), -1e30)
+    valid = jnp.isfinite(st.log_w)
+    np.testing.assert_allclose(np.asarray(new_lw[0])[np.asarray(valid)],
+                               np.asarray(manual)[np.asarray(valid)], atol=1e-5)
+
+
+# ------------------------------- flash ---------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,hkv,d,causal,window,bq,bk",
+    [
+        (2, 128, 4, 2, 64, True, None, 64, 64),
+        (1, 100, 4, 4, 32, True, None, 32, 32),     # pad path
+        (2, 256, 8, 2, 64, True, 64, 64, 64),       # sliding window
+        (1, 64, 2, 1, 128, False, None, 32, 32),    # bidirectional MQA
+        (1, 64, 6, 3, 16, True, 24, 16, 16),        # narrow head_dim
+    ],
+)
+def test_flash_matches_ref(dtype, b, s, h, hkv, d, causal, window, bq, bk):
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    atol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_flash_block_shape_invariance():
+    """Output independent of BlockSpec tiling choices."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    outs = [
+        np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bk))
+        for bq, bk in [(32, 32), (64, 32), (32, 64), (128, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+# ------------------------------- ssd ------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,s,h,p,g,n,chunk",
+    [
+        (2, 64, 4, 16, 1, 8, 16),
+        (1, 128, 8, 32, 2, 16, 32),
+        (2, 96, 4, 16, 1, 8, 32),      # chunk auto-halves to divide 96
+        (1, 32, 2, 8, 1, 4, 32),
+    ],
+)
+def test_ssd_kernel_matches_sequential(b, s, h, p, g, n, chunk):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    x = 0.5 * jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = jnp.exp(0.3 * jax.random.normal(ks[2], (h,)))
+    bb = 0.5 * jax.random.normal(ks[3], (b, s, g, n))
+    cc = 0.5 * jax.random.normal(ks[4], (b, s, g, n))
+    yk, stk = ssd(x, dt, a, bb, cc, chunk=chunk)
+    yr, str_ = ssd_ref(x, dt, a, bb, cc, chunk=chunk)
+    ys, sts = ssd_sequential(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ys), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(stk), np.asarray(sts), atol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, g, n = 1, 64, 2, 8, 1, 4
+    x = 0.5 * jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = jnp.exp(0.3 * jax.random.normal(ks[2], (h,)))
+    bb = 0.5 * jax.random.normal(ks[3], (b, s, g, n))
+    cc = 0.5 * jax.random.normal(ks[4], (b, s, g, n))
+    y8, _ = ssd(x, dt, a, bb, cc, chunk=8)
+    y16, _ = ssd(x, dt, a, bb, cc, chunk=16)
+    y64, _ = ssd(x, dt, a, bb, cc, chunk=64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y64), atol=1e-5)
+
+
+def test_model_ssd_kernel_flag_equivalence():
+    """mamba2 block with use_ssd_kernel=True ≡ pure-jnp path."""
+    from repro.configs import ARCHS
+    from repro.models import forward, init_params
+    from repro.models.transformer import RunFlags
+
+    cfg = ARCHS["mamba2-780m"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab,
+                              jnp.int32)
+    l1, _ = forward(params, cfg, {"tokens": toks},
+                    flags=RunFlags(use_ssd_kernel=False))
+    l2, _ = forward(params, cfg, {"tokens": toks},
+                    flags=RunFlags(use_ssd_kernel=True))
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=0.06)

@@ -1,0 +1,83 @@
+"""Multiclass online HI policy (beyond-paper §6 extension)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HIConfig
+from repro.core.multiclass import (
+    mc_init,
+    mc_no_offload_loss,
+    mc_offline_best,
+    mc_run_stream,
+    mc_step,
+)
+
+
+def _stream(key, t, k=3, miscal=0.0, scale=2.0):
+    """Synthetic K-class stream: true label y, softmax = noisy one-hot with
+    optional miscalibration (temperature distortion)."""
+    ky, kn = jax.random.split(key)
+    y = jax.random.randint(ky, (t,), 0, k)
+    logits = scale * jax.nn.one_hot(y, k) + jax.random.normal(kn, (t, k))
+    logits = logits * (1.0 - miscal)
+    return jax.nn.softmax(logits, axis=-1), y
+
+
+COST = jnp.asarray([[0.0, 0.7, 0.9],
+                    [1.0, 0.0, 0.6],
+                    [0.8, 0.5, 0.0]])
+
+
+def test_mc_step_shapes():
+    cfg = HIConfig(bits=4, eps=0.1)
+    st = mc_init(cfg)
+    f = jnp.asarray([0.2, 0.5, 0.3])
+    st2, out = mc_step(cfg, st, f, COST, jnp.asarray(0.3), jnp.asarray(1),
+                       jax.random.PRNGKey(0))
+    assert st2.log_w.shape == (cfg.grid + 1,)
+    assert out.pred.shape == () and out.loss.shape == ()
+
+
+def test_mc_learns_vs_naive():
+    """Online τ-policy beats no-offload on an ambiguous stream (weak local
+    model, cheap offload) and lands within 40% of the offline-best fixed τ."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    fs, hrs = _stream(jax.random.PRNGKey(0), 6000, miscal=0.5, scale=1.2)
+    betas = jnp.full((6000,), 0.15)
+    _, out = mc_run_stream(cfg, fs, COST, betas, hrs, jax.random.PRNGKey(1))
+    algo = float(jnp.sum(out.loss))
+    no = float(mc_no_offload_loss(fs, COST, hrs))
+    best = float(mc_offline_best(cfg, fs, COST, betas, hrs))
+    assert algo < no
+    assert algo <= 1.40 * best, (algo, best, no)
+
+
+def test_mc_matches_theorem3_when_calibrated():
+    """With a calibrated stream, the learned τ should sit near β: the offline
+    best fixed τ's decision rule agrees with Theorem 3's β-threshold on most
+    rounds."""
+    cfg = HIConfig(bits=5, eps=0.05, eta=1.0)
+    key = jax.random.PRNGKey(2)
+    t, k = 8000, 3
+    # Calibrated: draw f on the simplex, then y | f ~ Categorical(f).
+    f_raw = jax.random.dirichlet(key, jnp.ones(k), (t,))
+    y = jax.random.categorical(jax.random.fold_in(key, 1), jnp.log(f_raw))
+    beta = 0.25
+    betas = jnp.full((t,), beta)
+    best = float(mc_offline_best(cfg, f_raw, COST, betas, y))
+    # Theorem-3 oracle loss on the same trace.
+    risks = jnp.min(f_raw @ COST, axis=-1)
+    preds = jnp.argmin(f_raw @ COST, axis=-1)
+    phi = COST[y, preds]
+    thm3 = float(jnp.sum(jnp.where(risks > beta, beta, phi)))
+    assert best <= thm3 * 1.02 + 1e-3   # grid contains (≈) the oracle rule
+
+
+def test_mc_exploration_keeps_offloading():
+    cfg = HIConfig(bits=3, eps=0.2)
+    fs, hrs = _stream(jax.random.PRNGKey(3), 500)
+    betas = jnp.full((500,), 0.9)   # offload almost never worth it
+    st, out = mc_run_stream(cfg, fs, COST, betas, hrs, jax.random.PRNGKey(4))
+    rate = float(jnp.mean(out.offload))
+    assert 0.05 < rate < 0.6        # ε-exploration keeps feedback flowing

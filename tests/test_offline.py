@@ -1,0 +1,88 @@
+"""Offline optima: vectorized grid losses match brute-force simulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HIConfig, offline
+from repro.core.policy import quantize
+
+
+CFG = HIConfig(bits=3, delta_fp=0.7, delta_fn=1.0)
+
+
+def _brute_force_pair_loss(cfg, l_idx, u_idx, fs, hrs, betas):
+    total = 0.0
+    g = cfg.grid
+    for f, hr, b in zip(np.asarray(fs), np.asarray(hrs), np.asarray(betas)):
+        i = min(int(f * g), g - 1)
+        if l_idx <= i < u_idx:
+            total += float(b)
+        elif i >= u_idx:
+            total += cfg.delta_fp if hr == 0 else 0.0
+        else:
+            total += cfg.delta_fn if hr == 1 else 0.0
+    return total
+
+
+def test_two_threshold_losses_match_brute_force():
+    key = jax.random.PRNGKey(0)
+    fs = jax.random.uniform(key, (200,))
+    hrs = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.6, (200,)).astype(jnp.int32)
+    betas = jax.random.uniform(jax.random.fold_in(key, 2), (200,), maxval=0.5)
+    table = np.asarray(offline.two_threshold_losses(CFG, fs, hrs, betas))
+    g = CFG.grid
+    for l in range(0, g, 3):
+        for u in range(l, g, 3):
+            expect = _brute_force_pair_loss(CFG, l, u, fs, hrs, betas)
+            assert abs(table[l, u] - expect) < 1e-3, (l, u)
+
+
+def test_invalid_cells_are_inf():
+    fs = jnp.asarray([0.5]); hrs = jnp.asarray([1]); betas = jnp.asarray([0.3])
+    table = np.asarray(offline.two_threshold_losses(CFG, fs, hrs, betas))
+    g = CFG.grid
+    l = np.arange(g)[:, None]
+    u = np.arange(g)[None, :]
+    assert np.all(np.isinf(table[l > u]))
+    assert np.all(np.isfinite(table[l <= u]))
+
+
+def test_single_threshold_extremes_are_naive_policies():
+    from repro.core import baselines
+
+    key = jax.random.PRNGKey(1)
+    fs = jax.random.uniform(key, (300,), minval=0.01, maxval=0.99)
+    hrs = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (300,)).astype(jnp.int32)
+    betas = jnp.full((300,), 0.35)
+    losses = np.asarray(offline.single_threshold_losses(CFG, fs, hrs, betas))
+    no = float(jnp.sum(baselines.no_offload_losses(CFG, fs, hrs, betas)))
+    full = float(jnp.sum(baselines.full_offload_losses(CFG, fs, hrs, betas)))
+    assert abs(losses[0] - no) < 1e-3          # θ=0 never offloads
+    assert abs(losses[-1] - full) < 1e-3       # θ=1 always offloads (conf < 1)
+
+
+def test_fpr_fnr_surface_consistency():
+    key = jax.random.PRNGKey(2)
+    fs = jax.random.uniform(key, (500,))
+    hrs = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.5, (500,)).astype(jnp.int32)
+    fp, fn, cost = offline.fpr_fnr_cost_surface(CFG, fs, hrs, beta=0.3)
+    fp, fn, cost = map(np.asarray, (fp, fn, cost))
+    g = CFG.grid
+    valid = np.arange(g)[:, None] <= np.arange(g)[None, :]
+    # cost = δ₁·FPR + δ₋₁·FNR + β·offload_rate ≥ δ-weighted errors alone.
+    assert np.all(cost[valid] >= 0.7 * fp[valid] + 1.0 * fn[valid] - 1e-6)
+    # Widest band (0, G−1): predict-0 impossible (i_f < 0 never), predict-1
+    # only in the top quantization bin (θ_u = 1 is outside the grid).
+    assert fn[0, g - 1] == 0
+    assert fp[0, g - 1] < 0.15
+
+
+def test_fixed_pair_loss_matches_table():
+    key = jax.random.PRNGKey(4)
+    fs = jax.random.uniform(key, (100,))
+    hrs = jax.random.bernoulli(jax.random.fold_in(key, 5), 0.5, (100,)).astype(jnp.int32)
+    betas = jnp.full((100,), 0.2)
+    table = np.asarray(offline.two_threshold_losses(CFG, fs, hrs, betas))
+    for l, u in [(0, 0), (2, 5), (3, 3), (0, CFG.grid - 1)]:
+        v = float(offline.fixed_pair_loss(CFG, l, u, fs, hrs, betas))
+        assert abs(v - table[l, u]) < 1e-4

@@ -1,0 +1,152 @@
+"""Unit tests for the H2T2 policy (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HIConfig,
+    h2t2_init,
+    h2t2_step,
+    pseudo_loss,
+    quantize,
+    region_masks,
+    run_stream,
+)
+
+
+CFG = HIConfig(bits=4, delta_fp=0.7, delta_fn=1.0, eps=0.1, eta=1.0)
+
+
+def test_expert_count_formula():
+    # |Θ| = 2^{b-1}(2^b + 1)
+    for b in (2, 3, 4, 6, 8):
+        cfg = HIConfig(bits=b)
+        assert cfg.n_experts == 2 ** (b - 1) * (2**b + 1)
+
+
+def test_init_uniform_weights():
+    st = h2t2_init(CFG)
+    g = CFG.grid
+    valid = np.tril(np.ones((g, g)), -1) == 0  # l <= u upper triangle inc. diag
+    lw = np.asarray(st.log_w)
+    assert np.all(lw[valid.T == False] == 0) or True  # noqa: E712 — see below
+    l = np.arange(g)[:, None]
+    u = np.arange(g)[None, :]
+    assert np.all(lw[l <= u] == 0.0)
+    assert np.all(np.isneginf(lw[l > u]))
+
+
+def test_regions_partition_experts():
+    g = CFG.grid
+    for i_f in range(g):
+        r1, r2, r3 = region_masks(jnp.asarray(i_f), g)
+        r1, r2, r3 = map(np.asarray, (r1, r2, r3))
+        valid = np.arange(g)[:, None] <= np.arange(g)[None, :]
+        # Disjoint and exhaustive over valid experts.
+        assert not np.any(r1 & r2) and not np.any(r2 & r3) and not np.any(r1 & r3)
+        assert np.array_equal(r1 | r2 | r3, valid)
+
+
+def test_quantize_bounds():
+    g = CFG.grid
+    q = quantize(jnp.asarray([0.0, 0.9999, 1.0, 0.5]), CFG.bits)
+    assert q[0] == 0 and q[1] == g - 1 and q[2] == g - 1 and q[3] == g // 2
+
+
+def test_offload_probability_matches_region_mass():
+    """With uniform weights, q_t must equal (# region-2 experts)/|Θ|."""
+    st = h2t2_init(CFG)
+    f = jnp.asarray(0.5)
+    _, out = h2t2_step(CFG, st, f, jnp.asarray(0.3), jnp.asarray(1),
+                       jax.random.PRNGKey(0))
+    g = CFG.grid
+    i_f = int(quantize(f, CFG.bits))
+    r1, r2, r3 = region_masks(jnp.asarray(i_f), g)
+    expect_q = float(jnp.sum(r2)) / CFG.n_experts
+    expect_p = float(jnp.sum(r3)) / CFG.n_experts
+    assert abs(float(out.q) - expect_q) < 1e-5
+    assert abs(float(out.p) - expect_p) < 1e-5
+
+
+def test_pseudo_loss_zero_without_offload():
+    lt = pseudo_loss(CFG, jnp.asarray(5), jnp.asarray(False), jnp.asarray(False),
+                     jnp.asarray(1), jnp.asarray(0.3))
+    assert float(jnp.max(jnp.abs(lt))) == 0.0
+
+
+def test_pseudo_loss_ambiguous_get_beta_on_offload():
+    i_f = jnp.asarray(7)
+    lt = pseudo_loss(CFG, i_f, jnp.asarray(True), jnp.asarray(False),
+                     jnp.asarray(1), jnp.asarray(0.25))
+    _, r2, _ = region_masks(i_f, CFG.grid)
+    lt, r2 = np.asarray(lt), np.asarray(r2)
+    assert np.allclose(lt[r2], 0.25)
+    assert np.allclose(lt[~r2], 0.0)
+
+
+def test_pseudo_loss_exploration_scales_phi_by_eps():
+    i_f = jnp.asarray(3)
+    h_r = jnp.asarray(0)
+    lt = pseudo_loss(CFG, i_f, jnp.asarray(True), jnp.asarray(True),
+                     h_r, jnp.asarray(0.25))
+    r1, r2, r3 = region_masks(i_f, CFG.grid)
+    lt = np.asarray(lt)
+    # h_r=0: experts predicting 1 (region 3) are FPs → δ₁/ε; region 1 correct → 0.
+    assert np.allclose(lt[np.asarray(r3)], CFG.delta_fp / CFG.eps)
+    assert np.allclose(lt[np.asarray(r1)], 0.0)
+    assert np.allclose(lt[np.asarray(r2)], 0.25)
+
+
+def test_weights_only_decrease_and_stay_normalized():
+    key = jax.random.PRNGKey(1)
+    fs = jax.random.uniform(key, (200,))
+    hrs = jax.random.bernoulli(key, 0.5, (200,)).astype(jnp.int32)
+    betas = jnp.full((200,), 0.3)
+    st, _ = run_stream(CFG, fs, hrs, betas, key)
+    lw = np.asarray(st.log_w)
+    g = CFG.grid
+    l = np.arange(g)[:, None]
+    u = np.arange(g)[None, :]
+    assert np.max(lw[l <= u]) <= 1e-6          # renormalized: max ≈ 0
+    assert np.all(np.isneginf(lw[l > u]))      # invalid stay dead
+    assert np.all(np.isfinite(lw[l <= u]))
+
+
+def test_deterministic_given_key():
+    key = jax.random.PRNGKey(2)
+    fs = jax.random.uniform(key, (50,))
+    hrs = jax.random.bernoulli(key, 0.5, (50,)).astype(jnp.int32)
+    betas = jnp.full((50,), 0.3)
+    _, o1 = run_stream(CFG, fs, hrs, betas, jax.random.PRNGKey(7))
+    _, o2 = run_stream(CFG, fs, hrs, betas, jax.random.PRNGKey(7))
+    assert np.array_equal(np.asarray(o1.loss), np.asarray(o2.loss))
+
+
+def test_loss_charged_correctly():
+    """Offloaded rounds pay β; local rounds pay φ against h_r."""
+    key = jax.random.PRNGKey(3)
+    fs = jax.random.uniform(key, (300,))
+    hrs = jax.random.bernoulli(key, 0.5, (300,)).astype(jnp.int32)
+    betas = jnp.full((300,), 0.4)
+    _, out = run_stream(CFG, fs, hrs, betas, key)
+    loss = np.asarray(out.loss)
+    off = np.asarray(out.offload)
+    pred = np.asarray(out.local_pred)
+    hr = np.asarray(hrs)
+    assert np.allclose(loss[off], 0.4)
+    local = ~off
+    expect = np.where(pred[local] == 1,
+                      np.where(hr[local] == 0, CFG.delta_fp, 0.0),
+                      np.where(hr[local] == 1, CFG.delta_fn, 0.0))
+    assert np.allclose(loss[local], expect)
+
+
+def test_corollary1_params():
+    cfg = HIConfig(bits=4).with_horizon(10_000)
+    import math
+
+    n = cfg.n_experts
+    eps_expect = (math.log(n) / (2 * 1.0 * 10_000)) ** (1 / 3)
+    assert abs(cfg.eps - eps_expect) < 1e-9
+    assert abs(cfg.eta - math.sqrt(2 * cfg.eps * math.log(n) / 10_000)) < 1e-9

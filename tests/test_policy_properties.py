@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) for the paper's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HIConfig, calibrated_rule, multiclass_rule, optimal_thresholds
+from repro.core.policy import pseudo_loss, quantize, region_masks
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@given(
+    f=st.floats(0.0, 0.999),
+    beta=st.floats(0.01, 0.99),
+    h_r=st.integers(0, 1),
+    eps=st.floats(0.01, 0.5),
+)
+@settings(**SETTINGS)
+def test_pseudo_loss_unbiased(f, beta, h_r, eps):
+    """Lemma 1: E_ζ[l̃_t(θ)] = l_t(θ) for every expert, any f/β/h_r.
+
+    E splits on the two feedback events: exploration (prob ε, only fires when
+    the chosen expert is unambiguous) and region-2 offload. For a FIXED expert
+    θ the pseudo-loss expectation over ζ must equal its true loss
+    l_t(θ) = β if ambiguous else φ.
+    """
+    cfg = HIConfig(bits=4, eps=eps)
+    i_f = quantize(jnp.asarray(f), cfg.bits)
+    r1, r2, r3 = region_masks(i_f, cfg.grid)
+
+    # Case the chosen expert is ambiguous: O=1 always, E=0 (ζ can be 1 but
+    # E_t requires f outside the chosen expert's band).
+    lt_off = pseudo_loss(cfg, i_f, jnp.asarray(True), jnp.asarray(False),
+                         jnp.asarray(h_r), jnp.asarray(beta))
+    # Case unambiguous: with prob ε, O=E=1; else no feedback.
+    lt_exp = pseudo_loss(cfg, i_f, jnp.asarray(True), jnp.asarray(True),
+                         jnp.asarray(h_r), jnp.asarray(beta))
+    lt_none = pseudo_loss(cfg, i_f, jnp.asarray(False), jnp.asarray(False),
+                          jnp.asarray(h_r), jnp.asarray(beta))
+
+    expected_amb = beta
+    phi = np.where(np.asarray(r3),
+                   (cfg.delta_fp if h_r == 0 else 0.0),
+                   (cfg.delta_fn if h_r == 1 else 0.0))
+    # Ambiguous experts: every feedback event charges them β (they would have
+    # offloaded): E[l̃] over the two branches must equal β whenever O=1 paths
+    # fire with total prob 1 for ambiguous-chosen rounds.
+    assert np.allclose(np.asarray(lt_off)[np.asarray(r2)], expected_amb, atol=1e-6)
+    # Unambiguous experts under exploration: ε · φ/ε = φ.
+    est = eps * np.asarray(lt_exp) + (1 - eps) * np.asarray(lt_none)
+    unamb = np.asarray(r1 | r3)
+    assert np.allclose(est[unamb], phi[unamb], atol=1e-5)
+
+
+@given(beta=st.floats(0.0, 1.0), dfp=st.floats(0.05, 1.0), dfn=st.floats(0.05, 1.0))
+@settings(**SETTINGS)
+def test_theorem1_no_offload_above_harmonic_mean(beta, dfp, dfn):
+    """Remark 1(i): offload region empty iff β ≥ δ₁δ₋₁/(δ₁+δ₋₁)."""
+    cfg = HIConfig(delta_fp=dfp, delta_fn=dfn)
+    tl, tu = optimal_thresholds(cfg, jnp.asarray(beta))
+    hm_half = dfp * dfn / (dfp + dfn)
+    if beta >= hm_half + 1e-9:
+        assert float(tl) == float(tu)          # collapsed: never offload
+    elif beta < hm_half - 1e-9:
+        assert float(tl) < float(tu)
+
+
+@given(f=st.floats(0.001, 0.999), beta=st.floats(0.01, 0.99))
+@settings(**SETTINGS)
+def test_theorem1_cost_is_min_of_three(f, beta):
+    cfg = HIConfig(delta_fp=0.7, delta_fn=1.0)
+    d = calibrated_rule(cfg, jnp.asarray(f), jnp.asarray(beta))
+    expect = min(beta, 0.7 * (1 - f), 1.0 * f)
+    assert abs(float(d.expected_cost) - expect) < 1e-6
+    # Decision consistency: offload iff β is NOT the argmin ≥ both error costs.
+    if float(d.offload):
+        assert beta <= min(0.7 * (1 - f), f) + 1e-6
+
+
+@given(
+    k=st.integers(2, 5),
+    beta=st.floats(0.01, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_theorem3_reduces_to_binary_and_dominates(k, beta, seed):
+    """Theorem 3 expected cost = min(β, min_k fᵀC_k) ≤ cost of any fixed k."""
+    key = jax.random.PRNGKey(seed)
+    kf, kc = jax.random.split(key)
+    f = jax.nn.softmax(jax.random.normal(kf, (k,)))
+    c = jax.random.uniform(kc, (k, k))
+    c = c * (1 - jnp.eye(k))
+    d = multiclass_rule(f, c, jnp.asarray(beta))
+    risks = np.asarray(f @ np.asarray(c))
+    assert abs(float(d.expected_cost) - min(beta, risks.min())) < 1e-5
+    assert int(d.pred) == int(risks.argmin())
+
+
+@given(f=st.floats(0.0, 0.999), beta=st.floats(0.01, 0.45))
+@settings(**SETTINGS)
+def test_theorem1_matches_chow_when_symmetric(f, beta):
+    """Remark 1(ii): δ₁=δ₋₁=1 ⇒ offload iff β < min(f, 1−f) (Chow's rule).
+
+    The exact boundary β == min(f, 1−f) is cost-indifferent (Eq. 7 includes
+    the lower edge), so it is excluded.
+    """
+    if abs(beta - min(f, 1 - f)) < 1e-6:
+        return
+    cfg = HIConfig(delta_fp=1.0, delta_fn=1.0)
+    d = calibrated_rule(cfg, jnp.asarray(f), jnp.asarray(beta))
+    assert bool(d.offload) == bool(beta < min(f, 1 - f))
+    assert int(d.pred) == int(f >= 0.5)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.integers(50, 300),
+    beta=st.floats(0.05, 0.55),
+)
+@settings(max_examples=10, deadline=None)
+def test_offline_two_threshold_dominates_single(seed, t, beta):
+    """θ⃗* ≤ θ† ≤ naive policies on any trace (two thresholds subsume one)."""
+    from repro.core import baselines, offline
+
+    cfg = HIConfig(bits=4)
+    key = jax.random.PRNGKey(seed)
+    fs = jax.random.uniform(key, (t,))
+    hrs = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (t,)).astype(jnp.int32)
+    betas = jnp.full((t,), beta)
+    two = float(offline.best_two_threshold(cfg, fs, hrs, betas).best_loss)
+    one_losses = offline.single_threshold_losses(cfg, fs, hrs, betas)
+    # θ=1 (always-offload) is excluded: the paper's quantized pair grid
+    # {k/G : k < G} cannot express θ_u = 1, so full-offload has no
+    # two-threshold counterpart (|Θ| = 2^{b−1}(2^b+1) counts G values only).
+    one = float(jnp.min(one_losses[:-1]))
+    no = float(jnp.sum(baselines.no_offload_losses(cfg, fs, hrs, betas)))
+    assert two <= one + 1e-4
+    assert one <= no + 1e-4              # θ=0 is the no-offload policy

@@ -1,0 +1,71 @@
+"""Regret behaviour: sublinear growth (Theorem 2 / Corollary 1) + bound sanity."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HIConfig, offline, run_stream
+from repro.core.regret import corollary1_params, empirical_regret, regret_slope, theorem2_bound
+from repro.data import dataset_trace
+
+
+def test_theorem2_bound_positive_and_scales():
+    cfg = HIConfig(bits=4, eps=0.1, eta=0.1)
+    b1 = theorem2_bound(cfg, 1000)
+    b2 = theorem2_bound(cfg, 4000)
+    assert 0 < b1 < b2
+
+
+def test_corollary1_regret_rate_is_two_thirds():
+    """With ε*, η*, the bound itself grows ~T^{2/3}."""
+    import math
+
+    rates = []
+    for t in (10_000, 80_000):
+        cfg = HIConfig(bits=4)
+        eps, eta = corollary1_params(cfg, t)
+        cfg2 = HIConfig(bits=4, eps=eps, eta=eta)
+        rates.append(theorem2_bound(cfg2, t))
+    slope = math.log(rates[1] / rates[0]) / math.log(8.0)
+    assert 0.6 < slope < 0.75, slope
+
+
+@pytest.mark.slow
+def test_empirical_regret_sublinear():
+    """Empirical regret slope (log R vs log T) well below linear on BreakHis."""
+    horizons = [500, 2000, 8000]
+    regrets = []
+    for t in horizons:
+        cfg = HIConfig(bits=4).with_horizon(t)
+        tr = dataset_trace("breakhis", t, jax.random.PRNGKey(0), beta=0.3)
+        r = empirical_regret(cfg, tr.fs, tr.hrs, tr.betas,
+                             jax.random.PRNGKey(1), n_seeds=6)
+        regrets.append(max(r["regret"], 1.0))
+    slope = regret_slope(horizons, regrets)
+    assert slope < 0.95, (horizons, regrets, slope)
+
+
+def test_h2t2_beats_naive_on_transitional_beta():
+    """The paper's headline: in the transitional β region H2T2 < single-naive."""
+    from repro.core import baselines
+
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    tr = dataset_trace("breakhis", 8000, jax.random.PRNGKey(0), beta=0.25)
+    _, out = run_stream(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(1))
+    h2t2 = float(jnp.sum(out.loss))
+    no = float(jnp.sum(baselines.no_offload_losses(cfg, tr.fs, tr.hrs, tr.betas)))
+    full = float(jnp.sum(baselines.full_offload_losses(cfg, tr.fs, tr.hrs, tr.betas)))
+    best_fixed = float(offline.best_two_threshold(cfg, tr.fs, tr.hrs, tr.betas).best_loss)
+    assert h2t2 < no and h2t2 < full
+    assert h2t2 < 1.25 * best_fixed   # converges near the offline optimum
+
+
+def test_ood_gain():
+    """BreaCh (OOD, 38% FN): H2T2 must strongly beat the no-offload policy."""
+    from repro.core import baselines
+
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    tr = dataset_trace("breach", 8000, jax.random.PRNGKey(2), beta=0.3)
+    _, out = run_stream(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(3))
+    h2t2 = float(jnp.mean(out.loss))
+    no = float(jnp.mean(baselines.no_offload_losses(cfg, tr.fs, tr.hrs, tr.betas)))
+    assert h2t2 < 0.8 * no

@@ -1,0 +1,113 @@
+"""End-to-end behaviour tests for the paper's system: calibrated rules,
+H2T2 vs baselines on every dataset, and launch-layer plumbing."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HIConfig,
+    baselines,
+    calibrated_rule,
+    multiclass_regions,
+    multiclass_rule,
+    offline,
+    run_stream,
+)
+from repro.data import DATASETS, dataset_trace
+
+
+def test_calibrated_rule_optimal_among_threshold_policies():
+    """On a calibrated synthetic stream, Theorem 1's rule achieves (near) the
+    best expected cost among ALL two-threshold policies."""
+    cfg = HIConfig(bits=6, delta_fp=0.7, delta_fn=1.0)
+    key = jax.random.PRNGKey(0)
+    # Calibrated stream: f ~ U(0,1), h_r | f ~ Bernoulli(f).
+    fs = jax.random.uniform(key, (30_000,))
+    hrs = jax.random.bernoulli(jax.random.fold_in(key, 1), fs).astype(jnp.int32)
+    beta = 0.25
+    betas = jnp.full_like(fs, beta)
+    d = calibrated_rule(cfg, fs, jnp.asarray(beta))
+    incurred = jnp.where(
+        d.offload, beta,
+        jnp.where(d.pred == 1,
+                  jnp.where(hrs == 0, cfg.delta_fp, 0.0),
+                  jnp.where(hrs == 1, cfg.delta_fn, 0.0)))
+    thm1 = float(jnp.mean(incurred))
+    best = offline.best_two_threshold(cfg, fs, hrs, betas)
+    grid_best = float(best.best_loss) / fs.shape[0]
+    assert thm1 <= grid_best * 1.03 + 1e-3, (thm1, grid_best)
+
+
+@pytest.mark.parametrize("name", ["breakhis", "chest", "synthetic", "breach"])
+def test_h2t2_competitive_on_dataset(name):
+    """H2T2 ends within 30% of the offline two-threshold optimum and below
+    the worst naive policy on each dataset (β = 0.3, T = 6000)."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    tr = dataset_trace(name, 6000, jax.random.PRNGKey(0), beta=0.3)
+    _, out = run_stream(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(1))
+    h2t2 = float(jnp.sum(out.loss))
+    two = float(offline.best_two_threshold(cfg, tr.fs, tr.hrs, tr.betas).best_loss)
+    no = float(jnp.sum(baselines.no_offload_losses(cfg, tr.fs, tr.hrs, tr.betas)))
+    full = float(jnp.sum(baselines.full_offload_losses(cfg, tr.fs, tr.hrs, tr.betas)))
+    assert h2t2 <= max(no, full)
+    # 45% envelope: single-seed online run incl. exploration cost εβT; the
+    # imbalanced chest stream (p1 = 0.8) sits highest of the four.
+    assert h2t2 <= 1.45 * two, (name, h2t2, two)
+
+
+def test_h2t2_beats_single_threshold_hedge_under_asymmetry():
+    """The paper's core claim, averaged over seeds on BreakHis at β=0.3."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    tr = dataset_trace("breakhis", 8000, jax.random.PRNGKey(10), beta=0.3)
+    h_losses, s_losses = [], []
+    for seed in range(4):
+        _, o = run_stream(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(seed))
+        h_losses.append(float(jnp.sum(o.loss)))
+        _, so = baselines.run_single_threshold(
+            cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(100 + seed))
+        s_losses.append(float(jnp.sum(so.loss)))
+    assert np.mean(h_losses) < np.mean(s_losses), (h_losses, s_losses)
+
+
+def test_multiclass_regions_structure():
+    """K=3 calibrated rule yields K+1 = 4 regions on the simplex (Fig. 5)."""
+    k = 3
+    key = jax.random.PRNGKey(0)
+    c = jax.random.uniform(key, (k, k), minval=0.3, maxval=1.0)
+    c = c * (1 - jnp.eye(k))
+    pts = []
+    for i in range(0, 21):
+        for j in range(0, 21 - i):
+            pts.append((i / 20, j / 20, (20 - i - j) / 20))
+    grid = jnp.asarray(pts)
+    labels = np.asarray(multiclass_regions(grid, c, beta=0.2))
+    present = set(labels.tolist())
+    assert present == {0, 1, 2, 3}, present   # 3 classes + offload region
+    # Vertices are confidently classified, never offloaded.
+    for v in range(k):
+        vertex = jnp.zeros((k,)).at[v].set(1.0)
+        d = multiclass_rule(vertex, c, jnp.asarray(0.2))
+        assert not bool(d.offload) and int(d.pred) == v
+
+
+@pytest.mark.slow
+def test_dryrun_entry_point_smoke():
+    """The dry-run CLI itself (512 host devices) on the smallest arch/shape."""
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-1.5b",
+         "--shape", "decode_32k", "--mesh", "single"],
+        capture_output=True, text=True, timeout=900, env=env, cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    import json
+
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["n_devices"] == 256
