@@ -1,8 +1,9 @@
 """Fig. 10: average cost AND runtime vs quantization bits b.
 
 |Θ| = 2^{b−1}(2^b+1); runtime measured per H2T2 round (jit-compiled, CPU).
-Also benchmarks the fused Pallas hedge kernel (interpret mode) against the
-vmapped jnp path at each b — the kernel is the TPU fleet-serving variant."""
+Also benchmarks the fused Pallas hedge kernel — single-round (interpret mode)
+and the time-blocked multi-round variant — against the vmapped jnp path at
+each b; the kernel is the TPU fleet-serving variant."""
 from __future__ import annotations
 
 import time
@@ -12,12 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import avg_costs_all_policies, timed
-from repro.core import HIConfig, h2t2_init
+from repro.core import HIConfig, h2t2_init, run_fleet_fused
 from repro.data import dataset_trace
-from repro.kernels.hedge.ops import fleet_hedge_step
+from repro.kernels.hedge.ops import fleet_hedge_rounds, fleet_hedge_step
 
 
-def run(quick: bool = False) -> List[str]:
+def run(quick: bool = False, backend: str = "fused") -> List[str]:
     rows = []
     horizon = 1000 if quick else 5000
     bits_list = [2, 4] if quick else [2, 3, 4, 5, 6]
@@ -25,23 +26,31 @@ def run(quick: bool = False) -> List[str]:
         cfg = HIConfig(bits=b, eps=0.05, eta=1.0)
         t0 = time.perf_counter()
         costs = avg_costs_all_policies("breakhis", beta=0.3, horizon=horizon,
-                                       bits=b, seeds=2)
+                                       bits=b, seeds=2, backend=backend)
         wall = time.perf_counter() - t0
-        # Per-round policy-update latency (jit'd scan over the trace).
+        # Per-round policy-update latency of the selected engine (jit'd scan).
         from repro.core.policy import run_stream
 
         tr = dataset_trace("breakhis", horizon, jax.random.PRNGKey(0), beta=0.3)
-        f = jax.jit(lambda: run_stream(cfg, tr.fs, tr.hrs, tr.betas,
-                                       jax.random.PRNGKey(1))[1].loss)
+        if backend == "fused":
+            f = jax.jit(lambda: run_fleet_fused(
+                cfg, tr.fs[None], tr.hrs[None], tr.betas[None],
+                jax.random.PRNGKey(1))[1].loss)
+        else:
+            f = jax.jit(lambda: run_stream(cfg, tr.fs, tr.hrs, tr.betas,
+                                           jax.random.PRNGKey(1))[1].loss)
         us_round = timed(f) / horizon
         rows.append(
             f"fig10_bits{b}_cost,{us_round:.2f},"
-            f"h2t2={costs['h2t2']:.4f};n_experts={cfg.n_experts};wall_s={wall:.1f}")
-    # Fleet hedge kernel vs jnp reference (batched streams, one round).
+            f"h2t2={costs['h2t2']:.4f};n_experts={cfg.n_experts};"
+            f"wall_s={wall:.1f};backend={backend}")
+    # Fleet hedge kernel vs jnp reference (batched streams, one round + a
+    # TB=8 time block through the multi-round kernel).
     for b in bits_list:
         cfg = HIConfig(bits=b)
         g = cfg.grid
         s = 16 if quick else 64
+        tb = 8
         key = jax.random.PRNGKey(0)
         ks = jax.random.split(key, 6)
         l = jnp.arange(g)[:, None]
@@ -52,8 +61,16 @@ def run(quick: bool = False) -> List[str]:
                 jnp.full((s,), 0.3))
         us_k = timed(lambda *a: fleet_hedge_step(cfg, *a, use_kernel=True), *args)
         us_r = timed(lambda *a: fleet_hedge_step(cfg, *a, use_kernel=False), *args)
+        rargs = (logw,
+                 jax.random.uniform(ks[1], (s, tb)),
+                 jax.random.uniform(ks[2], (s, tb)),
+                 jnp.zeros((s, tb), jnp.int32), jnp.ones((s, tb), jnp.int32),
+                 jnp.full((s, tb), 0.3))
+        us_rounds = timed(
+            lambda *a: fleet_hedge_rounds(cfg, *a, use_kernel=True), *rargs)
         rows.append(f"fig10_bits{b}_hedge_kernel,{us_k:.1f},"
-                    f"jnp_ref_us={us_r:.1f};streams={s};interpret=True")
+                    f"jnp_ref_us={us_r:.1f};rounds_tb{tb}_us={us_rounds:.1f};"
+                    f"streams={s};interpret=True")
     return rows
 
 

@@ -1,19 +1,53 @@
 """Kernel microbenchmarks (CPU: interpret-mode correctness path; timings are
-for the jnp reference oracles, which are the XLA fallbacks on TPU too)."""
+for the jnp reference oracles, which are the XLA fallbacks on TPU too).
+
+The hedge-fleet section times the full H2T2 simulation engine under BOTH
+policy backends ("reference" vmapped scan vs "fused" kernel-backed scan,
+including the time-blocked multi-round variant) so the perf trajectory
+tracks the path serving actually runs."""
 from __future__ import annotations
 
+import functools
 from typing import List
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
+from repro.core import HIConfig, run_fleet, run_fleet_fused
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd.ref import ssd_ref
 
 
-def run(quick: bool = False) -> List[str]:
+def _hedge_fleet_rows(quick: bool) -> List[str]:
     rows = []
+    shapes = [(4, 16, 256)] if quick else [(4, 64, 1024), (5, 128, 1024)]
+    for bits, s, t in shapes:                            # (bits, streams, rounds)
+        cfg = HIConfig(bits=bits, eps=0.05, eta=1.0)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        fs = jax.random.uniform(ks[0], (s, t))
+        hrs = jax.random.bernoulli(ks[1], 0.5, (s, t)).astype(jnp.int32)
+        betas = jnp.full((s, t), 0.3)
+        key = jax.random.PRNGKey(1)
+        engines = {
+            "reference": jax.jit(lambda k, fn=functools.partial(
+                run_fleet, cfg, fs, hrs, betas): fn(k)[1].loss),
+            "fused": jax.jit(lambda k, fn=functools.partial(
+                run_fleet_fused, cfg, fs, hrs, betas): fn(k)[1].loss),
+            "fused_tb8": jax.jit(lambda k, fn=functools.partial(
+                run_fleet_fused, cfg, fs, hrs, betas,
+                time_block=8): fn(k)[1].loss),
+        }
+        for backend, fn in engines.items():
+            us = timed(fn, key, reps=3)
+            rows.append(
+                f"hedge_fleet_G{cfg.grid}_S{s}_T{t}_{backend},{us:.0f},"
+                f"us_per_round={us / t:.2f};backend={backend}")
+    return rows
+
+
+def run(quick: bool = False) -> List[str]:
+    rows = _hedge_fleet_rows(quick)
     key = jax.random.PRNGKey(0)
     # Attention oracle at serving-ish shapes.
     for (b, s, h, hkv, d) in ([(1, 256, 4, 2, 64)] if quick

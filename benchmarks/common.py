@@ -1,4 +1,11 @@
-"""Shared benchmark plumbing: policies run over calibrated dataset traces."""
+"""Shared benchmark plumbing: policies run over calibrated dataset traces.
+
+Every H2T2-running helper takes a `backend` switch ("fused" default):
+"fused" batches the seed runs as a fleet through `run_fleet_fused` (one
+kernel-backed scan), "reference" loops vmapped/scanned `h2t2_step`. The two
+consume identical randomness and produce identical costs — the switch only
+changes which engine the perf trajectory measures.
+"""
 from __future__ import annotations
 
 import time
@@ -7,18 +14,41 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core import HIConfig, baselines, offline, run_stream
+from repro.core import HIConfig, baselines, offline, run_fleet_fused, run_stream
 from repro.data import dataset_trace
 
 MANUSCRIPT_DATASETS = ["breakhis", "chest", "phishing", "synthetic", "breach"]
 APPENDIX_DATASETS = ["chestxray", "resnetdogs", "logisticdogs", "xract"]
 
 
+def h2t2_seed_losses(
+    cfg: HIConfig, fs, hrs, betas, seeds: int, seed0: int = 0,
+    backend: str = "fused",
+) -> List[float]:
+    """Cumulative H2T2 loss for PRNGKey(seed0)..PRNGKey(seed0+seeds-1).
+
+    backend="fused" runs all seeds as one fleet (seed i → stream i, same key
+    tree as the per-seed `run_stream` calls of the reference path).
+    """
+    if backend == "fused":
+        tile = lambda a: jnp.tile(a[None], (seeds, 1))
+        stream_keys = jnp.stack(
+            [jax.random.PRNGKey(seed0 + s) for s in range(seeds)])
+        _, o = run_fleet_fused(cfg, tile(fs), tile(hrs), tile(betas),
+                               stream_keys=stream_keys)
+        return [float(x) for x in jnp.sum(o.loss, axis=-1)]
+    return [
+        float(jnp.sum(run_stream(cfg, fs, hrs, betas,
+                                 jax.random.PRNGKey(seed0 + s))[1].loss))
+        for s in range(seeds)
+    ]
+
+
 def avg_costs_all_policies(
     name: str, beta: float, horizon: int = 10_000,
     delta_fp: float = 0.7, delta_fn: float = 1.0,
     bits: int = 4, eta: float = 1.0, eps: float = 0.05,
-    seeds: int = 3, seed0: int = 0,
+    seeds: int = 3, seed0: int = 0, backend: str = "fused",
 ) -> Dict[str, float]:
     """Average per-round cost of the paper's six §5 policies on one dataset."""
     cfg = HIConfig(bits=bits, delta_fp=delta_fp, delta_fn=delta_fn,
@@ -26,10 +56,10 @@ def avg_costs_all_policies(
     tr = dataset_trace(name, horizon, jax.random.PRNGKey(seed0 + 99), beta=beta)
     t = horizon
 
-    h2t2, single = [], []
+    h2t2 = [l / t for l in h2t2_seed_losses(cfg, tr.fs, tr.hrs, tr.betas,
+                                            seeds, backend=backend)]
+    single = []
     for s in range(seeds):
-        _, o = run_stream(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(s))
-        h2t2.append(float(jnp.sum(o.loss)) / t)
         _, so = baselines.run_single_threshold(
             cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(1000 + s))
         single.append(float(jnp.sum(so.loss)) / t)

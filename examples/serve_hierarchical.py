@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--slots", type=int, default=100)
     ap.add_argument("--seq", type=int, default=24)
     ap.add_argument("--beta", type=float, default=0.2)
+    ap.add_argument("--backend", default="fused",
+                    choices=("reference", "fused"),
+                    help="H2T2 policy engine (see serving.PolicyBackend)")
     args = ap.parse_args()
 
     vocab = 64
@@ -40,7 +43,8 @@ def main():
         return (jnp.sum(tokens == 7, axis=-1) % 2).astype(jnp.int32)
 
     hi = HIConfig(bits=4, delta_fp=0.7, delta_fn=1.0, eps=0.1, eta=1.0)
-    server = HIServer(HIServerConfig(n_streams=args.streams, hi=hi), ldl, rdl)
+    server = HIServer(HIServerConfig(n_streams=args.streams, hi=hi,
+                                     backend=args.backend), ldl, rdl)
 
     tokens = jax.random.randint(
         jax.random.PRNGKey(1), (args.slots, args.streams, args.seq), 0, vocab,

@@ -4,12 +4,16 @@ from repro.core.types import HIConfig, StreamSpec
 from repro.core.policy import (
     H2T2State,
     StepOutput,
+    draw_fleet_randomness,
+    fleet_init,
+    fleet_step_fused,
     h2t2_init,
     h2t2_step,
     pseudo_loss,
     quantize,
     region_masks,
     run_fleet,
+    run_fleet_fused,
     run_stream,
 )
 from repro.core.calibrated import (
@@ -24,8 +28,9 @@ from repro.core import baselines, multiclass, offline, regret
 
 __all__ = [
     "HIConfig", "StreamSpec", "H2T2State", "StepOutput",
+    "draw_fleet_randomness", "fleet_init", "fleet_step_fused",
     "h2t2_init", "h2t2_step", "pseudo_loss", "quantize", "region_masks",
-    "run_fleet", "run_stream",
+    "run_fleet", "run_fleet_fused", "run_stream",
     "CalibratedDecision", "calibrated_rule", "chow_rule",
     "multiclass_regions", "multiclass_rule", "optimal_thresholds",
     "baselines", "multiclass", "offline", "regret",

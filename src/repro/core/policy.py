@@ -201,3 +201,189 @@ def run_fleet(
     """vmap `run_stream` over S independent edge streams."""
     keys = jax.random.split(key, fs.shape[0])
     return jax.vmap(lambda f, h, b, k: run_stream(cfg, f, h, b, k))(fs, hrs, betas, keys)
+
+
+# --------------------------- fused fleet path --------------------------------
+#
+# The reference path above scans `h2t2_step` per stream and vmaps over the
+# fleet. The fused path below pre-draws all (ψ, ζ) randomness for the horizon
+# and drives a single lax.scan over time whose body is the batched
+# `fleet_hedge_step` (Pallas kernel on TPU, jnp oracle elsewhere). Same
+# pytrees in, same pytrees out; the randomness pre-draw mirrors the reference
+# key-split tree exactly, so both paths make sample-for-sample identical
+# decisions for the same key.
+
+
+def fleet_init(cfg: HIConfig, n_streams: int) -> H2T2State:
+    """`h2t2_init` batched over a fleet: every leaf gains a leading (S,) axis."""
+    return jax.vmap(lambda _: h2t2_init(cfg))(jnp.arange(n_streams))
+
+
+def draw_psi_zeta(keys: jnp.ndarray, eps: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The (ψ, ζ) draws `h2t2_step` makes from a batch of round keys.
+
+    This is THE key-consumption contract: every fused path must draw through
+    it (key → split → uniform(k₀), bernoulli(k₁, ε)) so decisions stay
+    bit-for-bit identical to the reference `h2t2_step`.
+    """
+    pz = jax.vmap(jax.random.split)(keys)                # (N, 2, 2)
+    psi = jax.vmap(jax.random.uniform)(pz[:, 0])
+    zeta = jax.vmap(lambda k: jax.random.bernoulli(k, eps))(pz[:, 1])
+    return psi, zeta
+
+
+def draw_fleet_randomness(
+    cfg: HIConfig,
+    key: Optional[jax.Array],
+    n_streams: int,
+    horizon: int,
+    stream_keys: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-draw the (ψ, ζ) used by every (stream, round), as (S, T) arrays.
+
+    Reproduces `run_fleet`'s key tree bit-for-bit: key → S stream keys → T
+    round keys each → `draw_psi_zeta`. Pass `stream_keys` (S, 2) to pin
+    per-stream keys directly (e.g. one PRNGKey per seed).
+    """
+    if stream_keys is None:
+        if key is None:
+            raise ValueError("draw_fleet_randomness needs `key` or `stream_keys`")
+        stream_keys = jax.random.split(key, n_streams)
+
+    def per_stream(sk):
+        return draw_psi_zeta(jax.random.split(sk, horizon), cfg.eps)
+
+    return jax.vmap(per_stream)(stream_keys)
+
+
+def _charge_losses(
+    cfg: HIConfig, offload: jnp.ndarray, local_pred: jnp.ndarray,
+    h_r: jnp.ndarray, beta: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Incurred loss and final prediction from the fused-step decisions."""
+    phi_local = jnp.where(
+        local_pred == 1,
+        jnp.where(h_r == 0, cfg.delta_fp, 0.0),
+        jnp.where(h_r == 1, cfg.delta_fn, 0.0),
+    )
+    loss = jnp.where(offload, beta, phi_local)
+    pred = jnp.where(offload, h_r.astype(jnp.int32), local_pred)
+    return loss, pred
+
+
+def fleet_step_fused(
+    cfg: HIConfig,
+    state: H2T2State,        # leaves batched over (S,)
+    f: jnp.ndarray,          # (S,)
+    psi: jnp.ndarray,        # (S,) pre-drawn uniforms
+    zeta: jnp.ndarray,       # (S,) pre-drawn bernoulli(ε)
+    h_r: jnp.ndarray,        # (S,)
+    beta: jnp.ndarray,       # (S,)
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[H2T2State, StepOutput]:
+    """One fleet round via the fused kernel; mirrors vmapped `h2t2_step`.
+
+    `use_kernel=None` auto-selects: compiled Pallas on TPU, jnp oracle
+    elsewhere — unless `interpret=True`, which forces the kernel in
+    interpret mode (the correctness-test path on CPU).
+    """
+    from repro.kernels.hedge.ops import fleet_hedge_step, kernel_available
+
+    if use_kernel is None:
+        use_kernel = kernel_available() or interpret is True
+    new_lw, off, exp_, lp, q, p = fleet_hedge_step(
+        cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
+        h_r.astype(jnp.int32), beta,
+        use_kernel=use_kernel, interpret=interpret)
+    offload = off.astype(bool)
+    explored = exp_.astype(bool)
+    loss, pred = _charge_losses(cfg, offload, lp, h_r, beta)
+    # Re-mask invalid cells to -inf so fused state is interchangeable with the
+    # reference representation (the kernel uses a -1e30 sentinel internally).
+    valid = _valid_mask(cfg.grid)[None]
+    log_w = jnp.where(valid, new_lw, -jnp.inf).astype(cfg.dtype)
+    new_state = H2T2State(
+        log_w=log_w,
+        t=state.t + 1,
+        n_offloads=state.n_offloads + offload.astype(jnp.int32),
+        n_explores=state.n_explores + explored.astype(jnp.int32),
+    )
+    return new_state, StepOutput(
+        offload=offload, pred=pred, local_pred=lp, loss=loss,
+        explored=explored, q=q, p=p,
+    )
+
+
+def run_fleet_fused(
+    cfg: HIConfig,
+    fs: jnp.ndarray,       # (S, T)
+    hrs: jnp.ndarray,      # (S, T)
+    betas: jnp.ndarray,    # (S, T)
+    key: Optional[jax.Array] = None,
+    state: Optional[H2T2State] = None,
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    time_block: int = 1,
+    stream_keys: Optional[jnp.ndarray] = None,
+) -> Tuple[H2T2State, StepOutput]:
+    """Kernel-backed `run_fleet`: scan over time of the batched fused step.
+
+    Produces the same (H2T2State, StepOutput) pytrees as `run_fleet` — leaves
+    batched (S,) / (S, T) — and, for the same `key`, the same decisions.
+    `time_block > 1` drives the multi-round kernel (`fleet_hedge_rounds`),
+    which keeps the expert grids in VMEM for `time_block` rounds per launch;
+    requires T % time_block == 0.
+    """
+    s, t = fs.shape
+    if state is None:
+        state = fleet_init(cfg, s)
+    psis, zetas = draw_fleet_randomness(cfg, key, s, t, stream_keys)
+
+    if time_block == 1:
+        def body(st, xs):
+            f, psi, zeta, hr, beta = xs
+            return fleet_step_fused(cfg, st, f, psi, zeta, hr, beta,
+                                    use_kernel=use_kernel, interpret=interpret)
+
+        final, outs = jax.lax.scan(
+            body, state, (fs.T, psis.T, zetas.T, hrs.T, betas.T))
+        return final, jax.tree_util.tree_map(
+            lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+    if t % time_block:
+        raise ValueError(f"horizon {t} not divisible by time_block {time_block}")
+    from repro.kernels.hedge.ops import fleet_hedge_rounds, kernel_available
+
+    if use_kernel is None:
+        use_kernel = kernel_available() or interpret is True
+    uk = use_kernel
+    n_blocks = t // time_block
+    # (S, T) → (n_blocks, S, TB) so scan iterates over time blocks.
+    blocked = lambda a: jnp.swapaxes(a.reshape(s, n_blocks, time_block), 0, 1)
+    xs = tuple(blocked(a) for a in (fs, psis, zetas, hrs, betas))
+    valid = _valid_mask(cfg.grid)[None]
+
+    def body(st, xs_):
+        f, psi, zeta, hr, beta = xs_                     # (S, TB) each
+        new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
+            cfg, st.log_w, f, psi, zeta.astype(jnp.int32),
+            hr.astype(jnp.int32), beta, use_kernel=uk, interpret=interpret)
+        offload = off.astype(bool)
+        explored = exp_.astype(bool)
+        loss, pred = _charge_losses(cfg, offload, lp, hr, beta)
+        new_state = H2T2State(
+            log_w=jnp.where(valid, new_lw, -jnp.inf).astype(cfg.dtype),
+            t=st.t + time_block,
+            n_offloads=st.n_offloads + jnp.sum(off, axis=1),
+            n_explores=st.n_explores + jnp.sum(exp_, axis=1),
+        )
+        return new_state, StepOutput(offload=offload, pred=pred,
+                                     local_pred=lp, loss=loss,
+                                     explored=explored, q=q, p=p)
+
+    final, outs = jax.lax.scan(body, state, xs)
+    # (n_blocks, S, TB) → (S, T)
+    unblock = lambda a: jnp.swapaxes(a, 0, 1).reshape(s, t)
+    return final, jax.tree_util.tree_map(unblock, outs)

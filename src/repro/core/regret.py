@@ -38,10 +38,22 @@ def empirical_regret(
     betas: jnp.ndarray,
     key: jax.Array,
     n_seeds: int = 8,
+    backend: str = "fused",
 ) -> Dict[str, float]:
-    """Mean cumulative H2T2 loss over seeds minus the offline best fixed θ⃗."""
+    """Mean cumulative H2T2 loss over seeds minus the offline best fixed θ⃗.
+
+    backend="fused" runs the seed batch as one kernel-backed fleet (seed i →
+    stream i with the same key `run_stream` would consume); "reference" vmaps
+    the per-stream scan. Identical losses either way.
+    """
     keys = jax.random.split(key, n_seeds)
-    _, outs = jax.vmap(lambda k: policy.run_stream(cfg, fs, hrs, betas, k))(keys)
+    if backend == "fused":
+        tile = lambda a: jnp.tile(a[None], (n_seeds, 1))
+        _, outs = policy.run_fleet_fused(cfg, tile(fs), tile(hrs), tile(betas),
+                                         stream_keys=keys)
+    else:
+        _, outs = jax.vmap(
+            lambda k: policy.run_stream(cfg, fs, hrs, betas, k))(keys)
     algo = float(jnp.mean(jnp.sum(outs.loss, axis=-1)))
     best = float(offline.best_two_threshold(cfg, fs, hrs, betas).best_loss)
     return {"algo_loss": algo, "best_fixed_loss": best, "regret": algo - best}

@@ -37,30 +37,15 @@ def _region_logsum(logw, mask):
     return m[..., 0, 0] + jnp.log(jnp.maximum(s, 1e-38))
 
 
-def hedge_step_kernel(
-    # inputs
-    log_w_ref, i_f_ref, psi_ref, zeta_ref, h_r_ref, beta_ref,
-    # outputs
-    new_log_w_ref, offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
-    *, grid_side: int, eta: float, eps: float, delta_fp: float, delta_fn: float,
-):
-    g = grid_side
-    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
-    i_f = i_f_ref[...]                                   # (SB,)
-    psi = psi_ref[...]
-    zeta = zeta_ref[...]
-    h_r = h_r_ref[...]
-    beta = beta_ref[...]
-
-    l_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 1)
-    u_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 2)
-    valid = l_idx <= u_idx
+def _round_body(logw, i_f, psi, zeta, h_r, beta, l_idx, u_idx, valid,
+                *, eta, eps, delta_fp, delta_fn, decay):
+    """One H2T2 round over a (SB, G, G) block; shared by the single-round and
+    multi-round kernels so the two stay step-for-step identical."""
     i_b = i_f[:, None, None]
     r2 = valid & (l_idx <= i_b) & (i_b < u_idx)          # ambiguous → offload
     r3 = valid & (u_idx <= i_b)                          # predict 1
-    r1 = valid & (i_b < l_idx)                           # predict 0
+    # region 1 (predict 0) is valid & ~r2 & ~r3; never materialized.
 
-    log_s1 = _region_logsum(logw, r1)
     log_s2 = _region_logsum(logw, r2)
     log_s3 = _region_logsum(logw, r3)
     log_tot = _region_logsum(logw, valid)
@@ -79,9 +64,31 @@ def hedge_step_kernel(
                     jnp.where(h_r[:, None, None] == 1, delta_fn, 0.0))
     lt = jnp.where(offload[:, None, None] & r2, beta[:, None, None], 0.0)
     lt = lt + jnp.where(explored[:, None, None] & valid & ~r2, phi / eps, 0.0)
-    new_logw = logw - eta * lt
+    # decay < 1 = discounted Hedge (see HIConfig.decay); decay = 1 is Alg. 1.
+    new_logw = decay * logw - eta * lt
     new_max = jnp.max(jnp.where(valid, new_logw, NEG), axis=(-2, -1), keepdims=True)
     new_logw = jnp.where(valid, new_logw - new_max, NEG)
+    return new_logw, offload, explored, local_pred, q, p
+
+
+def hedge_step_kernel(
+    # inputs
+    log_w_ref, i_f_ref, psi_ref, zeta_ref, h_r_ref, beta_ref,
+    # outputs
+    new_log_w_ref, offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
+    *, grid_side: int, eta: float, eps: float, delta_fp: float, delta_fn: float,
+    decay: float = 1.0,
+):
+    g = grid_side
+    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
+
+    l_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 1)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 2)
+    valid = l_idx <= u_idx
+    new_logw, offload, explored, local_pred, q, p = _round_body(
+        logw, i_f_ref[...], psi_ref[...], zeta_ref[...], h_r_ref[...],
+        beta_ref[...], l_idx, u_idx, valid,
+        eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
 
     new_log_w_ref[...] = new_logw.astype(new_log_w_ref.dtype)
     offload_ref[...] = offload.astype(jnp.int32)
@@ -89,6 +96,48 @@ def hedge_step_kernel(
     local_pred_ref[...] = local_pred
     q_ref[...] = q.astype(jnp.float32)
     p_ref[...] = p.astype(jnp.float32)
+
+
+def hedge_rounds_kernel(
+    # inputs
+    log_w_ref, i_f_ref, psi_ref, zeta_ref, h_r_ref, beta_ref,
+    # outputs
+    new_log_w_ref, offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
+    *, grid_side: int, n_rounds: int, eta: float, eps: float,
+    delta_fp: float, delta_fn: float, decay: float = 1.0,
+):
+    """Time-blocked variant: TB sequential H2T2 rounds per kernel invocation.
+
+    The (SB, G, G) log-weight block stays resident in VMEM across all TB
+    rounds — one HBM round-trip amortized over the whole time block, instead
+    of one per round. Per-round inputs/outputs are (SB, TB) and indexed with
+    a static (unrolled) round index, so there are no dynamic stores.
+    """
+    g = grid_side
+    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
+    l_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 1)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 2)
+    valid = l_idx <= u_idx
+
+    for t in range(n_rounds):                            # static unroll
+        logw, offload, explored, local_pred, q, p = _round_body(
+            logw, i_f_ref[:, t], psi_ref[:, t], zeta_ref[:, t], h_r_ref[:, t],
+            beta_ref[:, t], l_idx, u_idx, valid,
+            eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+        offload_ref[:, t] = offload.astype(jnp.int32)
+        explored_ref[:, t] = explored.astype(jnp.int32)
+        local_pred_ref[:, t] = local_pred
+        q_ref[:, t] = q.astype(jnp.float32)
+        p_ref[:, t] = p.astype(jnp.float32)
+
+    new_log_w_ref[...] = logw.astype(new_log_w_ref.dtype)
+
+
+def _stream_block(s: int, stream_block: int) -> int:
+    sb = min(stream_block, s)
+    while s % sb:
+        sb -= 1
+    return sb
 
 
 def hedge_step_pallas(
@@ -100,17 +149,16 @@ def hedge_step_pallas(
     beta: jnp.ndarray,       # (S,) float32
     *,
     eta: float, eps: float, delta_fp: float, delta_fn: float,
+    decay: float = 1.0,
     stream_block: int = 8,
     interpret: bool = True,
 ):
     s, g, _ = log_w.shape
-    sb = min(stream_block, s)
-    while s % sb:
-        sb -= 1
+    sb = _stream_block(s, stream_block)
     grid = (s // sb,)
     kern = functools.partial(
         hedge_step_kernel, grid_side=g, eta=eta, eps=eps,
-        delta_fp=delta_fp, delta_fn=delta_fn)
+        delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
     vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
     out_shapes = (
         jax.ShapeDtypeStruct((s, g, g), jnp.float32),
@@ -130,6 +178,56 @@ def hedge_step_pallas(
         out_specs=(
             pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
             vec(), vec(), vec(), vec(), vec(),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(log_w, i_f, psi, zeta, h_r, beta)
+
+
+def hedge_rounds_pallas(
+    log_w: jnp.ndarray,      # (S, G, G) float32
+    i_f: jnp.ndarray,        # (S, TB) int32
+    psi: jnp.ndarray,        # (S, TB) float32
+    zeta: jnp.ndarray,       # (S, TB) int32
+    h_r: jnp.ndarray,        # (S, TB) int32
+    beta: jnp.ndarray,       # (S, TB) float32
+    *,
+    eta: float, eps: float, delta_fp: float, delta_fn: float,
+    decay: float = 1.0,
+    stream_block: int = 8,
+    interpret: bool = True,
+):
+    """TB sequential rounds for the whole fleet in one kernel launch.
+
+    Matches a TB-long chain of `hedge_step_pallas` calls step-for-step, but
+    keeps each stream's expert grid in VMEM across the block.
+    """
+    s, g, _ = log_w.shape
+    tb = i_f.shape[1]
+    sb = _stream_block(s, stream_block)
+    grid = (s // sb,)
+    kern = functools.partial(
+        hedge_rounds_kernel, grid_side=g, n_rounds=tb, eta=eta, eps=eps,
+        delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+    mat = lambda: pl.BlockSpec((sb, tb), lambda i: (i, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s, g, g), jnp.float32),
+        jax.ShapeDtypeStruct((s, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s, tb), jnp.float32),
+        jax.ShapeDtypeStruct((s, tb), jnp.float32),
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            mat(), mat(), mat(), mat(), mat(),
+        ],
+        out_specs=(
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            mat(), mat(), mat(), mat(), mat(),
         ),
         out_shape=out_shapes,
         interpret=interpret,

@@ -1,19 +1,29 @@
-"""jit'd public wrapper for the fused hedge kernel."""
+"""jit'd public wrappers for the fused hedge kernels (single- and multi-round)."""
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import HIConfig
-from repro.kernels.hedge.kernel import hedge_step_pallas
-from repro.kernels.hedge.ref import hedge_step_ref
+from repro.kernels.hedge.kernel import hedge_rounds_pallas, hedge_step_pallas
+from repro.kernels.hedge.ref import hedge_rounds_ref, hedge_step_ref
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def kernel_available() -> bool:
+    """True when the compiled Pallas kernel (not interpret mode) can run."""
+    return jax.default_backend() == "tpu"
+
+
+def _cfg_kw(cfg: HIConfig) -> dict:
+    return dict(eta=cfg.eta, eps=cfg.eps, delta_fp=cfg.delta_fp,
+                delta_fn=cfg.delta_fn, decay=cfg.decay)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret"))
@@ -31,7 +41,7 @@ def fleet_hedge_step(
     """One H2T2 round for a whole fleet of streams."""
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
-    kw = dict(eta=cfg.eta, eps=cfg.eps, delta_fp=cfg.delta_fp, delta_fn=cfg.delta_fn)
+    kw = _cfg_kw(cfg)
     if use_kernel:
         interp = _interpret_default() if interpret is None else interpret
         return hedge_step_pallas(
@@ -39,6 +49,38 @@ def fleet_hedge_step(
             zeta.astype(jnp.int32), h_r.astype(jnp.int32),
             beta.astype(jnp.float32), interpret=interp, **kw)
     return hedge_step_ref(
+        log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+        zeta.astype(jnp.int32), h_r.astype(jnp.int32),
+        beta.astype(jnp.float32), **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret"))
+def fleet_hedge_rounds(
+    cfg: HIConfig,
+    log_w: jnp.ndarray,      # (S, G, G)
+    f: jnp.ndarray,          # (S, TB) confidences in [0, 1]
+    psi: jnp.ndarray,        # (S, TB) uniforms
+    zeta: jnp.ndarray,       # (S, TB) bernoulli(ε) draws
+    h_r: jnp.ndarray,        # (S, TB) remote labels
+    beta: jnp.ndarray,       # (S, TB) offload costs
+    use_kernel: bool = True,
+    interpret: bool = None,
+):
+    """TB sequential H2T2 rounds for a whole fleet in one launch.
+
+    Step-for-step identical to TB chained `fleet_hedge_step` calls; on TPU the
+    expert grids stay in VMEM for the whole time block.
+    """
+    g = cfg.grid
+    i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
+    kw = _cfg_kw(cfg)
+    if use_kernel:
+        interp = _interpret_default() if interpret is None else interpret
+        return hedge_rounds_pallas(
+            log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+            zeta.astype(jnp.int32), h_r.astype(jnp.int32),
+            beta.astype(jnp.float32), interpret=interp, **kw)
+    return hedge_rounds_ref(
         log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
         zeta.astype(jnp.int32), h_r.astype(jnp.int32),
         beta.astype(jnp.float32), **kw)

@@ -12,6 +12,7 @@ def hedge_step_ref(
     log_w: jnp.ndarray, i_f: jnp.ndarray, psi: jnp.ndarray, zeta: jnp.ndarray,
     h_r: jnp.ndarray, beta: jnp.ndarray,
     *, eta: float, eps: float, delta_fp: float, delta_fn: float,
+    decay: float = 1.0,
 ):
     s, g, _ = log_w.shape
     l_idx = jnp.arange(g)[None, :, None]
@@ -40,9 +41,33 @@ def hedge_step_ref(
                     jnp.where(h_r[:, None, None] == 1, delta_fn, 0.0))
     lt = jnp.where(offload[:, None, None] & r2, beta[:, None, None], 0.0)
     lt = lt + jnp.where(explored[:, None, None] & valid & ~r2, phi / eps, 0.0)
-    new = log_w - eta * lt
+    new = decay * log_w - eta * lt
     new_max = jnp.max(jnp.where(valid, new, NEG), axis=(-2, -1), keepdims=True)
     new = jnp.where(valid, new - new_max, NEG)
     return (new.astype(jnp.float32), offload.astype(jnp.int32),
             explored.astype(jnp.int32), local_pred,
             q.astype(jnp.float32), p.astype(jnp.float32))
+
+
+def hedge_rounds_ref(
+    log_w: jnp.ndarray,      # (S, G, G)
+    i_f: jnp.ndarray,        # (S, TB)
+    psi: jnp.ndarray,        # (S, TB)
+    zeta: jnp.ndarray,       # (S, TB)
+    h_r: jnp.ndarray,        # (S, TB)
+    beta: jnp.ndarray,       # (S, TB)
+    *, eta: float, eps: float, delta_fp: float, delta_fn: float,
+    decay: float = 1.0,
+):
+    """Oracle for the time-blocked kernel: scan `hedge_step_ref` over TB rounds."""
+
+    def body(lw, xs):
+        new, off, exp_, lp, q, p = hedge_step_ref(
+            lw, *xs, eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn,
+            decay=decay)
+        return new, (off, exp_, lp, q, p)
+
+    xs = tuple(a.T for a in (i_f, psi, zeta, h_r, beta))         # time-major
+    final, outs = jax.lax.scan(body, log_w.astype(jnp.float32), xs)
+    off, exp_, lp, q, p = (o.T for o in outs)                    # back to (S, TB)
+    return final, off, exp_, lp, q, p

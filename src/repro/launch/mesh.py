@@ -9,13 +9,21 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kw(n_axes: int) -> dict:
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there
+    # anyway, so older jax just omits the kwarg.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips.
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
@@ -23,8 +31,7 @@ def make_host_mesh(model: int = 1):
     n = jax.device_count()
     model = min(model, n)
     return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        (n // model, model), ("data", "model"), **_axis_types_kw(2))
 
 
 # TPU v5e hardware constants (per chip) for the roofline model.

@@ -90,6 +90,8 @@ def compile_and_measure(
                           donate_argnums=donate).lower(*args)
         compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):                    # jax ≤ 0.4.x wraps in a list
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     return {

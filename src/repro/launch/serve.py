@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--beta", type=float, default=0.25)
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--decay", type=float, default=1.0)
+    ap.add_argument("--backend", default="fused",
+                    choices=("reference", "fused"),
+                    help="H2T2 policy engine (see serving.PolicyBackend)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced(vocab=64)
@@ -44,7 +47,8 @@ def main():
         return (jnp.sum(tokens == 7, axis=-1) % 2).astype(jnp.int32)
 
     hi = HIConfig(bits=args.bits, eps=0.1, eta=1.0, decay=args.decay)
-    server = HIServer(HIServerConfig(n_streams=args.streams, hi=hi), ldl, rdl)
+    server = HIServer(HIServerConfig(n_streams=args.streams, hi=hi,
+                                     backend=args.backend), ldl, rdl)
     tokens = jax.random.randint(
         jax.random.PRNGKey(1), (args.slots, args.streams, args.seq), 0, 64,
         jnp.int32)

@@ -1,9 +1,16 @@
 from repro.serving.batching import OffloadBatch, compact_offloads, scatter_results
-from repro.serving.engine import Engine, EngineConfig, classifier_fn
+from repro.serving.engine import (
+    Engine,
+    EngineConfig,
+    POLICY_BACKENDS,
+    PolicyBackend,
+    classifier_fn,
+    make_policy_step,
+)
 from repro.serving.hi_server import HIServer, HIServerConfig, HIServerState, SlotResult
 
 __all__ = [
     "Engine", "EngineConfig", "HIServer", "HIServerConfig", "HIServerState",
-    "OffloadBatch", "SlotResult", "classifier_fn", "compact_offloads",
-    "scatter_results",
+    "OffloadBatch", "POLICY_BACKENDS", "PolicyBackend", "SlotResult",
+    "classifier_fn", "compact_offloads", "make_policy_step", "scatter_results",
 ]

@@ -10,6 +10,13 @@ Per time slot, for a fleet of edge streams:
 
 The RDL inference is the ground-truth proxy throughout, exactly as in the
 paper's problem setting.
+
+Choosing a `PolicyBackend` (step 2): `backend="fused"` (default) runs the
+whole fleet's H2T2 update as one batched `fleet_hedge_step` launch — the
+Pallas kernel on TPU, its jnp oracle elsewhere — while `backend="reference"`
+keeps the paper-shaped vmapped `h2t2_step`. Both consume the same per-stream
+keys and make identical decisions; prefer "fused" everywhere and fall back to
+"reference" only when isolating a policy-math question from the kernel path.
 """
 from __future__ import annotations
 
@@ -19,14 +26,17 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import HIConfig, h2t2_init, h2t2_step
+from repro.core import HIConfig, h2t2_init
 from repro.core.policy import H2T2State, StepOutput
+from repro.serving.engine import PolicyBackend, make_policy_step
 
 
 @dataclasses.dataclass(frozen=True)
 class HIServerConfig:
     n_streams: int = 8
     hi: HIConfig = HIConfig()
+    backend: PolicyBackend = "fused"
+    interpret: Optional[bool] = None   # fused-backend kernel interpret override
 
 
 class HIServerState(NamedTuple):
@@ -55,8 +65,8 @@ class HIServer:
         self.cfg = cfg
         self.ldl = ldl
         self.rdl = rdl
-        self._policy_step = jax.jit(jax.vmap(
-            lambda st, f, b, hr, k: h2t2_step(cfg.hi, st, f, b, hr, k)))
+        self._policy_step = make_policy_step(
+            cfg.hi, backend=cfg.backend, interpret=cfg.interpret)
 
     def init_state(self) -> HIServerState:
         policy = jax.vmap(lambda _: h2t2_init(self.cfg.hi))(

@@ -84,7 +84,9 @@ def test_ring_cache_eviction_matches_window():
 
     small = run(win)        # ring wraps constantly
     big = run(S + 1)        # never wraps
-    assert np.max(np.abs(small - big)) < 1e-2
+    # The ring layout rotates key order, so the bf16 attention reduction can
+    # differ by one ulp (2^-6 at logit magnitude ~2-4) on isolated steps.
+    assert np.max(np.abs(small - big)) <= 0.02
 
 
 def test_cold_decode_from_empty_cache(rng):

@@ -1,0 +1,212 @@
+"""Tentpole coverage: the kernel-backed fleet engine vs the reference path.
+
+`run_fleet_fused` pre-draws the (ψ, ζ) randomness with the exact key tree of
+`run_fleet`, so the two must agree decision-for-decision — not just in
+distribution — on any trace. The multi-round (time-blocked) kernel must match
+a chain of single-round steps, and both serving policy backends must be
+interchangeable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HIConfig, fleet_init, run_fleet, run_fleet_fused
+from repro.kernels.hedge.ops import fleet_hedge_rounds, fleet_hedge_step
+from repro.kernels.hedge.ref import hedge_rounds_ref, hedge_step_ref
+from repro.serving import make_policy_step
+
+
+def _fleet_trace(key, s, t, beta=0.3):
+    ks = jax.random.split(key, 3)
+    fs = jax.random.uniform(ks[0], (s, t))
+    hrs = jax.random.bernoulli(ks[1], 0.5, (s, t)).astype(jnp.int32)
+    betas = jnp.full((s, t), beta)
+    return fs, hrs, betas
+
+
+def _rand_logw(key, s, g):
+    l = jnp.arange(g)[:, None]
+    u = jnp.arange(g)[None, :]
+    lw = jax.random.normal(key, (s, g, g))
+    return jnp.where(l <= u, lw - jnp.max(lw), -1e30).astype(jnp.float32)
+
+
+# ------------------------- fused-vs-reference parity --------------------------
+
+
+def test_run_fleet_fused_matches_run_fleet_64x2048():
+    """Acceptance-scale parity: identical offload/pred/loss sequences on a
+    64-stream × 2048-round trace, Pallas kernel in interpret mode."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(0), 64, 2048)
+    key = jax.random.PRNGKey(7)
+    st_ref, out_ref = run_fleet(cfg, fs, hrs, betas, key)
+    st_fus, out_fus = run_fleet_fused(cfg, fs, hrs, betas, key,
+                                      use_kernel=True, interpret=True)
+    assert np.array_equal(np.asarray(out_ref.offload), np.asarray(out_fus.offload))
+    assert np.array_equal(np.asarray(out_ref.pred), np.asarray(out_fus.pred))
+    np.testing.assert_allclose(np.asarray(out_ref.loss), np.asarray(out_fus.loss),
+                               atol=1e-5)
+    assert np.array_equal(np.asarray(st_ref.t), np.asarray(st_fus.t))
+    assert np.array_equal(np.asarray(st_ref.n_offloads),
+                          np.asarray(st_fus.n_offloads))
+    valid = np.isfinite(np.asarray(st_ref.log_w))
+    np.testing.assert_allclose(np.asarray(st_fus.log_w)[valid],
+                               np.asarray(st_ref.log_w)[valid], atol=1e-4)
+    assert np.all(np.isneginf(np.asarray(st_fus.log_w)[~valid]))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_run_fleet_fused_small_parity(use_kernel):
+    """Both fused engines (jnp oracle, interpret kernel) match the reference
+    on a small trace, including q/p masses and exploration flags."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=0.9)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(1), 8, 128)
+    key = jax.random.PRNGKey(11)
+    _, out_ref = run_fleet(cfg, fs, hrs, betas, key)
+    _, out_fus = run_fleet_fused(cfg, fs, hrs, betas, key,
+                                 use_kernel=use_kernel,
+                                 interpret=True if use_kernel else None)
+    assert np.array_equal(np.asarray(out_ref.offload), np.asarray(out_fus.offload))
+    assert np.array_equal(np.asarray(out_ref.explored), np.asarray(out_fus.explored))
+    assert np.array_equal(np.asarray(out_ref.local_pred),
+                          np.asarray(out_fus.local_pred))
+    np.testing.assert_allclose(np.asarray(out_ref.q), np.asarray(out_fus.q),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_ref.p), np.asarray(out_fus.p),
+                               atol=1e-5)
+
+
+def test_run_fleet_fused_decay_matches_reference():
+    """Discounted Hedge (decay < 1) goes through the kernel path too."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0, decay=0.97)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(2), 4, 96)
+    key = jax.random.PRNGKey(13)
+    st_ref, out_ref = run_fleet(cfg, fs, hrs, betas, key)
+    st_fus, out_fus = run_fleet_fused(cfg, fs, hrs, betas, key,
+                                      use_kernel=True, interpret=True)
+    assert np.array_equal(np.asarray(out_ref.offload), np.asarray(out_fus.offload))
+    np.testing.assert_allclose(np.asarray(out_ref.loss), np.asarray(out_fus.loss),
+                               atol=1e-5)
+    valid = np.isfinite(np.asarray(st_ref.log_w))
+    np.testing.assert_allclose(np.asarray(st_fus.log_w)[valid],
+                               np.asarray(st_ref.log_w)[valid], atol=1e-4)
+
+
+def test_time_blocked_path_matches_per_round_path():
+    """time_block > 1 (multi-round kernel) ≡ time_block = 1, same key."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(3), 8, 64)
+    key = jax.random.PRNGKey(17)
+    st1, out1 = run_fleet_fused(cfg, fs, hrs, betas, key,
+                                use_kernel=True, interpret=True, time_block=1)
+    st8, out8 = run_fleet_fused(cfg, fs, hrs, betas, key,
+                                use_kernel=True, interpret=True, time_block=8)
+    for a, b in zip(out1, out8):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-5)
+    assert np.array_equal(np.asarray(st1.n_offloads), np.asarray(st8.n_offloads))
+    valid = np.isfinite(np.asarray(st1.log_w))
+    np.testing.assert_allclose(np.asarray(st8.log_w)[valid],
+                               np.asarray(st1.log_w)[valid], atol=1e-4)
+
+
+def test_time_block_must_divide_horizon():
+    cfg = HIConfig(bits=2)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(4), 2, 10)
+    with pytest.raises(ValueError, match="time_block"):
+        run_fleet_fused(cfg, fs, hrs, betas, jax.random.PRNGKey(0),
+                        time_block=4)
+
+
+# ----------------------- kernel golden tests (G sweep) ------------------------
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5])          # G ∈ {8, 16, 32}
+def test_step_kernel_golden_vs_ref(bits):
+    cfg = HIConfig(bits=bits, eps=0.07, eta=0.9, decay=0.95)
+    g = cfg.grid
+    s = 8
+    ks = jax.random.split(jax.random.PRNGKey(bits), 6)
+    logw = _rand_logw(ks[0], s, g)
+    f = jax.random.uniform(ks[1], (s,))
+    psi = jax.random.uniform(ks[2], (s,))
+    zeta = jax.random.bernoulli(ks[3], 0.3, (s,)).astype(jnp.int32)
+    hr = jax.random.bernoulli(ks[4], 0.5, (s,)).astype(jnp.int32)
+    beta = jax.random.uniform(ks[5], (s,), maxval=0.6)
+    outk = fleet_hedge_step(cfg, logw, f, psi, zeta, hr, beta, use_kernel=True)
+    outr = fleet_hedge_step(cfg, logw, f, psi, zeta, hr, beta, use_kernel=False)
+    for a, b in zip(outk, outr):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5])          # G ∈ {8, 16, 32}
+def test_rounds_kernel_golden_vs_ref_and_chained_steps(bits):
+    """Multi-round kernel == scan of the jnp oracle == chained single steps."""
+    cfg = HIConfig(bits=bits, eps=0.1, eta=1.0)
+    g = cfg.grid
+    s, tb = 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(100 + bits), 6)
+    logw = _rand_logw(ks[0], s, g)
+    f = jax.random.uniform(ks[1], (s, tb))
+    psi = jax.random.uniform(ks[2], (s, tb))
+    zeta = jax.random.bernoulli(ks[3], 0.2, (s, tb)).astype(jnp.int32)
+    hr = jax.random.bernoulli(ks[4], 0.5, (s, tb)).astype(jnp.int32)
+    beta = jax.random.uniform(ks[5], (s, tb), maxval=0.6)
+
+    outk = fleet_hedge_rounds(cfg, logw, f, psi, zeta, hr, beta,
+                              use_kernel=True, interpret=True)
+    outr = fleet_hedge_rounds(cfg, logw, f, psi, zeta, hr, beta,
+                              use_kernel=False)
+    for a, b in zip(outk, outr):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=1e-5)
+
+    # Chain the single-round step and compare round outputs + final weights.
+    lw = logw
+    for t in range(tb):
+        lw, off, exp_, lp, q, p = fleet_hedge_step(
+            cfg, lw, f[:, t], psi[:, t], zeta[:, t], hr[:, t], beta[:, t],
+            use_kernel=True, interpret=True)
+        assert np.array_equal(np.asarray(off), np.asarray(outk[1][:, t]))
+        assert np.array_equal(np.asarray(lp), np.asarray(outk[3][:, t]))
+        np.testing.assert_allclose(np.asarray(q), np.asarray(outk[4][:, t]),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lw), np.asarray(outk[0]), atol=1e-4)
+
+
+# --------------------------- serving policy backends --------------------------
+
+
+def test_policy_backends_interchangeable():
+    """make_policy_step("reference") and ("fused") give identical slot
+    decisions and states for identical per-stream keys."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    s = 8
+    state = fleet_init(cfg, s)
+    ref_step = make_policy_step(cfg, backend="reference")
+    fus_step = make_policy_step(cfg, backend="fused")
+    key = jax.random.PRNGKey(23)
+    for t in range(5):
+        key, k1, k2 = jax.random.split(key, 3)
+        fs = jax.random.uniform(k1, (s,))
+        hrs = jax.random.bernoulli(k2, 0.5, (s,)).astype(jnp.int32)
+        betas = jnp.full((s,), 0.25)
+        keys = jax.random.split(jax.random.fold_in(key, t), s)
+        s_ref, o_ref = ref_step(state, fs, betas, hrs, keys)
+        s_fus, o_fus = fus_step(state, fs, betas, hrs, keys)
+        assert np.array_equal(np.asarray(o_ref.offload), np.asarray(o_fus.offload))
+        assert np.array_equal(np.asarray(o_ref.pred), np.asarray(o_fus.pred))
+        np.testing.assert_allclose(np.asarray(o_ref.loss),
+                                   np.asarray(o_fus.loss), atol=1e-6)
+        valid = np.isfinite(np.asarray(s_ref.log_w))
+        np.testing.assert_allclose(np.asarray(s_fus.log_w)[valid],
+                                   np.asarray(s_ref.log_w)[valid], atol=1e-5)
+        state = s_fus
+
+
+def test_policy_backend_unknown_raises():
+    with pytest.raises(ValueError, match="backend"):
+        make_policy_step(HIConfig(), backend="warp-drive")

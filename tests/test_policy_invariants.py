@@ -1,0 +1,122 @@
+"""Randomized invariants of the H2T2 policy (Algorithm 1).
+
+Hypothesis-free satellite of test_policy_properties: over randomized
+(f, h_r, β) traces the policy must keep its probability masses coherent,
+its region masks a partition, its log-weights finite over long horizons,
+and (with decay=1) follow the paper's linear-space Hedge update
+step-for-step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HIConfig,
+    draw_fleet_randomness,
+    h2t2_init,
+    quantize,
+    region_masks,
+    run_stream,
+)
+
+
+def _trace(key, t, beta_max=0.6):
+    ks = jax.random.split(key, 3)
+    fs = jax.random.uniform(ks[0], (t,))
+    hrs = jax.random.bernoulli(ks[1], 0.5, (t,)).astype(jnp.int32)
+    betas = jax.random.uniform(ks[2], (t,), minval=0.05, maxval=beta_max)
+    return fs, hrs, betas
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_q_plus_p_bounded(seed):
+    """Region masses are probabilities: q, p ∈ [0, 1] and q + p ≤ 1."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    fs, hrs, betas = _trace(jax.random.PRNGKey(seed), 500)
+    _, out = run_stream(cfg, fs, hrs, betas, jax.random.PRNGKey(100 + seed))
+    q, p = np.asarray(out.q), np.asarray(out.p)
+    assert np.all(q >= 0) and np.all(q <= 1 + 1e-6)
+    assert np.all(p >= 0) and np.all(p <= 1 + 1e-6)
+    assert np.all(q + p <= 1 + 1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6])
+def test_region_masks_partition_valid_grid(bits):
+    """For every quantized confidence, regions 1/2/3 partition {l ≤ u}."""
+    g = 1 << bits
+    valid = np.arange(g)[:, None] <= np.arange(g)[None, :]
+    for i_f in range(g):
+        r1, r2, r3 = map(np.asarray, region_masks(jnp.asarray(i_f), g))
+        assert not np.any(r1 & r2) and not np.any(r2 & r3) and not np.any(r1 & r3)
+        assert np.array_equal(r1 | r2 | r3, valid)
+        assert not np.any((r1 | r2 | r3) & ~valid)
+
+
+def test_log_weights_finite_after_1e4_rounds():
+    """Long-horizon stability: valid log-weights stay finite (and
+    renormalized to max ≈ 0) after 10⁴ rounds; invalid cells stay -inf."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    fs, hrs, betas = _trace(jax.random.PRNGKey(3), 10_000)
+    st, out = run_stream(cfg, fs, hrs, betas, jax.random.PRNGKey(4))
+    g = cfg.grid
+    lw = np.asarray(st.log_w)
+    valid = np.arange(g)[:, None] <= np.arange(g)[None, :]
+    assert np.all(np.isfinite(lw[valid]))
+    assert np.max(lw[valid]) <= 1e-5
+    assert np.all(np.isneginf(lw[~valid]))
+    assert np.all(np.isfinite(np.asarray(out.loss)))
+
+
+def test_decay_one_reproduces_algorithm1_step_for_step():
+    """decay=1.0 (the paper's H2T2) must match a plain linear-space
+    implementation of Algorithm 1 — same q/p, same decisions, same weight
+    distribution — on every round."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0, delta_fp=0.7, delta_fn=1.0,
+                   decay=1.0)
+    g = cfg.grid
+    t = 64
+    fs, hrs, betas = _trace(jax.random.PRNGKey(5), t)
+    key = jax.random.PRNGKey(6)
+    _, out = run_stream(cfg, fs, hrs, betas, key)
+
+    # Same (ψ, ζ) draws run_stream consumed (stream_keys pins the key tree).
+    psis, zetas = draw_fleet_randomness(cfg, None, 1, t, stream_keys=key[None])
+    psis, zetas = np.asarray(psis[0]), np.asarray(zetas[0])
+
+    l = np.arange(g)[:, None]
+    u = np.arange(g)[None, :]
+    valid = l <= u
+    w = np.where(valid, 1.0, 0.0)                        # uniform over experts
+    for step in range(t):
+        i_f = min(int(float(fs[step]) * g), g - 1)
+        r2 = valid & (l <= i_f) & (i_f < u)
+        r3 = valid & (u <= i_f)
+        total = w.sum()
+        q = w[r2].sum() / total
+        p = w[r3].sum() / total
+        np.testing.assert_allclose(float(out.q[step]), q, atol=1e-5)
+        np.testing.assert_allclose(float(out.p[step]), p, atol=1e-5)
+
+        psi, zeta = psis[step], bool(zetas[step])
+        in_r2 = psi <= q
+        offload = in_r2 or zeta
+        explored = zeta and not in_r2
+        local_pred = int(psi <= q + p)
+        assert bool(out.offload[step]) == offload
+        assert bool(out.explored[step]) == explored
+        assert int(out.local_pred[step]) == local_pred
+
+        # Eq. 10 pseudo-loss and the multiplicative Hedge update.
+        h_r, beta = int(hrs[step]), float(betas[step])
+        phi = np.where(r3, cfg.delta_fp if h_r == 0 else 0.0,
+                       cfg.delta_fn if h_r == 1 else 0.0)
+        lt = np.where(offload & r2, beta, 0.0)
+        lt = lt + np.where(explored & valid & ~r2, phi / cfg.eps, 0.0)
+        w = w * np.exp(-cfg.eta * lt)
+        w = np.where(valid, w / w.max(), 0.0)            # renormalization
+
+    st, _ = run_stream(cfg, fs, hrs, betas, key)
+    w_policy = np.where(valid, np.exp(np.asarray(st.log_w, np.float64)), 0.0)
+    np.testing.assert_allclose(w_policy / w_policy.sum(), w / w.sum(),
+                               atol=1e-4)
