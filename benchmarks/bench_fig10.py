@@ -12,13 +12,13 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import avg_costs_all_policies, timed
-from repro.core import HIConfig, h2t2_init, run_fleet_fused
+from benchmarks.common import avg_costs_all_policies, engine_cached, timed
+from repro.core import HIConfig
 from repro.data import dataset_trace
 from repro.kernels.hedge.ops import fleet_hedge_rounds, fleet_hedge_step
 
 
-def run(quick: bool = False, backend: str = "fused") -> List[str]:
+def run(quick: bool = False, engine: str = "fused") -> List[str]:
     rows = []
     horizon = 1000 if quick else 5000
     bits_list = [2, 4] if quick else [2, 3, 4, 5, 6]
@@ -26,24 +26,18 @@ def run(quick: bool = False, backend: str = "fused") -> List[str]:
         cfg = HIConfig(bits=b, eps=0.05, eta=1.0)
         t0 = time.perf_counter()
         costs = avg_costs_all_policies("breakhis", beta=0.3, horizon=horizon,
-                                       bits=b, seeds=2, backend=backend)
+                                       bits=b, seeds=2, engine=engine)
         wall = time.perf_counter() - t0
         # Per-round policy-update latency of the selected engine (jit'd scan).
-        from repro.core.policy import run_stream
-
         tr = dataset_trace("breakhis", horizon, jax.random.PRNGKey(0), beta=0.3)
-        if backend == "fused":
-            f = jax.jit(lambda: run_fleet_fused(
-                cfg, tr.fs[None], tr.hrs[None], tr.betas[None],
-                jax.random.PRNGKey(1))[1].loss)
-        else:
-            f = jax.jit(lambda: run_stream(cfg, tr.fs, tr.hrs, tr.betas,
-                                           jax.random.PRNGKey(1))[1].loss)
+        eng = engine_cached(engine, cfg)
+        f = jax.jit(lambda: eng.run(tr.fs[None], tr.hrs[None], tr.betas[None],
+                                    jax.random.PRNGKey(1))[1].loss)
         us_round = timed(f) / horizon
         rows.append(
             f"fig10_bits{b}_cost,{us_round:.2f},"
             f"h2t2={costs['h2t2']:.4f};n_experts={cfg.n_experts};"
-            f"wall_s={wall:.1f};backend={backend}")
+            f"wall_s={wall:.1f};engine={engine}")
     # Fleet hedge kernel vs jnp reference (batched streams, one round + a
     # TB=8 time block through the multi-round kernel).
     for b in bits_list:

@@ -13,7 +13,7 @@ POLICIES = ["no_offload", "full_offload", "hi_single", "offline_single",
 
 
 def run(quick: bool = False, delta_fp: float = 0.7,
-        datasets=None, betas=None, backend: str = "fused") -> List[str]:
+        datasets=None, betas=None, engine: str = "fused") -> List[str]:
     rows = []
     datasets = datasets or (MANUSCRIPT_DATASETS if quick
                             else MANUSCRIPT_DATASETS + APPENDIX_DATASETS)
@@ -25,7 +25,7 @@ def run(quick: bool = False, delta_fp: float = 0.7,
             t0 = time.perf_counter()
             costs = avg_costs_all_policies(
                 name, beta, horizon=horizon, delta_fp=delta_fp, seeds=seeds,
-                backend=backend)
+                engine=engine)
             us = (time.perf_counter() - t0) * 1e6
             derived = ";".join(f"{p}={costs[p]:.4f}" for p in POLICIES)
             rows.append(f"fig4_{name}_beta{beta:g},{us:.0f},{derived}")

@@ -10,7 +10,7 @@ from typing import List
 from benchmarks.common import avg_costs_all_policies
 
 
-def run(quick: bool = False, backend: str = "fused") -> List[str]:
+def run(quick: bool = False, engine: str = "fused") -> List[str]:
     rows = []
     ratios = [0.1, 0.5, 1.0, 2.0, 10.0] if quick else \
         [0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0]
@@ -22,7 +22,7 @@ def run(quick: bool = False, backend: str = "fused") -> List[str]:
             t0 = time.perf_counter()
             costs = avg_costs_all_policies(
                 name, beta=0.4, horizon=horizon, delta_fp=dfp, delta_fn=dfn,
-                seeds=2, backend=backend)
+                seeds=2, engine=engine)
             us = (time.perf_counter() - t0) * 1e6
             rows.append(
                 f"fig8_{name}_ratio{r:g},{us:.0f},"

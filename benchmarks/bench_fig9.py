@@ -12,7 +12,7 @@ from repro.core import HIConfig
 from repro.core.regret import corollary1_params
 
 
-def run(quick: bool = False, backend: str = "fused") -> List[str]:
+def run(quick: bool = False, engine: str = "fused") -> List[str]:
     rows = []
     horizon = 2000 if quick else 10_000
     etas = [0.01, 0.1, 1.0, 4.0] if quick else [0.003, 0.01, 0.05, 0.2, 0.5, 1.0, 2.0, 8.0]
@@ -23,7 +23,7 @@ def run(quick: bool = False, backend: str = "fused") -> List[str]:
             t0 = time.perf_counter()
             costs = avg_costs_all_policies(
                 name, beta=0.4, horizon=horizon, eta=eta, seeds=2,
-                backend=backend)
+                engine=engine)
             us = (time.perf_counter() - t0) * 1e6
             star = " (eta*)" if abs(eta - eta_star) < 1e-3 else ""
             rows.append(f"fig9_{name}_eta{eta:g}{star},{us:.0f},"

@@ -1,22 +1,23 @@
 """Kernel microbenchmarks (CPU: interpret-mode correctness path; timings are
 for the jnp reference oracles, which are the XLA fallbacks on TPU too).
 
-The hedge-fleet section times the full H2T2 simulation engine under BOTH
-policy backends ("reference" vmapped scan vs "fused" kernel-backed scan,
-including the time-blocked multi-round variant) so the perf trajectory
-tracks the path serving actually runs."""
+The hedge-fleet section times the full H2T2 simulation engine under every
+registered `PolicyEngine` ("reference" vmapped scan, "fused" kernel-backed
+scan — including the time-blocked multi-round variant — and "sharded" when
+more than one device is visible) so the perf trajectory tracks the paths
+serving actually runs."""
 from __future__ import annotations
 
-import functools
 from typing import List
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
-from repro.core import HIConfig, run_fleet, run_fleet_fused
+from repro.core import HIConfig
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd.ref import ssd_ref
+from repro.serving.policy_engine import get_engine
 
 
 def _hedge_fleet_rows(quick: bool) -> List[str]:
@@ -30,19 +31,18 @@ def _hedge_fleet_rows(quick: bool) -> List[str]:
         betas = jnp.full((s, t), 0.3)
         key = jax.random.PRNGKey(1)
         engines = {
-            "reference": jax.jit(lambda k, fn=functools.partial(
-                run_fleet, cfg, fs, hrs, betas): fn(k)[1].loss),
-            "fused": jax.jit(lambda k, fn=functools.partial(
-                run_fleet_fused, cfg, fs, hrs, betas): fn(k)[1].loss),
-            "fused_tb8": jax.jit(lambda k, fn=functools.partial(
-                run_fleet_fused, cfg, fs, hrs, betas,
-                time_block=8): fn(k)[1].loss),
+            "reference": get_engine("reference", cfg),
+            "fused": get_engine("fused", cfg),
+            "fused_tb8": get_engine("fused", cfg, time_block=8),
         }
-        for backend, fn in engines.items():
+        if len(jax.devices()) > 1:
+            engines["sharded"] = get_engine("sharded", cfg)
+        for name, eng in engines.items():
+            fn = jax.jit(lambda k, e=eng: e.run(fs, hrs, betas, k)[1].loss)
             us = timed(fn, key, reps=3)
             rows.append(
-                f"hedge_fleet_G{cfg.grid}_S{s}_T{t}_{backend},{us:.0f},"
-                f"us_per_round={us / t:.2f};backend={backend}")
+                f"hedge_fleet_G{cfg.grid}_S{s}_T{t}_{name},{us:.0f},"
+                f"us_per_round={us / t:.2f};engine={name}")
     return rows
 
 

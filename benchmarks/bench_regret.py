@@ -7,12 +7,13 @@ from typing import List
 
 import jax
 
+from benchmarks.common import engine_cached
 from repro.core import HIConfig
 from repro.core.regret import empirical_regret, regret_slope, theorem2_bound
 from repro.data import dataset_trace
 
 
-def run(quick: bool = False, backend: str = "fused") -> List[str]:
+def run(quick: bool = False, engine: str = "fused") -> List[str]:
     rows = []
     horizons = [500, 2000] if quick else [500, 2000, 8000, 32000]
     regrets = []
@@ -21,14 +22,15 @@ def run(quick: bool = False, backend: str = "fused") -> List[str]:
         tr = dataset_trace("breakhis", t, jax.random.PRNGKey(0), beta=0.3)
         t0 = time.perf_counter()
         r = empirical_regret(cfg, tr.fs, tr.hrs, tr.betas, jax.random.PRNGKey(1),
-                             n_seeds=2 if quick else 6, backend=backend)
+                             n_seeds=2 if quick else 6,
+                             run=engine_cached(engine, cfg).run)
         us = (time.perf_counter() - t0) * 1e6
         bound = theorem2_bound(cfg, t)
         regrets.append(max(r["regret"], 1e-6))
         rows.append(f"regret_T{t},{us:.0f},"
                     f"empirical={r['regret']:.1f};bound={bound:.1f};"
                     f"algo={r['algo_loss']:.1f};best_fixed={r['best_fixed_loss']:.1f};"
-                    f"backend={backend}")
+                    f"engine={engine}")
     slope = regret_slope(horizons, regrets)
     rows.append(f"regret_slope,0,slope={slope:.3f};sublinear={slope < 1.0}")
     return rows

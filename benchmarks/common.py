@@ -1,21 +1,30 @@
 """Shared benchmark plumbing: policies run over calibrated dataset traces.
 
-Every H2T2-running helper takes a `backend` switch ("fused" default):
-"fused" batches the seed runs as a fleet through `run_fleet_fused` (one
-kernel-backed scan), "reference" loops vmapped/scanned `h2t2_step`. The two
-consume identical randomness and produce identical costs — the switch only
-changes which engine the perf trajectory measures.
+Every H2T2-running helper takes an `engine` name resolved through the
+`PolicyEngine` registry ("fused" default; "reference" | "fused" | "sharded").
+All engines consume identical randomness and produce identical costs — the
+switch only changes which execution path the perf trajectory measures.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import HIConfig, baselines, offline, run_fleet_fused, run_stream
+from repro.core import HIConfig, baselines, offline
 from repro.data import dataset_trace
+from repro.serving.policy_engine import get_engine
+
+
+@functools.lru_cache(maxsize=None)
+def engine_cached(name: str, cfg: HIConfig):
+    """Memoized engine construction: engines carry per-instance jit caches,
+    so benchmark sweeps must reuse one instance per (name, cfg) or every
+    point recompiles (worst on the sharded engine's shard_map scan)."""
+    return get_engine(name, cfg)
 
 MANUSCRIPT_DATASETS = ["breakhis", "chest", "phishing", "synthetic", "breach"]
 APPENDIX_DATASETS = ["chestxray", "resnetdogs", "logisticdogs", "xract"]
@@ -23,32 +32,26 @@ APPENDIX_DATASETS = ["chestxray", "resnetdogs", "logisticdogs", "xract"]
 
 def h2t2_seed_losses(
     cfg: HIConfig, fs, hrs, betas, seeds: int, seed0: int = 0,
-    backend: str = "fused",
+    engine: str = "fused",
 ) -> List[float]:
     """Cumulative H2T2 loss for PRNGKey(seed0)..PRNGKey(seed0+seeds-1).
 
-    backend="fused" runs all seeds as one fleet (seed i → stream i, same key
-    tree as the per-seed `run_stream` calls of the reference path).
+    All seeds run as one fleet (seed i → stream i, the same key tree the
+    per-seed `run_stream` calls would consume) on the chosen engine.
     """
-    if backend == "fused":
-        tile = lambda a: jnp.tile(a[None], (seeds, 1))
-        stream_keys = jnp.stack(
-            [jax.random.PRNGKey(seed0 + s) for s in range(seeds)])
-        _, o = run_fleet_fused(cfg, tile(fs), tile(hrs), tile(betas),
-                               stream_keys=stream_keys)
-        return [float(x) for x in jnp.sum(o.loss, axis=-1)]
-    return [
-        float(jnp.sum(run_stream(cfg, fs, hrs, betas,
-                                 jax.random.PRNGKey(seed0 + s))[1].loss))
-        for s in range(seeds)
-    ]
+    tile = lambda a: jnp.tile(a[None], (seeds, 1))
+    stream_keys = jnp.stack(
+        [jax.random.PRNGKey(seed0 + s) for s in range(seeds)])
+    _, o = engine_cached(engine, cfg).run(
+        tile(fs), tile(hrs), tile(betas), stream_keys=stream_keys)
+    return [float(x) for x in jnp.sum(o.loss, axis=-1)]
 
 
 def avg_costs_all_policies(
     name: str, beta: float, horizon: int = 10_000,
     delta_fp: float = 0.7, delta_fn: float = 1.0,
     bits: int = 4, eta: float = 1.0, eps: float = 0.05,
-    seeds: int = 3, seed0: int = 0, backend: str = "fused",
+    seeds: int = 3, seed0: int = 0, engine: str = "fused",
 ) -> Dict[str, float]:
     """Average per-round cost of the paper's six §5 policies on one dataset."""
     cfg = HIConfig(bits=bits, delta_fp=delta_fp, delta_fn=delta_fn,
@@ -57,7 +60,7 @@ def avg_costs_all_policies(
     t = horizon
 
     h2t2 = [l / t for l in h2t2_seed_losses(cfg, tr.fs, tr.hrs, tr.betas,
-                                            seeds, backend=backend)]
+                                            seeds, engine=engine)]
     single = []
     for s in range(seeds):
         _, so = baselines.run_single_threshold(

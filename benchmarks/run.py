@@ -53,17 +53,19 @@ def main() -> int:
                     help="reduced horizons/sweeps (CI-sized)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of " + ",".join(MODULES))
-    ap.add_argument("--backend", default="fused",
-                    choices=("reference", "fused"),
-                    help="H2T2 policy engine for modules that run the fleet")
+    from repro.serving.policy_engine import available_engines
+
+    ap.add_argument("--engine", default="fused",
+                    choices=available_engines(),
+                    help="H2T2 PolicyEngine for modules that run the fleet")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(MODULES)
     print("name,us_per_call,derived")
     failed = False
     for name in names:
         kwargs = {"quick": args.quick}
-        if "backend" in inspect.signature(MODULES[name].run).parameters:
-            kwargs["backend"] = args.backend
+        if "engine" in inspect.signature(MODULES[name].run).parameters:
+            kwargs["engine"] = args.engine
         try:
             for row in MODULES[name].run(**kwargs):
                 print(row)

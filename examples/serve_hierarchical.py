@@ -1,8 +1,10 @@
 """End-to-end hierarchical-inference serving driver (paper Fig. 1).
 
 A fleet of edge streams feeds samples through a REAL local transformer
-backbone (paper-ldl config, binary head), H2T2 routes per stream, offloaded
-samples are batched to the remote backbone. The RDL plays ground-truth proxy.
+backbone (paper-ldl config, binary head), H2T2 routes per stream, and ONLY
+the offloaded samples are compacted into a fixed-capacity batch for the
+remote backbone — the RDL is never paid for a locally-predicted sample, and
+its labels feed back into the policy one slot later (double-buffered).
 
     PYTHONPATH=src python examples/serve_hierarchical.py [--streams 8] [--slots 100]
 """
@@ -17,7 +19,7 @@ from repro.core import HIConfig
 from repro.data.tokens import classification_batch
 from repro.models import init_params
 from repro.models.heads import binary_head_init
-from repro.serving import HIServer, HIServerConfig, classifier_fn
+from repro.serving import HIServer, HIServerConfig, available_engines, classifier_fn
 
 
 def main():
@@ -26,9 +28,10 @@ def main():
     ap.add_argument("--slots", type=int, default=100)
     ap.add_argument("--seq", type=int, default=24)
     ap.add_argument("--beta", type=float, default=0.2)
-    ap.add_argument("--backend", default="fused",
-                    choices=("reference", "fused"),
-                    help="H2T2 policy engine (see serving.PolicyBackend)")
+    ap.add_argument("--engine", default="fused", choices=available_engines(),
+                    help="H2T2 PolicyEngine (see serving.policy_engine)")
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="RDL offload-batch capacity (0 → n_streams)")
     args = ap.parse_args()
 
     vocab = 64
@@ -43,8 +46,9 @@ def main():
         return (jnp.sum(tokens == 7, axis=-1) % 2).astype(jnp.int32)
 
     hi = HIConfig(bits=4, delta_fp=0.7, delta_fn=1.0, eps=0.1, eta=1.0)
-    server = HIServer(HIServerConfig(n_streams=args.streams, hi=hi,
-                                     backend=args.backend), ldl, rdl)
+    server = HIServer(
+        HIServerConfig(n_streams=args.streams, hi=hi, engine=args.engine,
+                       offload_capacity=args.capacity or None), ldl, rdl)
 
     tokens = jax.random.randint(
         jax.random.PRNGKey(1), (args.slots, args.streams, args.seq), 0, vocab,
@@ -57,8 +61,11 @@ def main():
     n = args.slots * args.streams
     print(f"served {n} samples over {args.streams} streams "
           f"in {wall:.1f}s ({n/wall:.0f} samples/s on CPU)")
-    print(f"avg cost     = {summary['avg_loss']:.4f}")
-    print(f"offload rate = {summary['offload_rate']:.2%}  (β = {args.beta})")
+    print(f"avg offload cost = {summary['avg_offload_cost']:.4f}")
+    print(f"offload rate     = {summary['offload_rate']:.2%}  (β = {args.beta})")
+    print(f"RDL savings      = {summary['rdl_savings']:.2%} of samples never "
+          f"hit the remote model ({summary['rdl_evals']:.0f} evals, "
+          f"{summary['rdl_batches']:.0f} batches)")
     print("Each stream learned its own two-threshold policy online — "
           "no retraining of either backbone.")
 

@@ -2,13 +2,19 @@
 # policy, calibrated-model closed forms, offline optima, and paper baselines.
 from repro.core.types import HIConfig, StreamSpec
 from repro.core.policy import (
+    FleetDecision,
     H2T2State,
     StepOutput,
     draw_fleet_randomness,
+    draw_psi_zeta,
+    effective_local_pred,
+    fleet_decide,
+    fleet_feedback,
     fleet_init,
     fleet_step_fused,
     h2t2_init,
     h2t2_step,
+    local_fallback_pred,
     pseudo_loss,
     quantize,
     region_masks,
@@ -27,9 +33,11 @@ from repro.core.calibrated import (
 from repro.core import baselines, multiclass, offline, regret
 
 __all__ = [
-    "HIConfig", "StreamSpec", "H2T2State", "StepOutput",
-    "draw_fleet_randomness", "fleet_init", "fleet_step_fused",
-    "h2t2_init", "h2t2_step", "pseudo_loss", "quantize", "region_masks",
+    "HIConfig", "StreamSpec", "FleetDecision", "H2T2State", "StepOutput",
+    "draw_fleet_randomness", "draw_psi_zeta", "effective_local_pred",
+    "fleet_decide", "fleet_feedback", "fleet_init", "fleet_step_fused",
+    "h2t2_init", "h2t2_step", "local_fallback_pred", "pseudo_loss",
+    "quantize", "region_masks",
     "run_fleet", "run_fleet_fused", "run_stream",
     "CalibratedDecision", "calibrated_rule", "chow_rule",
     "multiclass_regions", "multiclass_rule", "optimal_thresholds",

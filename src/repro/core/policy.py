@@ -108,6 +108,134 @@ def pseudo_loss(
     return amb_term + una_term
 
 
+class FleetDecision(NamedTuple):
+    """Phase-1 output of a fleet round: everything decided *before* any remote
+    feedback exists. Leaves are batched (S,) over streams."""
+
+    i_f: jnp.ndarray         # (S,) int32 — quantized confidence at decision time
+    offload: jnp.ndarray     # (S,) bool — O_t (region-2 draw OR ζ exploration)
+    explored: jnp.ndarray    # (S,) bool — E_t
+    local_pred: jnp.ndarray  # (S,) int32 — the local decision (used if not offloaded)
+    q: jnp.ndarray           # (S,) float — region-2 probability mass
+    p: jnp.ndarray           # (S,) float — region-3 probability mass
+    psi: jnp.ndarray         # (S,) float — the ψ draw (for drop fallbacks)
+
+
+def _decide_one(
+    cfg: HIConfig, log_w: jnp.ndarray, f: jnp.ndarray,
+    psi: jnp.ndarray, zeta: jnp.ndarray,
+) -> FleetDecision:
+    """Feedback-free half of Algorithm 1 for one stream (lines 4-20)."""
+    g = cfg.grid
+    i_f = quantize(f, cfg.bits)
+    r1, r2, r3 = region_masks(i_f, g)
+    log_total = _masked_logsumexp(log_w, r1 | r2 | r3)
+    q = jnp.exp(_masked_logsumexp(log_w, r2) - log_total)
+    p = jnp.exp(_masked_logsumexp(log_w, r3) - log_total)
+    in_region2 = psi <= q
+    zeta = zeta.astype(bool)
+    offload = in_region2 | zeta
+    explored = zeta & ~in_region2
+    local_pred = jnp.where(psi <= q + p, 1, 0).astype(jnp.int32)
+    return FleetDecision(i_f=i_f, offload=offload, explored=explored,
+                         local_pred=local_pred, q=q, p=p, psi=psi)
+
+
+def fleet_decide(
+    cfg: HIConfig,
+    state: H2T2State,        # leaves batched over (S,)
+    fs: jnp.ndarray,         # (S,)
+    psi: jnp.ndarray,        # (S,) pre-drawn uniforms (see draw_psi_zeta)
+    zeta: jnp.ndarray,       # (S,) pre-drawn bernoulli(ε)
+) -> FleetDecision:
+    """Decide offload/local for a whole fleet without touching any label.
+
+    This is the first half of `h2t2_step`: it reads the expert weights but
+    does not update them, so a serving layer can route only the offloaded
+    samples to the remote model and apply `fleet_feedback` once (delayed)
+    results arrive.
+    """
+    return jax.vmap(lambda lw, f, ps, zt: _decide_one(cfg, lw, f, ps, zt))(
+        state.log_w, fs, psi, zeta)
+
+
+def local_fallback_pred(decision: FleetDecision) -> jnp.ndarray:
+    """The local prediction to use when an offload could not be served.
+
+    For ψ ≤ q the sample offloaded via region 2, so `local_pred` (ψ ≤ q+p)
+    is deterministically 1 — not a draw from the conditional local-decision
+    distribution. Rescale ψ from [0, q) onto the not-offload interval so
+    class 1 is chosen with the conditional probability p/(1−q), reusing the
+    decision-time randomness. Exploration offloads (ψ > q) already carry the
+    correct conditional draw in `local_pred`.
+    """
+    in_r2 = decision.psi <= decision.q
+    r2_pred1 = (decision.psi * (1.0 - decision.q)
+                <= decision.p * decision.q)
+    return jnp.where(in_r2, r2_pred1,
+                     decision.local_pred == 1).astype(jnp.int32)
+
+
+def effective_local_pred(
+    decision: FleetDecision, sent: jnp.ndarray
+) -> jnp.ndarray:
+    """Local prediction in effect once `sent` is known: capacity-dropped
+    offloads use the conditional fallback draw, everyone else keeps
+    `local_pred`. Shared by `fleet_feedback` and the HI server so the
+    reported predictions always match the weight updates."""
+    dropped = decision.offload & ~sent
+    return jnp.where(dropped, local_fallback_pred(decision),
+                     decision.local_pred)
+
+
+def fleet_feedback(
+    cfg: HIConfig,
+    state: H2T2State,        # leaves batched over (S,)
+    decision: FleetDecision,
+    hrs: jnp.ndarray,        # (S,) remote labels; only consumed where sent/explored
+    betas: jnp.ndarray,      # (S,) decision-time offload costs
+    sent: Optional[jnp.ndarray] = None,   # (S,) bool — offloads that reached the RDL
+) -> Tuple[H2T2State, StepOutput]:
+    """Second half of `h2t2_step`: charge losses and update expert weights.
+
+    `sent` defaults to `decision.offload`; pass the post-compaction mask when
+    capacity dropped some offloads — dropped samples revert to a local
+    prediction (`local_fallback_pred`, the conditional draw) and contribute
+    no pseudo-loss feedback (their h_r was never observed). `hrs` rows where
+    `~sent` are only used for the simulation-grade φ accounting in the
+    returned `StepOutput.loss`; a real server without ground truth should
+    ignore those rows.
+
+    `fleet_decide` + `fleet_feedback` (with full `hrs` and `sent=None`)
+    reproduces the vmapped `h2t2_step` exactly — state and outputs.
+    """
+    if sent is None:
+        sent = decision.offload
+    sent = sent.astype(bool)
+    explored = decision.explored & sent
+    loss, pred = _charge_losses(cfg, sent, effective_local_pred(decision, sent),
+                                hrs, betas)
+
+    def one(lw, i_f, off, exp_, hr, beta):
+        lt = pseudo_loss(cfg, i_f, off, exp_, hr, beta)
+        new_lw = cfg.decay * lw - cfg.eta * lt
+        return new_lw - jnp.max(jnp.where(jnp.isfinite(new_lw), new_lw,
+                                          -jnp.inf))
+
+    log_w = jax.vmap(one)(
+        state.log_w, decision.i_f, sent, explored, hrs, betas)
+    new_state = H2T2State(
+        log_w=log_w,
+        t=state.t + 1,
+        n_offloads=state.n_offloads + sent.astype(jnp.int32),
+        n_explores=state.n_explores + explored.astype(jnp.int32),
+    )
+    return new_state, StepOutput(
+        offload=sent, pred=pred, local_pred=decision.local_pred, loss=loss,
+        explored=explored, q=decision.q, p=decision.p,
+    )
+
+
 def h2t2_step(
     cfg: HIConfig,
     state: H2T2State,
@@ -116,39 +244,21 @@ def h2t2_step(
     h_r: jnp.ndarray,
     key: jax.Array,
 ) -> Tuple[H2T2State, StepOutput]:
-    """One round of Algorithm 1.
+    """One round of Algorithm 1: `_decide_one` + the shared feedback math.
 
     `h_r` is the remote model's label for this sample; the policy only *uses* it
     when the sample is offloaded (masked) — passing it unconditionally keeps the
     step jit-able. The returned loss charges β_t on offload and φ_t otherwise.
     """
-    g = cfg.grid
-    i_f = quantize(f, cfg.bits)
-    r1, r2, r3 = region_masks(i_f, g)
-
-    log_total = _masked_logsumexp(state.log_w, r1 | r2 | r3)
-    q = jnp.exp(_masked_logsumexp(state.log_w, r2) - log_total)   # P(region 2)
-    p = jnp.exp(_masked_logsumexp(state.log_w, r3) - log_total)   # P(region 3)
-
     k_psi, k_zeta = jax.random.split(key)
     psi = jax.random.uniform(k_psi)
     zeta = jax.random.bernoulli(k_zeta, cfg.eps)
-
-    in_region2 = psi <= q
-    offload = in_region2 | zeta
-    explored = zeta & ~in_region2                                  # E_t
-    local_pred = jnp.where(psi <= q + p, 1, 0).astype(jnp.int32)   # Alg. 1 l.17-20
+    dec = _decide_one(cfg, state.log_w, f, psi, zeta)
 
     # Incurred loss l_t: offload pays β_t; local decision pays φ_t vs h_r proxy.
-    phi_local = jnp.where(
-        local_pred == 1,
-        jnp.where(h_r == 0, cfg.delta_fp, 0.0),
-        jnp.where(h_r == 1, cfg.delta_fn, 0.0),
-    )
-    loss = jnp.where(offload, beta, phi_local)
-    pred = jnp.where(offload, h_r.astype(jnp.int32), local_pred)
+    loss, pred = _charge_losses(cfg, dec.offload, dec.local_pred, h_r, beta)
 
-    lt = pseudo_loss(cfg, i_f, offload, explored, h_r, beta)
+    lt = pseudo_loss(cfg, dec.i_f, dec.offload, dec.explored, h_r, beta)
     # decay < 1 = discounted Hedge (beyond-paper): geometric forgetting of
     # accumulated losses, for non-stationary streams. decay = 1 is Alg. 1.
     log_w = cfg.decay * state.log_w - cfg.eta * lt
@@ -158,12 +268,12 @@ def h2t2_step(
     new_state = H2T2State(
         log_w=log_w,
         t=state.t + 1,
-        n_offloads=state.n_offloads + offload.astype(jnp.int32),
-        n_explores=state.n_explores + explored.astype(jnp.int32),
+        n_offloads=state.n_offloads + dec.offload.astype(jnp.int32),
+        n_explores=state.n_explores + dec.explored.astype(jnp.int32),
     )
     return new_state, StepOutput(
-        offload=offload, pred=pred, local_pred=local_pred, loss=loss,
-        explored=explored, q=q, p=p,
+        offload=dec.offload, pred=pred, local_pred=dec.local_pred, loss=loss,
+        explored=dec.explored, q=dec.q, p=dec.p,
     )
 
 
@@ -196,11 +306,21 @@ def run_fleet(
     fs: jnp.ndarray,       # (S, T)
     hrs: jnp.ndarray,      # (S, T)
     betas: jnp.ndarray,    # (S, T)
-    key: jax.Array,
+    key: Optional[jax.Array] = None,
+    *,
+    stream_keys: Optional[jnp.ndarray] = None,
 ) -> Tuple[H2T2State, StepOutput]:
-    """vmap `run_stream` over S independent edge streams."""
-    keys = jax.random.split(key, fs.shape[0])
-    return jax.vmap(lambda f, h, b, k: run_stream(cfg, f, h, b, k))(fs, hrs, betas, keys)
+    """vmap `run_stream` over S independent edge streams.
+
+    Pass `stream_keys` (S, 2) to pin per-stream keys directly (same contract
+    as `run_fleet_fused`), otherwise `key` is split into one key per stream.
+    """
+    if stream_keys is None:
+        if key is None:
+            raise ValueError("run_fleet needs `key` or `stream_keys`")
+        stream_keys = jax.random.split(key, fs.shape[0])
+    return jax.vmap(lambda f, h, b, k: run_stream(cfg, f, h, b, k))(
+        fs, hrs, betas, stream_keys)
 
 
 # --------------------------- fused fleet path --------------------------------

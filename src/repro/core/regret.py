@@ -1,8 +1,9 @@
 """Regret utilities: Corollary 1 parameters, empirical regret, slope fits."""
 from __future__ import annotations
 
+import functools
 import math
-from typing import Dict, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,22 +39,21 @@ def empirical_regret(
     betas: jnp.ndarray,
     key: jax.Array,
     n_seeds: int = 8,
-    backend: str = "fused",
+    run: Optional[Callable] = None,
 ) -> Dict[str, float]:
     """Mean cumulative H2T2 loss over seeds minus the offline best fixed θ⃗.
 
-    backend="fused" runs the seed batch as one kernel-backed fleet (seed i →
-    stream i with the same key `run_stream` would consume); "reference" vmaps
-    the per-stream scan. Identical losses either way.
+    `run` is a fleet runner `(fs, hrs, betas, key=None, *, stream_keys)` →
+    `(state, StepOutput)` — pass a `PolicyEngine.run` bound method to choose
+    an engine; defaults to the kernel-backed `run_fleet_fused`. The seed
+    batch runs as one fleet (seed i → stream i with the same key
+    `run_stream` would consume). Identical losses on every engine.
     """
+    if run is None:
+        run = functools.partial(policy.run_fleet_fused, cfg)
     keys = jax.random.split(key, n_seeds)
-    if backend == "fused":
-        tile = lambda a: jnp.tile(a[None], (n_seeds, 1))
-        _, outs = policy.run_fleet_fused(cfg, tile(fs), tile(hrs), tile(betas),
-                                         stream_keys=keys)
-    else:
-        _, outs = jax.vmap(
-            lambda k: policy.run_stream(cfg, fs, hrs, betas, k))(keys)
+    tile = lambda a: jnp.tile(a[None], (n_seeds, 1))
+    _, outs = run(tile(fs), tile(hrs), tile(betas), stream_keys=keys)
     algo = float(jnp.mean(jnp.sum(outs.loss, axis=-1)))
     best = float(offline.best_two_threshold(cfg, fs, hrs, betas).best_loss)
     return {"algo_loss": algo, "best_fixed_loss": best, "regret": algo - best}

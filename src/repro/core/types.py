@@ -75,5 +75,17 @@ class StreamSpec:
         # so allow rounding slack.
         if abs(total - 1.0) > 0.02:
             raise ValueError(f"{self.name}: accuracy+fp+fn must equal 1, got {total}")
-        if not (self.fn < self.p1 < 1.0 - 1e-9 + self.p1):
-            pass  # p1 sanity is enforced by the calibration solver
+        if not 0.0 < self.p1 < 1.0:
+            raise ValueError(f"{self.name}: p1 must lie in (0, 1), got {self.p1}")
+        # False negatives are a subset of the class-1 samples (and false
+        # positives of the class-0 samples), so their fractions of ALL
+        # samples cannot exceed the matching prior.
+        if self.fn > self.p1 + 1e-9:
+            raise ValueError(
+                f"{self.name}: fn={self.fn} exceeds the class-1 prior "
+                f"p1={self.p1}; impossible under the Table 2/3 convention")
+        if self.fp > (1.0 - self.p1) + 1e-9:
+            raise ValueError(
+                f"{self.name}: fp={self.fp} exceeds the class-0 prior "
+                f"1-p1={1.0 - self.p1}; impossible under the Table 2/3 "
+                "convention")

@@ -14,7 +14,7 @@ from repro.configs import ASSIGNED, get_config
 from repro.core import HIConfig
 from repro.models import init_params
 from repro.models.heads import binary_head_init
-from repro.serving import HIServer, HIServerConfig, classifier_fn
+from repro.serving import HIServer, HIServerConfig, available_engines, classifier_fn
 
 
 def main():
@@ -26,9 +26,10 @@ def main():
     ap.add_argument("--beta", type=float, default=0.25)
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--decay", type=float, default=1.0)
-    ap.add_argument("--backend", default="fused",
-                    choices=("reference", "fused"),
-                    help="H2T2 policy engine (see serving.PolicyBackend)")
+    ap.add_argument("--engine", default="fused", choices=available_engines(),
+                    help="H2T2 PolicyEngine (see serving.policy_engine)")
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="RDL offload-batch capacity (0 → n_streams)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced(vocab=64)
@@ -47,8 +48,9 @@ def main():
         return (jnp.sum(tokens == 7, axis=-1) % 2).astype(jnp.int32)
 
     hi = HIConfig(bits=args.bits, eps=0.1, eta=1.0, decay=args.decay)
-    server = HIServer(HIServerConfig(n_streams=args.streams, hi=hi,
-                                     backend=args.backend), ldl, rdl)
+    server = HIServer(
+        HIServerConfig(n_streams=args.streams, hi=hi, engine=args.engine,
+                       offload_capacity=args.capacity or None), ldl, rdl)
     tokens = jax.random.randint(
         jax.random.PRNGKey(1), (args.slots, args.streams, args.seq), 0, 64,
         jnp.int32)
@@ -57,8 +59,10 @@ def main():
     _, summary = server.run(tokens, betas, jax.random.PRNGKey(2))
     n = args.slots * args.streams
     print(f"arch={args.arch} served {n} samples in "
-          f"{time.perf_counter()-t0:.1f}s: avg_cost={summary['avg_loss']:.4f} "
-          f"offload_rate={summary['offload_rate']:.2%}")
+          f"{time.perf_counter()-t0:.1f}s: "
+          f"avg_offload_cost={summary['avg_offload_cost']:.4f} "
+          f"offload_rate={summary['offload_rate']:.2%} "
+          f"rdl_savings={summary['rdl_savings']:.2%}")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,37 @@
+"""Serving layer: backbone engines, the PolicyEngine protocol, and the
+offload-aware hierarchical-inference server.
+
+The H2T2 policy is driven through one interface — `PolicyEngine`
+(`policy_engine.get_engine("reference" | "fused" | "sharded", hi_cfg)`) —
+whether the caller simulates a whole horizon (`engine.run`), steps a fleet
+slot-by-slot (`engine.step`), or serves online with delayed remote feedback
+(`engine.decide` / `engine.feedback`, the `HIServer` flow). `HIServer` routes
+only offloaded samples to the RDL via `compact_offloads`/`scatter_results`
+and applies slot t's RDL results as feedback at slot t+1 (double-buffered).
+"""
 from repro.serving.batching import OffloadBatch, compact_offloads, scatter_results
-from repro.serving.engine import (
-    Engine,
-    EngineConfig,
-    POLICY_BACKENDS,
-    PolicyBackend,
-    classifier_fn,
-    make_policy_step,
+from repro.serving.engine import Engine, EngineConfig, classifier_fn
+from repro.serving.hi_server import (
+    HIServer,
+    HIServerConfig,
+    HIServerState,
+    PendingFeedback,
+    SlotResult,
 )
-from repro.serving.hi_server import HIServer, HIServerConfig, HIServerState, SlotResult
+from repro.serving.policy_engine import (
+    FusedEngine,
+    PolicyEngine,
+    ReferenceEngine,
+    ShardedEngine,
+    available_engines,
+    get_engine,
+    register_engine,
+)
 
 __all__ = [
-    "Engine", "EngineConfig", "HIServer", "HIServerConfig", "HIServerState",
-    "OffloadBatch", "POLICY_BACKENDS", "PolicyBackend", "SlotResult",
-    "classifier_fn", "compact_offloads", "make_policy_step", "scatter_results",
+    "Engine", "EngineConfig", "FusedEngine", "HIServer", "HIServerConfig",
+    "HIServerState", "OffloadBatch", "PendingFeedback", "PolicyEngine",
+    "ReferenceEngine", "ShardedEngine", "SlotResult", "available_engines",
+    "classifier_fn", "compact_offloads", "get_engine", "register_engine",
+    "scatter_results",
 ]

@@ -1,56 +1,19 @@
-"""Serving engine: jitted prefill / decode steps, greedy generation, and the
-pluggable H2T2 policy backend shared by the HI server and benchmarks."""
+"""Serving engine: jitted prefill / decode steps and greedy generation for
+one backbone, plus the LDL/RDL classifier entry point.
+
+The H2T2 policy side of serving lives in `repro.serving.policy_engine`
+(`PolicyEngine` protocol + registry: "reference" | "fused" | "sharded")."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.types import HIConfig
 from repro.models import DecodeState, decode_step, init_decode_state, prefill
 from repro.models.transformer import RunFlags
-
-# How the per-slot H2T2 fleet update executes:
-#   "reference" — vmapped per-stream `h2t2_step` (the paper-shaped jnp path)
-#   "fused"     — batched `fleet_hedge_step` (Pallas kernel on TPU, jnp
-#                 oracle elsewhere); one launch for the whole fleet
-# Both consume the same per-stream PRNG keys and make identical decisions, so
-# the backend is a pure performance knob.
-POLICY_BACKENDS = ("reference", "fused")
-PolicyBackend = str
-
-
-def make_policy_step(
-    hi_cfg: HIConfig,
-    backend: PolicyBackend = "fused",
-    interpret: Optional[bool] = None,
-):
-    """Build the jitted per-slot fleet policy step for the chosen backend.
-
-    Returns a function (policy_state, fs, betas, hrs, keys) → (state, out)
-    with every leaf batched over the (S,) fleet axis. `keys` is (S, 2) — one
-    PRNGKey per stream — consumed identically by both backends (split into
-    the ψ-uniform and ζ-bernoulli draws of Algorithm 1).
-    """
-    from repro.core.policy import draw_psi_zeta, fleet_step_fused, h2t2_step
-
-    if backend == "reference":
-        return jax.jit(jax.vmap(
-            lambda st, f, b, hr, k: h2t2_step(hi_cfg, st, f, b, hr, k)))
-    if backend != "fused":
-        raise ValueError(f"unknown policy backend {backend!r}; "
-                         f"expected one of {POLICY_BACKENDS}")
-
-    def step(state, fs, betas, hrs, keys):
-        psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-        return fleet_step_fused(hi_cfg, state, fs, psi, zeta, hrs, betas,
-                                interpret=interpret)
-
-    return jax.jit(step)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,56 +1,97 @@
-"""Hierarchical-inference server: the paper's system (Fig. 1) end-to-end.
+"""Offload-aware hierarchical-inference server: the paper's system (Fig. 1)
+with the remote model paid only for offloaded samples.
 
-Per time slot, for a fleet of edge streams:
-  1. every sample runs the LDL classifier → confidence f_t,
-  2. each stream's H2T2 state decides offload / local-predict (vmapped hedge),
-  3. offloaded samples are *batched* to the RDL classifier (padded to a fixed
-     offload-batch so the step stays jit-shaped),
-  4. losses are charged (β_t on offload, δ-weighted misclassification local),
-  5. H2T2 weights update from the RDL feedback (Eq. 10 pseudo-loss).
+Per time slot, for a fleet of edge streams, `serve_slot` runs a two-phase
+decide/feedback flow on a `PolicyEngine`:
 
-The RDL inference is the ground-truth proxy throughout, exactly as in the
-paper's problem setting.
+  1. apply the *previous* slot's RDL results as delayed feedback
+     (`engine.feedback`) — the double-buffer: slot t's remote results update
+     the expert weights at slot t+1, so edge rounds never block on remote
+     inference,
+  2. every sample runs the LDL classifier → confidence f_t,
+  3. the policy decides offload / local-predict (`engine.decide`) — no label
+     is consumed here,
+  4. ONLY the offloaded samples are compacted (`compact_offloads`) into one
+     fixed-capacity RDL batch; the RDL never sees a non-offloaded sample,
+  5. RDL labels scatter back to their source streams (`scatter_results`) and
+     are buffered as the next slot's feedback; offloads dropped by capacity
+     overflow revert to their local prediction and pay nothing.
 
-Choosing a `PolicyBackend` (step 2): `backend="fused"` (default) runs the
-whole fleet's H2T2 update as one batched `fleet_hedge_step` launch — the
-Pallas kernel on TPU, its jnp oracle elsewhere — while `backend="reference"`
-keeps the paper-shaped vmapped `h2t2_step`. Both consume the same per-stream
-keys and make identical decisions; prefer "fused" everywhere and fall back to
-"reference" only when isolating a policy-math question from the kernel path.
+The slot's observable cost is β_t per sample actually offloaded; local
+misclassification cost is unobservable online (no ground truth at the edge —
+use `PolicyEngine.run` for simulation-grade accounting). The run summary
+reports the RDL savings versus the old evaluate-everything server two ways:
+`rdl_eval_rate` (samples whose labels the remote model produced) and
+`rdl_row_savings` (actual compute rows, counting the capacity padding each
+launch carries). Capacity overflow drops rotate with the slot index so
+sustained overload cannot starve a fixed set of streams.
+
+Engines (`HIServerConfig.engine`): "fused" (default, kernel-backed),
+"reference" (paper-shaped vmapped `h2t2_step`), "sharded" (fleet sharded
+over a device mesh). All consume identical per-stream keys, so the serving
+decisions do not depend on the engine choice.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import HIConfig, h2t2_init
-from repro.core.policy import H2T2State, StepOutput
-from repro.serving.engine import PolicyBackend, make_policy_step
+from repro.core import FleetDecision, HIConfig
+from repro.core.policy import H2T2State, effective_local_pred
+from repro.serving.batching import compact_offloads, scatter_results
+from repro.serving.policy_engine import get_engine
 
 
 @dataclasses.dataclass(frozen=True)
 class HIServerConfig:
     n_streams: int = 8
     hi: HIConfig = HIConfig()
-    backend: PolicyBackend = "fused"
-    interpret: Optional[bool] = None   # fused-backend kernel interpret override
+    engine: str = "fused"              # PolicyEngine registry name
+    interpret: Optional[bool] = None   # kernel interpret override (fused/sharded)
+    # RDL batch capacity per slot; None → n_streams (padded, never drops).
+    offload_capacity: Optional[int] = None
+
+    def __post_init__(self):
+        if self.offload_capacity is not None and self.offload_capacity < 1:
+            raise ValueError(
+                f"offload_capacity must be ≥ 1 (got {self.offload_capacity}); "
+                "use None for the n_streams default")
+
+    @property
+    def capacity(self) -> int:
+        return (self.offload_capacity if self.offload_capacity is not None
+                else self.n_streams)
+
+
+class PendingFeedback(NamedTuple):
+    """Slot t's offload outcome, waiting to update weights at slot t+1."""
+
+    decision: FleetDecision   # leaves (S,)
+    hrs: jnp.ndarray          # (S,) int32 — scattered RDL labels (0 where ~sent)
+    sent: jnp.ndarray         # (S,) bool — offloaded AND within capacity
+    betas: jnp.ndarray        # (S,)
 
 
 class HIServerState(NamedTuple):
-    policy: H2T2State       # vmapped over streams
+    policy: H2T2State         # vmapped over streams
     t: jnp.ndarray
-    total_loss: jnp.ndarray
-    total_offloads: jnp.ndarray
+    total_loss: jnp.ndarray       # Σ β over samples actually offloaded
+    total_offloads: jnp.ndarray   # samples actually served remotely
+    total_dropped: jnp.ndarray    # offload decisions dropped by capacity
+    rdl_evals: jnp.ndarray        # valid samples evaluated by the RDL
+    rdl_batches: jnp.ndarray      # RDL launches (≤ 1 per slot)
+    pending: Optional[PendingFeedback]   # None until the first slot completes
 
 
 class SlotResult(NamedTuple):
     f: jnp.ndarray          # (S,) LDL confidences
-    offload: jnp.ndarray    # (S,) bool
-    pred: jnp.ndarray       # (S,) final predictions
-    loss: jnp.ndarray       # (S,)
+    offload: jnp.ndarray    # (S,) bool — the policy's offload decision
+    sent: jnp.ndarray       # (S,) bool — decision AND within RDL capacity
+    pred: jnp.ndarray       # (S,) final predictions (RDL label where sent)
+    loss: jnp.ndarray       # (S,) observable cost (β where sent, else 0)
 
 
 class HIServer:
@@ -60,20 +101,30 @@ class HIServer:
         self,
         cfg: HIServerConfig,
         ldl: Callable[[jnp.ndarray], jnp.ndarray],   # tokens (S, L) → f (S,)
-        rdl: Callable[[jnp.ndarray], jnp.ndarray],   # tokens (S, L) → labels (S,)
+        rdl: Callable[[jnp.ndarray], jnp.ndarray],   # tokens (C, L) → labels (C,)
     ):
         self.cfg = cfg
         self.ldl = ldl
         self.rdl = rdl
-        self._policy_step = make_policy_step(
-            cfg.hi, backend=cfg.backend, interpret=cfg.interpret)
+        self.engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret)
 
     def init_state(self) -> HIServerState:
-        policy = jax.vmap(lambda _: h2t2_init(self.cfg.hi))(
-            jnp.arange(self.cfg.n_streams))
         zero = jnp.zeros((), jnp.float32)
-        return HIServerState(policy=policy, t=jnp.zeros((), jnp.int32),
-                             total_loss=zero, total_offloads=zero)
+        izero = jnp.zeros((), jnp.int32)
+        return HIServerState(
+            policy=self.engine.init(self.cfg.n_streams),
+            t=izero, total_loss=zero, total_offloads=zero,
+            total_dropped=zero, rdl_evals=izero, rdl_batches=izero,
+            pending=None)
+
+    def _apply_pending(self, state: HIServerState) -> H2T2State:
+        """Fold the buffered slot-(t-1) RDL results into the policy weights."""
+        if state.pending is None:
+            return state.policy
+        pf = state.pending
+        policy, _ = self.engine.feedback(
+            state.policy, pf.decision, pf.hrs, pf.betas, sent=pf.sent)
+        return policy
 
     def serve_slot(
         self,
@@ -83,21 +134,58 @@ class HIServer:
         key: jax.Array,
     ) -> Tuple[HIServerState, SlotResult]:
         s = self.cfg.n_streams
-        fs = self.ldl(tokens)                                # (S,) edge inference
-        # The RDL label is the feedback/ground-truth proxy. We evaluate it for
-        # the whole slot batch (simulation); the *policy* only consumes it for
-        # offloaded samples — h2t2_step masks internally.
-        hrs = self.rdl(tokens).astype(jnp.int32)             # (S,)
+        cap = self.cfg.capacity
+        # Phase 0: delayed feedback from the previous slot's RDL batch.
+        policy = self._apply_pending(state)
+        # Phase 1: edge inference + offload decisions (label-free).
+        fs = self.ldl(tokens)                                # (S,)
         keys = jax.random.split(key, s)
-        policy, out = self._policy_step(state.policy, fs, betas, hrs, keys)
+        decision = self.engine.decide(policy, fs, keys)
+        # Phase 2: compact ONLY the offloaded samples into one RDL batch.
+        # Compaction keeps the first `cap` offloads in order, which would
+        # permanently starve high-index streams under sustained overload —
+        # when drops are possible, rotate the start index by the slot count
+        # so they share the pain. At full capacity rotation cannot change
+        # the outcome, so skip its gathers on the hot path.
+        if cap < s:
+            rot = (jnp.arange(s) + state.t % s) % s
+            batch = compact_offloads(tokens[rot], decision.offload[rot], cap)
+            batch = batch._replace(src=jnp.where(
+                batch.valid, rot[batch.src], -1).astype(jnp.int32))
+        else:
+            batch = compact_offloads(tokens, decision.offload, cap)
+        n_valid = int(jnp.sum(batch.valid))
+        if n_valid:
+            labels = self.rdl(batch.tokens).astype(jnp.int32)     # (C,)
+        else:
+            labels = jnp.zeros((cap,), jnp.int32)                 # RDL skipped
+        hrs = scatter_results(labels, batch, s, fill=0)
+        sent = scatter_results(
+            batch.valid.astype(jnp.int32), batch, s, fill=0).astype(bool)
+        # Offloads beyond capacity were never sent: fall back to a local
+        # prediction (the conditional draw — see `local_fallback_pred`), no β.
+        dropped = decision.offload & ~sent
+        pred = jnp.where(sent, hrs, effective_local_pred(decision, sent))
+        loss = jnp.where(sent, betas, 0.0)
+
         new_state = HIServerState(
             policy=policy,
             t=state.t + 1,
-            total_loss=state.total_loss + jnp.sum(out.loss),
-            total_offloads=state.total_offloads + jnp.sum(out.offload),
+            total_loss=state.total_loss + jnp.sum(loss),
+            total_offloads=state.total_offloads + jnp.sum(sent),
+            total_dropped=state.total_dropped + jnp.sum(dropped),
+            rdl_evals=state.rdl_evals + n_valid,
+            rdl_batches=state.rdl_batches + (1 if n_valid else 0),
+            pending=PendingFeedback(decision=decision, hrs=hrs, sent=sent,
+                                    betas=betas),
         )
-        return new_state, SlotResult(f=fs, offload=out.offload, pred=out.pred,
-                                     loss=out.loss)
+        return new_state, SlotResult(f=fs, offload=decision.offload,
+                                     sent=sent, pred=pred, loss=loss)
+
+    def flush(self, state: HIServerState) -> HIServerState:
+        """Apply any still-buffered feedback (end of a serving run)."""
+        policy = self._apply_pending(state)
+        return state._replace(policy=policy, pending=None)
 
     def run(
         self,
@@ -110,8 +198,21 @@ class HIServer:
         for t in range(horizon):
             key, sub = jax.random.split(key)
             state, _ = self.serve_slot(state, token_stream[t], betas[t], sub)
+        state = self.flush(state)
         n = horizon * self.cfg.n_streams
+        rdl_evals = int(state.rdl_evals)
+        # Each launch is capacity-padded, so the remote model also computes
+        # the padding rows — report both the sample-level savings and the
+        # actual compute rows so neither can be mistaken for the other.
+        rdl_rows = int(state.rdl_batches) * self.cfg.capacity
         return state, {
-            "avg_loss": float(state.total_loss) / n,
+            "avg_offload_cost": float(state.total_loss) / n,
             "offload_rate": float(state.total_offloads) / n,
+            "drop_rate": float(state.total_dropped) / n,
+            "rdl_evals": float(rdl_evals),
+            "rdl_eval_rate": rdl_evals / n,
+            "rdl_savings": 1.0 - rdl_evals / n,
+            "rdl_batches": float(state.rdl_batches),
+            "rdl_compute_rows": float(rdl_rows),
+            "rdl_row_savings": 1.0 - rdl_rows / n,
         }

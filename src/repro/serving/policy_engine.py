@@ -1,0 +1,309 @@
+"""PolicyEngine protocol + registry: one H2T2 serving API from a single
+stream to a sharded pod.
+
+Every engine drives the same four entry points, so `run_fleet`-style
+simulation, the benchmarks, and the `HIServer` all speak one interface:
+
+  init(n_streams)                  → fleet H2T2State (leaves batched (S,))
+  step(state, fs, betas, hrs, keys)→ one slot for the whole fleet
+  run(fs, hrs, betas, key)         → whole (S, T) horizon in one call
+  decide(state, fs, keys) /        → the two-phase serving flow: decide
+  feedback(state, decision, …)       offloads first, apply (possibly
+                                     delayed) RDL feedback later
+
+`keys` is always (S, 2) — one PRNGKey per stream — consumed through
+`draw_psi_zeta`, so every engine makes bit-for-bit identical decisions for
+the same keys. Registered engines:
+
+  "reference" — vmapped per-stream `h2t2_step`; the paper-shaped jnp path.
+  "fused"     — batched `fleet_hedge_step` (Pallas kernel on TPU, jnp oracle
+                elsewhere); `time_block > 1` drives the multi-round kernel.
+  "sharded"   — `shard_map`s the fused step over a device mesh with the
+                (S,) stream axis sharded, so one fleet spans a pod. Streams
+                are padded up to a device-count multiple; validate on CPU
+                with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
+Use `get_engine(name, hi_cfg, **opts)` to resolve a name, or instantiate the
+classes directly. `register_engine` adds new backends (e.g. an RPC-remote
+policy) without touching any caller.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.policy import (
+    FleetDecision,
+    H2T2State,
+    StepOutput,
+    draw_fleet_randomness,
+    draw_psi_zeta,
+    fleet_decide,
+    fleet_feedback,
+    fleet_init,
+    fleet_step_fused,
+    h2t2_step,
+    run_fleet,
+    run_fleet_fused,
+)
+from repro.core.types import HIConfig
+
+_REGISTRY: Dict[str, Type["PolicyEngine"]] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: add a PolicyEngine implementation to the registry."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_engines() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_engine(name: str, hi_cfg: HIConfig, **opts) -> "PolicyEngine":
+    """Resolve a registered engine name to a constructed instance."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy engine {name!r}; expected one of "
+            f"{available_engines()}") from None
+    return cls(hi_cfg, **opts)
+
+
+class PolicyEngine:
+    """Base class: shared init/decide/feedback; subclasses supply step/run.
+
+    `decide`/`feedback` exist so a server can split a round around a remote
+    call; the base implementations are the jitted jnp reference math, and
+    engines may override them (the sharded engine runs both through its
+    device mesh). The kernel engines accelerate the fused `step`/`run`
+    paths where the whole round happens in one launch.
+    """
+
+    name = "abstract"
+
+    def __init__(self, hi_cfg: HIConfig,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None):
+        # `interpret`/`use_kernel` are accepted uniformly so the registry can
+        # construct any engine from one opts dict; the reference engine
+        # ignores them.
+        self.hi = hi_cfg
+        self.interpret = interpret
+        self.use_kernel = use_kernel
+        def decide(st, fs, keys):
+            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+            return fleet_decide(hi_cfg, st, fs, psi, zeta)
+
+        self._decide = jax.jit(decide)
+        self._feedback = jax.jit(
+            lambda st, dec, hrs, betas, sent:
+                fleet_feedback(hi_cfg, st, dec, hrs, betas, sent))
+
+    def init(self, n_streams: int) -> H2T2State:
+        """Fresh fleet state: every leaf batched over (n_streams,)."""
+        return fleet_init(self.hi, n_streams)
+
+    def step(self, state: H2T2State, fs, betas, hrs, keys
+             ) -> Tuple[H2T2State, StepOutput]:
+        """One slot for the whole fleet (decide + immediate feedback)."""
+        raise NotImplementedError
+
+    def run(self, fs, hrs, betas, key=None, *, stream_keys=None
+            ) -> Tuple[H2T2State, StepOutput]:
+        """Whole (S, T) horizon; same key tree as `run_fleet`."""
+        raise NotImplementedError
+
+    def decide(self, state: H2T2State, fs, keys) -> FleetDecision:
+        """Phase 1 of a slot: offload decisions, no labels consumed."""
+        return self._decide(state, fs, keys)
+
+    def feedback(self, state: H2T2State, decision: FleetDecision,
+                 hrs, betas, sent=None) -> Tuple[H2T2State, StepOutput]:
+        """Phase 2: charge losses + update weights from (delayed) RDL labels."""
+        if sent is None:
+            sent = decision.offload
+        return self._feedback(state, decision, hrs, betas, sent)
+
+
+@register_engine("reference")
+class ReferenceEngine(PolicyEngine):
+    """Vmapped per-stream `h2t2_step` — the paper-shaped jnp path."""
+
+    def __init__(self, hi_cfg: HIConfig,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None):
+        super().__init__(hi_cfg, interpret, use_kernel)
+        self._step = jax.jit(jax.vmap(
+            lambda st, f, b, hr, k: h2t2_step(hi_cfg, st, f, b, hr, k)))
+
+    def step(self, state, fs, betas, hrs, keys):
+        return self._step(state, fs, betas, hrs, keys)
+
+    def run(self, fs, hrs, betas, key=None, *, stream_keys=None):
+        return run_fleet(self.hi, fs, hrs, betas, key,
+                         stream_keys=stream_keys)
+
+
+@register_engine("fused")
+class FusedEngine(PolicyEngine):
+    """Batched `fleet_hedge_step`: Pallas kernel on TPU, jnp oracle elsewhere.
+
+    `time_block > 1` makes `run` drive the multi-round kernel
+    (`fleet_hedge_rounds`), which keeps the expert grids in VMEM for
+    `time_block` rounds per launch; the horizon must divide evenly.
+    """
+
+    def __init__(self, hi_cfg: HIConfig,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None,
+                 time_block: int = 1):
+        super().__init__(hi_cfg, interpret, use_kernel)
+        self.time_block = time_block
+
+        def step(state, fs, betas, hrs, keys):
+            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+            return fleet_step_fused(hi_cfg, state, fs, psi, zeta, hrs, betas,
+                                    use_kernel=use_kernel, interpret=interpret)
+
+        self._step = jax.jit(step)
+
+    def step(self, state, fs, betas, hrs, keys):
+        return self._step(state, fs, betas, hrs, keys)
+
+    def run(self, fs, hrs, betas, key=None, *, stream_keys=None):
+        return run_fleet_fused(self.hi, fs, hrs, betas, key,
+                               use_kernel=self.use_kernel,
+                               interpret=self.interpret,
+                               time_block=self.time_block,
+                               stream_keys=stream_keys)
+
+
+@register_engine("sharded")
+class ShardedEngine(PolicyEngine):
+    """Fleet policy `shard_map`ped over a device mesh, stream axis sharded.
+
+    The fleet's (S,) axis is split across `devices` (default: all visible
+    devices). `step`/`run` shard the same `fleet_step_fused` the fused
+    engine runs; `decide`/`feedback` (the HIServer serving path) shard
+    `fleet_decide`/`fleet_feedback` the same way. There are no cross-stream
+    collectives — streams are independent, so the only cost is the pad to a
+    device-count multiple. Decisions are bit-for-bit those of the fused
+    engine for the same keys.
+
+    On CPU, validate with XLA_FLAGS=--xla_force_host_platform_device_count=N
+    (set before importing jax).
+    """
+
+    AXIS = "streams"
+
+    def __init__(self, hi_cfg: HIConfig,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None,
+                 devices: Optional[Sequence[jax.Device]] = None):
+        super().__init__(hi_cfg, interpret, use_kernel)
+        devs = list(devices) if devices is not None else jax.devices()
+        self.mesh = Mesh(np.array(devs), (self.AXIS,))
+        self.n_devices = len(devs)
+
+        spec = P(self.AXIS)
+        unpad = lambda s: lambda tree: jax.tree_util.tree_map(
+            lambda a: a[:s], tree)
+
+        sharded_step = shard_map(
+            lambda st, f, psi, zeta, hr, beta: fleet_step_fused(
+                hi_cfg, st, f, psi, zeta, hr, beta,
+                use_kernel=use_kernel, interpret=interpret),
+            mesh=self.mesh,
+            in_specs=(spec, spec, spec, spec, spec, spec),
+            out_specs=(spec, spec),
+            check_rep=False,
+        )
+        self._sharded_step = sharded_step
+
+        def step(state, fs, betas, hrs, keys):
+            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+            s = fs.shape[0]
+            args = self._pad_tree((state, fs, psi, zeta, hrs, betas), s)
+            return unpad(s)(sharded_step(*args))
+
+        self._step = jax.jit(step)
+
+        def run(fs, hrs, betas, psis, zetas):
+            s, t = fs.shape
+            state_p, *xs_p = self._pad_tree(
+                (fleet_init(hi_cfg, s), fs, psis, zetas, hrs, betas), s)
+
+            def body(st, xs):
+                f, psi, zeta, hr, beta = xs
+                return sharded_step(st, f, psi, zeta, hr, beta)
+
+            final, outs = jax.lax.scan(body, state_p,
+                                       tuple(a.T for a in xs_p))
+            # outs leaves are (T, S_pad) → (S, T)
+            return (unpad(s)(final), jax.tree_util.tree_map(
+                lambda a: jnp.swapaxes(a, 0, 1)[:s], outs))
+
+        self._run = jax.jit(run)
+
+        # The serving split runs through the mesh too, so HIServer's
+        # decide/feedback phases scale with the fleet like step/run do.
+        sharded_decide = shard_map(
+            lambda st, fs, psi, zeta: fleet_decide(hi_cfg, st, fs, psi, zeta),
+            mesh=self.mesh, in_specs=(spec, spec, spec, spec),
+            out_specs=spec, check_rep=False)
+
+        def decide(state, fs, keys):
+            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+            s = fs.shape[0]
+            args = self._pad_tree((state, fs, psi, zeta), s)
+            return unpad(s)(sharded_decide(*args))
+
+        self._decide = jax.jit(decide)
+
+        sharded_feedback = shard_map(
+            lambda st, dec, hrs, betas, sent: fleet_feedback(
+                hi_cfg, st, dec, hrs, betas, sent),
+            mesh=self.mesh, in_specs=(spec, spec, spec, spec, spec),
+            out_specs=(spec, spec), check_rep=False)
+
+        def feedback(state, decision, hrs, betas, sent):
+            s = hrs.shape[0]
+            args = self._pad_tree((state, decision, hrs, betas, sent), s)
+            return unpad(s)(sharded_feedback(*args))
+
+        self._feedback = jax.jit(feedback)
+
+    def _pad_tree(self, tree, s: int):
+        """Zero-pad every (S,)-leading leaf up to a device-count multiple.
+
+        Padding rows see an all-zero (but valid) expert grid and inert
+        inputs; their outputs are sliced off, so they never affect real
+        streams (no step has cross-stream coupling).
+        """
+        pad = (-s) % self.n_devices
+        if pad == 0:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0), tree)
+
+    def step(self, state, fs, betas, hrs, keys):
+        return self._step(state, fs, betas, hrs, keys)
+
+    def run(self, fs, hrs, betas, key=None, *, stream_keys=None):
+        s, t = fs.shape
+        psis, zetas = draw_fleet_randomness(self.hi, key, s, t, stream_keys)
+        return self._run(fs, hrs, betas, psis, zetas.astype(jnp.int32))

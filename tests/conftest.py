@@ -5,6 +5,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import jax.numpy as jnp
 import pytest
 
 jax.config.update("jax_enable_x64", False)
@@ -13,3 +14,12 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+def fleet_trace(key, s, t, beta=0.3):
+    """Random (fs, hrs, betas) fleet trace shared by the engine/fleet suites."""
+    ks = jax.random.split(key, 3)
+    fs = jax.random.uniform(ks[0], (s, t))
+    hrs = jax.random.bernoulli(ks[1], 0.5, (s, t)).astype(jnp.int32)
+    betas = jnp.full((s, t), beta)
+    return fs, hrs, betas

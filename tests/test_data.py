@@ -4,7 +4,43 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.types import StreamSpec
 from repro.data import DATASETS, calibrate, dataset_trace, drift_trace, empirical_confusion
+
+
+def test_stream_spec_rejects_bad_p1():
+    with pytest.raises(ValueError, match="p1"):
+        StreamSpec("bad", accuracy=0.7, fp=0.1, fn=0.2, p1=0.0)
+    with pytest.raises(ValueError, match="p1"):
+        StreamSpec("bad", accuracy=0.7, fp=0.1, fn=0.2, p1=1.0)
+    with pytest.raises(ValueError, match="p1"):
+        StreamSpec("bad", accuracy=0.7, fp=0.1, fn=0.2, p1=-0.3)
+
+
+def test_stream_spec_rejects_fn_above_prior():
+    # fn is a fraction of ALL samples; it cannot exceed the class-1 prior.
+    with pytest.raises(ValueError, match="fn"):
+        StreamSpec("bad", accuracy=0.5, fp=0.1, fn=0.4, p1=0.3)
+    # Boundary fn == p1 is legal (every class-1 sample misclassified).
+    StreamSpec("edge", accuracy=0.5, fp=0.1, fn=0.4, p1=0.4)
+
+
+def test_stream_spec_rejects_fp_above_class0_prior():
+    # Mirrored bound: fp cannot exceed the class-0 prior 1 - p1.
+    with pytest.raises(ValueError, match="fp"):
+        StreamSpec("bad", accuracy=0.5, fp=0.4, fn=0.1, p1=0.7)
+    StreamSpec("edge", accuracy=0.5, fp=0.3, fn=0.2, p1=0.7)
+
+
+def test_stream_spec_rejects_bad_confusion_total():
+    with pytest.raises(ValueError, match="accuracy"):
+        StreamSpec("bad", accuracy=0.5, fp=0.1, fn=0.1)
+
+
+def test_stream_spec_accepts_all_paper_tables():
+    for spec in DATASETS.values():       # construction re-runs __post_init__
+        StreamSpec(spec.name, accuracy=spec.accuracy, fp=spec.fp,
+                   fn=spec.fn, p1=spec.p1)
 
 
 @pytest.mark.parametrize("name", sorted(DATASETS))

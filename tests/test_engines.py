@@ -1,0 +1,294 @@
+"""PolicyEngine protocol + registry: resolution, cross-engine parity, the
+decide/feedback split, and the sharded (device-mesh) engine.
+
+The sharded tests use however many devices are visible; CI runs the whole
+suite a second time under XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the multi-device path (including S not divisible by the device count) is
+exercised on every push. A `slow`-marked subprocess test forces 8 devices
+locally too.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HIConfig,
+    draw_psi_zeta,
+    fleet_decide,
+    fleet_feedback,
+    fleet_init,
+    h2t2_step,
+    local_fallback_pred,
+)
+from repro.serving import (
+    FusedEngine,
+    PolicyEngine,
+    ReferenceEngine,
+    ShardedEngine,
+    available_engines,
+    get_engine,
+    register_engine,
+)
+
+
+from conftest import fleet_trace as _fleet_trace
+
+
+def _assert_outputs_equal(a, b, atol=1e-5):
+    assert np.array_equal(np.asarray(a.offload), np.asarray(b.offload))
+    assert np.array_equal(np.asarray(a.pred), np.asarray(b.pred))
+    assert np.array_equal(np.asarray(a.local_pred), np.asarray(b.local_pred))
+    assert np.array_equal(np.asarray(a.explored), np.asarray(b.explored))
+    np.testing.assert_allclose(np.asarray(a.loss), np.asarray(b.loss),
+                               atol=atol)
+
+
+def _assert_states_close(a, b, atol=1e-4):
+    valid = np.isfinite(np.asarray(a.log_w))
+    np.testing.assert_allclose(np.asarray(b.log_w)[valid],
+                               np.asarray(a.log_w)[valid], atol=atol)
+    assert np.array_equal(np.asarray(a.n_offloads), np.asarray(b.n_offloads))
+    assert np.array_equal(np.asarray(a.t), np.asarray(b.t))
+
+
+# --------------------------------- registry -----------------------------------
+
+
+def test_registry_resolves_all_three_engines():
+    assert set(available_engines()) >= {"reference", "fused", "sharded"}
+    cfg = HIConfig(bits=3)
+    assert isinstance(get_engine("reference", cfg), ReferenceEngine)
+    assert isinstance(get_engine("fused", cfg), FusedEngine)
+    assert isinstance(get_engine("sharded", cfg), ShardedEngine)
+
+
+def test_registry_unknown_engine_raises():
+    with pytest.raises(ValueError, match="engine"):
+        get_engine("warp-drive", HIConfig())
+
+
+def test_register_engine_extends_registry():
+    @register_engine("_test_dummy")
+    class Dummy(ReferenceEngine):
+        pass
+
+    try:
+        assert "_test_dummy" in available_engines()
+        assert isinstance(get_engine("_test_dummy", HIConfig(bits=2)), Dummy)
+    finally:
+        from repro.serving import policy_engine
+        del policy_engine._REGISTRY["_test_dummy"]
+
+
+# --------------------------- cross-engine parity ------------------------------
+
+
+def test_reference_vs_fused_step_identical():
+    """The acceptance bar: reference and fused make decision-for-decision
+    identical slot steps for the same per-stream keys."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    s = 8
+    ref = get_engine("reference", cfg)
+    fus = get_engine("fused", cfg)
+    state = ref.init(s)
+    key = jax.random.PRNGKey(23)
+    for t in range(5):
+        key, k1, k2 = jax.random.split(key, 3)
+        fs = jax.random.uniform(k1, (s,))
+        hrs = jax.random.bernoulli(k2, 0.5, (s,)).astype(jnp.int32)
+        betas = jnp.full((s,), 0.25)
+        keys = jax.random.split(jax.random.fold_in(key, t), s)
+        s_ref, o_ref = ref.step(state, fs, betas, hrs, keys)
+        s_fus, o_fus = fus.step(state, fs, betas, hrs, keys)
+        _assert_outputs_equal(o_ref, o_fus, atol=1e-6)
+        _assert_states_close(s_ref, s_fus, atol=1e-5)
+        state = s_fus
+
+
+@pytest.mark.parametrize("name", ["reference", "fused", "sharded"])
+def test_engine_run_matches_reference_run(name):
+    cfg = HIConfig(bits=3, eps=0.1, eta=0.9)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(1), 8, 96)
+    key = jax.random.PRNGKey(11)
+    st_ref, o_ref = get_engine("reference", cfg).run(fs, hrs, betas, key)
+    st_eng, o_eng = get_engine(name, cfg).run(fs, hrs, betas, key)
+    _assert_outputs_equal(o_ref, o_eng)
+    _assert_states_close(st_ref, st_eng)
+
+
+def test_engine_run_stream_keys_pins_randomness():
+    cfg = HIConfig(bits=3, eps=0.05)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(2), 4, 48)
+    key = jax.random.PRNGKey(3)
+    stream_keys = jax.random.split(key, 4)
+    for name in available_engines():
+        _, via_key = get_engine(name, cfg).run(fs, hrs, betas, key)
+        _, via_sk = get_engine(name, cfg).run(fs, hrs, betas,
+                                              stream_keys=stream_keys)
+        assert np.array_equal(np.asarray(via_key.offload),
+                              np.asarray(via_sk.offload)), name
+
+
+def test_fused_time_block_through_engine():
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(3), 8, 64)
+    key = jax.random.PRNGKey(17)
+    _, o1 = get_engine("fused", cfg).run(fs, hrs, betas, key)
+    _, o8 = get_engine("fused", cfg, interpret=True,
+                       time_block=8).run(fs, hrs, betas, key)
+    assert np.array_equal(np.asarray(o1.offload), np.asarray(o8.offload))
+    np.testing.assert_allclose(np.asarray(o1.loss), np.asarray(o8.loss),
+                               atol=1e-5)
+
+
+# ---------------------------- decide/feedback split ---------------------------
+
+
+def test_decide_plus_feedback_equals_h2t2_step():
+    """fleet_decide ∘ fleet_feedback (full labels, immediate) reproduces the
+    vmapped `h2t2_step` exactly — states and every output leaf."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=0.9, decay=0.97)
+    s = 8
+    state = fleet_init(cfg, s)
+    key = jax.random.PRNGKey(0)
+    step = jax.vmap(lambda st, f, b, hr, k: h2t2_step(cfg, st, f, b, hr, k))
+    for t in range(10):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        fs = jax.random.uniform(k1, (s,))
+        hrs = jax.random.bernoulli(k2, 0.5, (s,)).astype(jnp.int32)
+        betas = jnp.full((s,), 0.3)
+        keys = jax.random.split(k3, s)
+        st_ref, o_ref = step(state, fs, betas, hrs, keys)
+        psi, zeta = draw_psi_zeta(keys, cfg.eps)
+        dec = fleet_decide(cfg, state, fs, psi, zeta)
+        st_df, o_df = fleet_feedback(cfg, state, dec, hrs, betas)
+        _assert_outputs_equal(o_ref, o_df, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(o_ref.q), np.asarray(o_df.q),
+                                   atol=1e-6)
+        _assert_states_close(st_ref, st_df, atol=1e-6)
+        state = st_ref
+
+
+def test_engine_decide_feedback_matches_step():
+    """Every engine's decide+feedback composition equals its own step."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    s = 6
+    fs = jax.random.uniform(jax.random.PRNGKey(1), (s,))
+    hrs = jax.random.bernoulli(jax.random.PRNGKey(2), 0.5, (s,)).astype(jnp.int32)
+    betas = jnp.full((s,), 0.3)
+    keys = jax.random.split(jax.random.PRNGKey(4), s)
+    for name in available_engines():
+        eng = get_engine(name, cfg)
+        state = eng.init(s)
+        st_step, o_step = eng.step(state, fs, betas, hrs, keys)
+        dec = eng.decide(state, fs, keys)
+        st_df, o_df = eng.feedback(state, dec, hrs, betas)
+        assert np.array_equal(np.asarray(o_step.offload),
+                              np.asarray(o_df.offload)), name
+        _assert_states_close(st_step, st_df, atol=1e-5)
+
+
+def test_feedback_sent_mask_drops_capacity_overflow():
+    """Offloads masked out of `sent` revert to local: no β, no weight update
+    from their (unobserved) label."""
+    cfg = HIConfig(bits=3, eps=0.0, eta=1.0)   # ε=0: offload ⇔ region-2 draw
+    s = 4
+    state = fleet_init(cfg, s)
+    fs = jnp.full((s,), 0.5)
+    psi = jnp.zeros((s,))                       # ψ=0 ≤ q → all offload
+    zeta = jnp.zeros((s,), bool)
+    dec = fleet_decide(cfg, state, fs, psi, zeta)
+    assert bool(jnp.all(dec.offload))
+    hrs = jnp.ones((s,), jnp.int32)
+    betas = jnp.full((s,), 0.4)
+    sent = jnp.asarray([True, True, False, False])
+    st, out = fleet_feedback(cfg, state, dec, hrs, betas, sent=sent)
+    assert np.array_equal(np.asarray(out.offload), np.asarray(sent))
+    # Dropped streams fall back to the conditional local draw (NOT the raw
+    # local_pred, which is deterministically 1 for a region-2 offload)...
+    assert np.array_equal(np.asarray(out.pred[2:]),
+                          np.asarray(local_fallback_pred(dec)[2:]))
+    # ...pay φ not β, and contribute no offload count.
+    assert np.array_equal(np.asarray(st.n_offloads), [1, 1, 0, 0])
+    # Sent streams' experts got the β pseudo-loss; dropped streams' did not.
+    assert not np.allclose(np.asarray(st.log_w[0]), np.asarray(st.log_w[2]),
+                           atol=1e-6)
+
+
+# ------------------------------ sharded engine --------------------------------
+
+
+@pytest.mark.parametrize("s", [8, 12, 3])
+def test_sharded_matches_fused_any_stream_count(s):
+    """Sharded ≡ fused for S divisible and NOT divisible by the device count
+    (padding path), on however many devices this process sees."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(s), s, 64)
+    key = jax.random.PRNGKey(7)
+    st_f, o_f = get_engine("fused", cfg).run(fs, hrs, betas, key)
+    st_s, o_s = get_engine("sharded", cfg).run(fs, hrs, betas, key)
+    _assert_outputs_equal(o_f, o_s)
+    _assert_states_close(st_f, st_s)
+
+
+def test_sharded_step_matches_fused_step():
+    cfg = HIConfig(bits=3, eps=0.1)
+    s = 5
+    fus = get_engine("fused", cfg)
+    shd = get_engine("sharded", cfg)
+    state = shd.init(s)
+    fs = jax.random.uniform(jax.random.PRNGKey(0), (s,))
+    hrs = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (s,)).astype(jnp.int32)
+    betas = jnp.full((s,), 0.2)
+    keys = jax.random.split(jax.random.PRNGKey(2), s)
+    s_f, o_f = fus.step(state, fs, betas, hrs, keys)
+    s_s, o_s = shd.step(state, fs, betas, hrs, keys)
+    _assert_outputs_equal(o_f, o_s)
+    _assert_states_close(s_f, s_s)
+    assert o_s.offload.shape == (s,)
+    assert s_s.log_w.shape == s_f.log_w.shape
+
+
+def test_sharded_mesh_spans_all_devices():
+    eng = get_engine("sharded", HIConfig(bits=2))
+    assert eng.n_devices == len(jax.devices())
+    assert eng.mesh.shape == {"streams": eng.n_devices}
+
+
+@pytest.mark.slow
+def test_sharded_parity_under_8_fake_devices_subprocess():
+    """Force 8 host devices in a clean interpreter and re-check parity with a
+    stream count that does not divide evenly (S=12 over 8 devices)."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core import HIConfig
+from repro.serving import get_engine
+cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+s, t = 12, 64
+fs = jax.random.uniform(ks[0], (s, t))
+hrs = jax.random.bernoulli(ks[1], 0.5, (s, t)).astype(jnp.int32)
+betas = jnp.full((s, t), 0.3)
+key = jax.random.PRNGKey(7)
+_, o_f = get_engine("fused", cfg).run(fs, hrs, betas, key)
+_, o_s = get_engine("sharded", cfg).run(fs, hrs, betas, key)
+assert np.array_equal(np.asarray(o_f.offload), np.asarray(o_s.offload))
+np.testing.assert_allclose(np.asarray(o_f.loss), np.asarray(o_s.loss), atol=1e-5)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

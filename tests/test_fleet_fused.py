@@ -3,7 +3,7 @@
 `run_fleet_fused` pre-draws the (ψ, ζ) randomness with the exact key tree of
 `run_fleet`, so the two must agree decision-for-decision — not just in
 distribution — on any trace. The multi-round (time-blocked) kernel must match
-a chain of single-round steps, and both serving policy backends must be
+a chain of single-round steps, and the serving policy engines must be
 interchangeable.
 """
 import jax
@@ -14,15 +14,10 @@ import pytest
 from repro.core import HIConfig, fleet_init, run_fleet, run_fleet_fused
 from repro.kernels.hedge.ops import fleet_hedge_rounds, fleet_hedge_step
 from repro.kernels.hedge.ref import hedge_rounds_ref, hedge_step_ref
-from repro.serving import make_policy_step
+from repro.serving import get_engine
 
 
-def _fleet_trace(key, s, t, beta=0.3):
-    ks = jax.random.split(key, 3)
-    fs = jax.random.uniform(ks[0], (s, t))
-    hrs = jax.random.bernoulli(ks[1], 0.5, (s, t)).astype(jnp.int32)
-    betas = jnp.full((s, t), beta)
-    return fs, hrs, betas
+from conftest import fleet_trace as _fleet_trace
 
 
 def _rand_logw(key, s, g):
@@ -177,17 +172,17 @@ def test_rounds_kernel_golden_vs_ref_and_chained_steps(bits):
     np.testing.assert_allclose(np.asarray(lw), np.asarray(outk[0]), atol=1e-4)
 
 
-# --------------------------- serving policy backends --------------------------
+# --------------------------- serving policy engines ---------------------------
 
 
-def test_policy_backends_interchangeable():
-    """make_policy_step("reference") and ("fused") give identical slot
-    decisions and states for identical per-stream keys."""
+def test_policy_engines_interchangeable():
+    """get_engine("reference") and ("fused") give identical slot decisions
+    and states for identical per-stream keys (cross-engine state handoff)."""
     cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
     s = 8
     state = fleet_init(cfg, s)
-    ref_step = make_policy_step(cfg, backend="reference")
-    fus_step = make_policy_step(cfg, backend="fused")
+    ref = get_engine("reference", cfg)
+    fus = get_engine("fused", cfg)
     key = jax.random.PRNGKey(23)
     for t in range(5):
         key, k1, k2 = jax.random.split(key, 3)
@@ -195,8 +190,8 @@ def test_policy_backends_interchangeable():
         hrs = jax.random.bernoulli(k2, 0.5, (s,)).astype(jnp.int32)
         betas = jnp.full((s,), 0.25)
         keys = jax.random.split(jax.random.fold_in(key, t), s)
-        s_ref, o_ref = ref_step(state, fs, betas, hrs, keys)
-        s_fus, o_fus = fus_step(state, fs, betas, hrs, keys)
+        s_ref, o_ref = ref.step(state, fs, betas, hrs, keys)
+        s_fus, o_fus = fus.step(state, fs, betas, hrs, keys)
         assert np.array_equal(np.asarray(o_ref.offload), np.asarray(o_fus.offload))
         assert np.array_equal(np.asarray(o_ref.pred), np.asarray(o_fus.pred))
         np.testing.assert_allclose(np.asarray(o_ref.loss),
@@ -205,8 +200,3 @@ def test_policy_backends_interchangeable():
         np.testing.assert_allclose(np.asarray(s_fus.log_w)[valid],
                                    np.asarray(s_ref.log_w)[valid], atol=1e-5)
         state = s_fus
-
-
-def test_policy_backend_unknown_raises():
-    with pytest.raises(ValueError, match="backend"):
-        make_policy_step(HIConfig(), backend="warp-drive")

@@ -1,10 +1,16 @@
-"""Serving integration: HI server end-to-end with tiny LDL/RDL backbones."""
+"""Serving integration: the offload-aware HI server end-to-end with tiny
+LDL/RDL backbones, plus batching-compaction coverage.
+
+The load-bearing acceptance test here is `test_rdl_called_only_on_offloads`:
+the RDL must never be invoked on non-offloaded samples — invocations (padded
+capacity allowed) must match the offloaded-sample count.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import LDL_CONFIG, RDL_CONFIG
+from repro.configs import LDL_CONFIG
 from repro.core import HIConfig
 from repro.models import init_params
 from repro.models.heads import binary_head_init
@@ -15,6 +21,9 @@ from repro.serving import (
     compact_offloads,
     scatter_results,
 )
+
+
+# ------------------------------ offload batching ------------------------------
 
 
 def test_compact_and_scatter_roundtrip():
@@ -29,40 +38,207 @@ def test_compact_and_scatter_roundtrip():
     assert np.array_equal(np.asarray(routed), [10, -1, 20, 30, -1, 40])
 
 
-def test_compact_overflow_drops_tail():
-    tokens = jnp.zeros((5, 3), jnp.int32)
-    offload = jnp.ones((5,), bool)
+def test_compact_overflow_drops_tail_deterministically():
+    """Overflow beyond capacity always drops the HIGHEST stream indices —
+    compaction is in stream order, so the kept set is a deterministic prefix."""
+    tokens = jnp.arange(6 * 3).reshape(6, 3).astype(jnp.int32)
+    offload = jnp.asarray([True, False, True, True, True, True])   # 5 offloads
     batch = compact_offloads(tokens, offload, capacity=3)
     assert int(jnp.sum(batch.valid)) == 3
+    # Kept: streams 0, 2, 3 (first three offloads); dropped: 4 and 5.
+    assert np.array_equal(np.asarray(batch.src), [0, 2, 3])
+    assert np.array_equal(np.asarray(batch.tokens), np.asarray(tokens)[[0, 2, 3]])
+    # Repeated calls agree bit-for-bit.
+    again = compact_offloads(tokens, offload, capacity=3)
+    assert np.array_equal(np.asarray(batch.src), np.asarray(again.src))
 
 
-def test_hi_server_end_to_end(rng):
-    """Tiny LDL/RDL transformers + H2T2 router: loss accounting consistent,
-    offload rate sane, and cheaper than full-offload at moderate β."""
-    n_streams, horizon, seq = 8, 60, 16
+def test_compact_scatter_restores_per_stream_order():
+    """Scatter routes each packed result back to exactly its source stream,
+    whatever the offload pattern."""
+    key = jax.random.PRNGKey(0)
+    for trial in range(5):
+        key, k1 = jax.random.split(key)
+        offload = jax.random.bernoulli(k1, 0.5, (9,))
+        tokens = (jnp.arange(9)[:, None] * jnp.ones((1, 2))).astype(jnp.int32)
+        batch = compact_offloads(tokens, offload, capacity=9)
+        # RDL result = 100 + source stream id (recoverable from the tokens).
+        results = jnp.where(batch.valid, 100 + batch.tokens[:, 0], -7)
+        routed = scatter_results(results, batch, n_streams=9, fill=-1)
+        expect = np.where(np.asarray(offload), 100 + np.arange(9), -1)
+        assert np.array_equal(np.asarray(routed), expect)
+
+
+def test_compact_offloads_jit_shape_stable():
+    """Output shapes depend only on capacity, never on the offload count, so
+    the op stays jit-compilable with a single trace."""
+    traces = []
+
+    @jax.jit
+    def compact4(tokens, offload):
+        traces.append(1)
+        return compact_offloads(tokens, offload, capacity=4)
+
+    tokens = jnp.zeros((7, 3), jnp.int32)
+    for n_off in (0, 2, 7):
+        offload = jnp.arange(7) < n_off
+        batch = compact4(tokens, offload)
+        assert batch.tokens.shape == (4, 3)
+        assert batch.valid.shape == (4,)
+        assert batch.src.shape == (4,)
+        assert int(jnp.sum(batch.valid)) == min(n_off, 4)
+    assert len(traces) == 1, "retriggered trace ⇒ shape depends on data"
+
+
+# ------------------------------ the HI server ---------------------------------
+
+
+def _tiny_server(n_streams, engine="fused", capacity=None, eps=0.1):
     ldl_cfg = LDL_CONFIG.reduced(vocab=64)
-    rdl_cfg = RDL_CONFIG.reduced(vocab=64)
-    kp, kh, kt = jax.random.split(rng, 3)
+    kp = jax.random.PRNGKey(0)
     ldl_params = init_params(kp, ldl_cfg)
     ldl_head = binary_head_init(kp, ldl_cfg)
     ldl = classifier_fn(ldl_cfg, ldl_params, ldl_head)
 
+    calls = []
+
     def rdl(tokens):
-        # Remote model = ground-truth proxy (paper's setting): label by parity.
+        calls.append(int(tokens.shape[0]))
         return (jnp.sum(tokens == 7, axis=-1) % 2).astype(jnp.int32)
 
-    hi = HIConfig(bits=4, eps=0.1, eta=1.0)
-    server = HIServer(HIServerConfig(n_streams=n_streams, hi=hi), ldl, rdl)
+    hi = HIConfig(bits=4, eps=eps, eta=1.0)
+    cfg = HIServerConfig(n_streams=n_streams, hi=hi, engine=engine,
+                         offload_capacity=capacity)
+    return HIServer(cfg, ldl, rdl), calls
+
+
+def test_hi_server_end_to_end(rng):
+    """Tiny LDL transformer + H2T2 router with offload-only RDL batching:
+    cost accounting consistent, offload rate sane, savings reported."""
+    n_streams, horizon, seq = 8, 60, 16
+    server, calls = _tiny_server(n_streams)
+    kt = jax.random.split(rng, 1)[0]
     tokens = jax.random.randint(kt, (horizon, n_streams, seq), 0, 64, jnp.int32)
     betas = jnp.full((horizon, n_streams), 0.2)
     state, summary = server.run(tokens, betas, jax.random.PRNGKey(5))
-    assert 0.0 <= summary["offload_rate"] <= 1.0
-    assert summary["avg_loss"] <= 1.0
+    n = horizon * n_streams
     assert int(state.t) == horizon
-    # Untrained LDL ≈ random vs parity labels: H2T2 should not do worse than
-    # always paying max(FP, FN) cost, and exploration keeps offloads > 0.
+    assert state.pending is None            # run() flushes the double buffer
+    assert 0.0 <= summary["offload_rate"] <= 1.0
+    # Exploration keeps offloads alive even for an untrained LDL.
     assert summary["offload_rate"] > 0.01
-    assert summary["avg_loss"] <= 1.0
+    # Observable cost is β per offloaded sample.
+    assert abs(summary["avg_offload_cost"]
+               - 0.2 * summary["offload_rate"]) < 1e-6
+    # The whole point: the RDL evaluated only the offloaded samples.
+    assert summary["rdl_evals"] == float(state.total_offloads)
+    assert summary["rdl_savings"] == 1.0 - summary["rdl_evals"] / n
+    assert summary["rdl_batches"] <= horizon
+    # Row accounting includes the capacity padding of every launch.
+    assert summary["rdl_compute_rows"] == summary["rdl_batches"] * n_streams
+    assert summary["rdl_row_savings"] <= summary["rdl_savings"]
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused", "sharded"])
+def test_rdl_called_only_on_offloads(engine):
+    """Acceptance: RDL invocations == offloaded-sample count (padded capacity
+    allowed) — the server never evaluates the RDL on non-offloaded samples."""
+    n_streams, horizon, seq = 8, 25, 12
+    server, calls = _tiny_server(n_streams, engine=engine)
+    tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                (horizon, n_streams, seq), 0, 64, jnp.int32)
+    betas = jnp.full((horizon, n_streams), 0.25)
+    state = server.init_state()
+    total_sent = 0
+    for t in range(horizon):
+        state, slot = server.serve_slot(
+            state, tokens[t], betas[t], jax.random.fold_in(jax.random.PRNGKey(9), t))
+        total_sent += int(jnp.sum(slot.sent))
+    # Each RDL call is exactly one capacity-padded batch — never the raw slot.
+    assert all(c == server.cfg.capacity for c in calls)
+    # Valid rows across all calls == offloaded samples; padding is the only
+    # slack, and it is bounded by capacity per launch.
+    assert int(state.rdl_evals) == total_sent
+    assert sum(calls) <= int(state.rdl_batches) * server.cfg.capacity
+    assert int(state.rdl_batches) == len(calls)
+    # Strictly fewer samples than evaluate-everything (untrained LDL won't
+    # offload 100% at β=0.25 with ε=0.1).
+    assert total_sent < horizon * n_streams
+
+
+def test_hi_server_capacity_overflow_reverts_to_local():
+    """With a tiny RDL capacity, overflowing offloads are dropped, pay no β,
+    and keep their local prediction."""
+    n_streams, horizon, seq = 8, 15, 12
+    cap = 2
+    server, calls = _tiny_server(n_streams, capacity=cap, eps=0.3)
+    tokens = jax.random.randint(jax.random.PRNGKey(2),
+                                (horizon, n_streams, seq), 0, 64, jnp.int32)
+    betas = jnp.full((n_streams,), 0.1)    # cheap offloads → lots of them
+    state = server.init_state()
+    saw_drop = False
+    for t in range(horizon):
+        state, slot = server.serve_slot(
+            state, tokens[t], betas, jax.random.fold_in(jax.random.PRNGKey(3), t))
+        dropped = np.asarray(slot.offload & ~slot.sent)
+        if dropped.any():
+            saw_drop = True
+            assert np.all(np.asarray(slot.loss)[dropped] == 0.0)
+        assert int(jnp.sum(slot.sent)) <= cap
+        assert all(c == cap for c in calls)
+    assert saw_drop, "capacity=2 with ε=0.3 should overflow at least once"
+    assert float(state.total_dropped) > 0
+
+
+def test_hi_server_overflow_drops_rotate_across_streams():
+    """Sustained overload must not starve a fixed set of streams: the drop
+    priority rotates with the slot index, so service spreads over the fleet."""
+    n_streams, horizon = 8, 16
+    server, _ = _tiny_server(n_streams, capacity=1, eps=0.5)
+    tokens = jax.random.randint(jax.random.PRNGKey(6),
+                                (horizon, n_streams, 12), 0, 64, jnp.int32)
+    betas = jnp.full((n_streams,), 0.05)   # cheap → near-constant offloading
+    state = server.init_state()
+    served = set()
+    for t in range(horizon):
+        state, slot = server.serve_slot(
+            state, tokens[t], betas, jax.random.fold_in(jax.random.PRNGKey(8), t))
+        served |= set(np.flatnonzero(np.asarray(slot.sent)).tolist())
+    # With capacity 1 and a fixed prefix policy only ~1 stream would ever be
+    # served; rotation must reach most of the fleet across 16 slots.
+    assert len(served) >= n_streams // 2, served
+
+
+def test_hi_server_config_rejects_nonpositive_capacity():
+    with pytest.raises(ValueError, match="offload_capacity"):
+        HIServerConfig(n_streams=4, offload_capacity=0)
+    with pytest.raises(ValueError, match="offload_capacity"):
+        HIServerConfig(n_streams=4, offload_capacity=-1)
+    assert HIServerConfig(n_streams=4).capacity == 4
+    assert HIServerConfig(n_streams=4, offload_capacity=2).capacity == 2
+
+
+def test_hi_server_delayed_feedback_double_buffer():
+    """Slot t's RDL labels update the policy at slot t+1: after slot 1 the
+    weights reflect slot 0's feedback, and flush() applies the last slot."""
+    n_streams = 4
+    server, _ = _tiny_server(n_streams, eps=0.5)   # lots of offloads
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (3, n_streams, 12),
+                                0, 64, jnp.int32)
+    betas = jnp.full((n_streams,), 0.2)
+    state = server.init_state()
+    w0 = np.asarray(state.policy.log_w).copy()
+    state, _ = server.serve_slot(state, tokens[0], betas, jax.random.PRNGKey(0))
+    # Decide phase alone must not move the weights.
+    assert np.array_equal(np.asarray(state.policy.log_w), w0)
+    assert state.pending is not None
+    state, _ = server.serve_slot(state, tokens[1], betas, jax.random.PRNGKey(1))
+    w2 = np.asarray(state.policy.log_w)
+    # Slot 0's feedback has now been applied (some stream offloaded at ε=0.5).
+    assert not np.array_equal(w2, w0)
+    flushed = server.flush(state)
+    assert flushed.pending is None
+    assert not np.array_equal(np.asarray(flushed.policy.log_w), w2)
 
 
 def test_engine_generate(rng):
