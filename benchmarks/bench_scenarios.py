@@ -1,0 +1,70 @@
+"""BEYOND-PAPER: cost/regret sweep across every registered workload scenario.
+
+One fleet per scenario runs CHUNKED through the chosen `PolicyEngine`
+(`engine.run_source` — the (S, T) trace is never materialized), reporting
+the policy-observed average cost (β on offload, φ against the remote
+label), the ground-truth average cost (φ against `ys` — these diverge under
+`noisy_rdl`, where an offloaded sample can pay β *and* a misclassification),
+and the offload rate. A second pass reports Theorem-2-style empirical
+regret per scenario on a 1-stream source (the offline comparator needs the
+materialized trace, so horizons stay modest there).
+
+`--scenario a,b` restricts the sweep; default is every registered scenario.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import engine_cached
+from repro.core import HIConfig, regret
+from repro.data.scenarios import available_scenarios, get_scenario
+
+
+def run(quick: bool = False, engine: str = "fused",
+        scenario: str = "") -> List[str]:
+    rows = []
+    names = [n for n in scenario.split(",") if n] or sorted(
+        available_scenarios())
+    horizon = 2048 if quick else 16_384
+    block = 256 if quick else 1024
+    n_streams = 8
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    eng = engine_cached(engine, cfg)
+    for name in names:
+        src = get_scenario(name, n_streams=n_streams, horizon=horizon,
+                           block=block, key=jax.random.PRNGKey(7), beta=0.3)
+        t0 = time.perf_counter()
+        _, out = eng.run_source(src, jax.random.PRNGKey(11))
+        jax.block_until_ready(out.loss)
+        us = (time.perf_counter() - t0) * 1e6
+        n = n_streams * horizon
+        rows.append(
+            f"scenario_{name},{us:.0f},"
+            f"cost={float(jnp.sum(out.loss)) / n:.4f},"
+            f"true_cost={float(jnp.sum(out.true_loss)) / n:.4f},"
+            f"offload_rate={float(jnp.sum(out.offloads)) / n:.3f}")
+
+    reg_horizon = 2000 if quick else 8000
+    reg_cfg = cfg.with_horizon(reg_horizon)
+    reg_eng = engine_cached(engine, reg_cfg)
+    for name in names:
+        src1 = get_scenario(name, n_streams=1, horizon=reg_horizon,
+                            block=reg_horizon, key=jax.random.PRNGKey(7),
+                            beta=0.3)
+        t0 = time.perf_counter()
+        res = regret.empirical_regret(reg_cfg, src1,
+                                      key=jax.random.PRNGKey(3),
+                                      n_seeds=2 if quick else 4,
+                                      run=reg_eng.run)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(f"scenario_{name}_regret,{us:.0f},"
+                    f"regret={res['regret']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -14,6 +14,8 @@ configuration, matching the paper's artifacts:
     kernels attention/SSD oracle microbenchmarks
     drift   BEYOND-PAPER: discounted-hedge adaptation under mid-stream shift
     multiclass BEYOND-PAPER: online K-class HI via learned risk threshold (paper §6)
+    scenarios BEYOND-PAPER: cost/regret across the ScenarioSource registry
+              (chunked engine runs; --scenario restricts the sweep)
 """
 from __future__ import annotations
 
@@ -32,6 +34,7 @@ from benchmarks import (
     bench_fig10,
     bench_kernels,
     bench_regret,
+    bench_scenarios,
 )
 
 MODULES = {
@@ -44,6 +47,7 @@ MODULES = {
     "kernels": bench_kernels,
     "drift": bench_drift,
     "multiclass": bench_multiclass,
+    "scenarios": bench_scenarios,
 }
 
 
@@ -53,19 +57,27 @@ def main() -> int:
                     help="reduced horizons/sweeps (CI-sized)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of " + ",".join(MODULES))
+    from repro.data.scenarios import available_scenarios
     from repro.serving.policy_engine import available_engines
 
     ap.add_argument("--engine", default="fused",
                     choices=available_engines(),
                     help="H2T2 PolicyEngine for modules that run the fleet")
+    ap.add_argument("--scenario", default="",
+                    help="comma-separated ScenarioSource subset for "
+                         "scenario-aware modules; choose from "
+                         + ",".join(available_scenarios()))
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(MODULES)
     print("name,us_per_call,derived")
     failed = False
     for name in names:
         kwargs = {"quick": args.quick}
-        if "engine" in inspect.signature(MODULES[name].run).parameters:
+        params = inspect.signature(MODULES[name].run).parameters
+        if "engine" in params:
             kwargs["engine"] = args.engine
+        if "scenario" in params:
+            kwargs["scenario"] = args.scenario
         try:
             for row in MODULES[name].run(**kwargs):
                 print(row)

@@ -4,7 +4,9 @@ from repro.core.types import HIConfig, StreamSpec
 from repro.core.policy import (
     FleetDecision,
     H2T2State,
+    SourceRunOutput,
     StepOutput,
+    classification_cost,
     draw_fleet_randomness,
     draw_psi_zeta,
     effective_local_pred,
@@ -20,7 +22,10 @@ from repro.core.policy import (
     region_masks,
     run_fleet,
     run_fleet_fused,
+    run_fleet_source,
     run_stream,
+    source_slot_keys,
+    true_loss_fleet,
 )
 from repro.core.calibrated import (
     CalibratedDecision,
@@ -33,12 +38,14 @@ from repro.core.calibrated import (
 from repro.core import baselines, multiclass, offline, regret
 
 __all__ = [
-    "HIConfig", "StreamSpec", "FleetDecision", "H2T2State", "StepOutput",
+    "HIConfig", "StreamSpec", "FleetDecision", "H2T2State",
+    "SourceRunOutput", "StepOutput", "classification_cost",
     "draw_fleet_randomness", "draw_psi_zeta", "effective_local_pred",
     "fleet_decide", "fleet_feedback", "fleet_init", "fleet_step_fused",
     "h2t2_init", "h2t2_step", "local_fallback_pred", "pseudo_loss",
     "quantize", "region_masks",
-    "run_fleet", "run_fleet_fused", "run_stream",
+    "run_fleet", "run_fleet_fused", "run_fleet_source", "run_stream",
+    "source_slot_keys", "true_loss_fleet",
     "CalibratedDecision", "calibrated_rule", "chow_rule",
     "multiclass_regions", "multiclass_rule", "optimal_thresholds",
     "baselines", "multiclass", "offline", "regret",

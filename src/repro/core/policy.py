@@ -376,17 +376,122 @@ def draw_fleet_randomness(
     return jax.vmap(per_stream)(stream_keys)
 
 
+def source_slot_keys(key: jax.Array, t, n_streams: int) -> jnp.ndarray:
+    """Per-stream policy keys for absolute slot t of a source-driven run.
+
+    THE key contract for chunked (ScenarioSource) runs, the analogue of
+    `draw_fleet_randomness` for horizons that are never materialized:
+    stream s's round key at slot t is fold_in(fold_in(key, t), s). Purely
+    index-keyed, so every block size — and every engine, all of which
+    consume keys through `draw_psi_zeta` — sees identical randomness.
+    """
+    kt = jax.random.fold_in(key, t)
+    return jax.vmap(lambda i: jax.random.fold_in(kt, i))(
+        jnp.arange(n_streams))
+
+
+class SourceRunOutput(NamedTuple):
+    """Per-block fleet aggregates of a source-driven run; leaves are
+    (S, n_blocks) — O(S·T/block) residency instead of the (S, T) StepOutput.
+
+    `loss` is the policy-observed cost (β on offload, φ against the remote
+    label `hrs`); `true_loss` charges ground truth: β per offload PLUS
+    φ(final prediction, ys) — under `noisy_rdl` an offloaded sample can pay
+    both β and a misclassification, which observed accounting cannot see.
+    """
+
+    loss: jnp.ndarray        # (S, n_blocks) Σ observed loss per block
+    true_loss: jnp.ndarray   # (S, n_blocks) Σ β·O_t + φ(pred_t, y_t)
+    offloads: jnp.ndarray    # (S, n_blocks) int32 offload counts
+    explores: jnp.ndarray    # (S, n_blocks) int32 exploration counts
+    correct: jnp.ndarray     # (S, n_blocks) int32 count(pred_t == y_t)
+
+
+def classification_cost(cfg: HIConfig, pred: jnp.ndarray,
+                        label: jnp.ndarray) -> jnp.ndarray:
+    """φ(pred, label): δ₁ on a false positive, δ₋₁ on a false negative."""
+    return jnp.where(
+        pred == 1,
+        jnp.where(label == 0, cfg.delta_fp, 0.0),
+        jnp.where(label == 1, cfg.delta_fn, 0.0),
+    )
+
+
+def true_loss_fleet(cfg: HIConfig, out: StepOutput, ys: jnp.ndarray,
+                    betas: jnp.ndarray) -> jnp.ndarray:
+    """Ground-truth cost of a fleet slot: β per offload + φ(pred, y)."""
+    return (jnp.where(out.offload, betas, 0.0)
+            + classification_cost(cfg, out.pred, ys))
+
+
+def run_fleet_source(
+    cfg: HIConfig,
+    source,                  # ScenarioSource (duck-typed; keeps core ↛ data)
+    key: jax.Array,
+    *,
+    state: Optional[H2T2State] = None,
+    step_fn=None,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[H2T2State, SourceRunOutput]:
+    """Run a fleet over a `ScenarioSource` block-by-block, never holding the
+    (S, T) trace: each `lax.scan` block emits one (S, block) SlotBatch and
+    reduces it to per-block aggregates on device.
+
+    `step_fn(state, fs, betas, hrs, keys) -> (state, StepOutput)` selects the
+    execution path (pass a `PolicyEngine._step`); defaults to the fused fleet
+    step. Policy randomness follows `source_slot_keys(key, t, S)`, so every
+    step path produces identical decisions for the same `key`.
+    """
+    if key is None:
+        raise TypeError("run_fleet_source needs a policy `key` (the source "
+                        "carries only its own generative key)")
+    s, bsz = source.n_streams, source.block
+    if step_fn is None:
+        def step_fn(st, f, beta, hr, keys):
+            psi, zeta = draw_psi_zeta(keys, cfg.eps)
+            return fleet_step_fused(cfg, st, f, psi, zeta, hr, beta,
+                                    use_kernel=use_kernel, interpret=interpret)
+
+    if state is None:
+        state = fleet_init(cfg, s)
+    src_key = source.key
+
+    def slot_body(pst, xs):
+        f, hr, y, beta, t = xs
+        pst, out = step_fn(pst, f, beta, hr, source_slot_keys(key, t, s))
+        return pst, (out.loss, true_loss_fleet(cfg, out, y, beta),
+                     out.offload, out.explored, out.pred == y)
+
+    def block_body(carry, b):
+        pst, sst = carry
+        sst, batch = source.emit(sst, src_key, b)
+        ts = b * bsz + jnp.arange(bsz, dtype=jnp.int32)
+        tp = lambda a: jnp.swapaxes(a, 0, 1)
+        pst, per = jax.lax.scan(
+            slot_body, pst,
+            (tp(batch.fs), tp(batch.hrs), tp(batch.ys), tp(batch.betas), ts))
+        loss, true, off, exp_, corr = per                     # (block, S)
+        return (pst, sst), (
+            jnp.sum(loss, 0), jnp.sum(true, 0),
+            jnp.sum(off.astype(jnp.int32), 0),
+            jnp.sum(exp_.astype(jnp.int32), 0),
+            jnp.sum(corr.astype(jnp.int32), 0))
+
+    (final, _), blocks = jax.lax.scan(
+        block_body, (state, source.init_state()),
+        jnp.arange(source.n_blocks))
+    tp = lambda a: jnp.swapaxes(a, 0, 1)                      # → (S, n_blocks)
+    return final, SourceRunOutput(*map(tp, blocks))
+
+
 def _charge_losses(
     cfg: HIConfig, offload: jnp.ndarray, local_pred: jnp.ndarray,
     h_r: jnp.ndarray, beta: jnp.ndarray,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Incurred loss and final prediction from the fused-step decisions."""
-    phi_local = jnp.where(
-        local_pred == 1,
-        jnp.where(h_r == 0, cfg.delta_fp, 0.0),
-        jnp.where(h_r == 1, cfg.delta_fn, 0.0),
-    )
-    loss = jnp.where(offload, beta, phi_local)
+    loss = jnp.where(offload, beta,
+                     classification_cost(cfg, local_pred, h_r))
     pred = jnp.where(offload, h_r.astype(jnp.int32), local_pred)
     return loss, pred
 

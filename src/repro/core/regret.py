@@ -34,14 +34,20 @@ def theorem2_bound(cfg: HIConfig, horizon: int) -> float:
 
 def empirical_regret(
     cfg: HIConfig,
-    fs: jnp.ndarray,
-    hrs: jnp.ndarray,
-    betas: jnp.ndarray,
-    key: jax.Array,
+    fs,
+    hrs: Optional[jnp.ndarray] = None,
+    betas: Optional[jnp.ndarray] = None,
+    key: Optional[jax.Array] = None,
     n_seeds: int = 8,
     run: Optional[Callable] = None,
 ) -> Dict[str, float]:
     """Mean cumulative H2T2 loss over seeds minus the offline best fixed θ⃗.
+
+    `fs` is either the (T,) confidence trace (with `hrs`/`betas`) or a
+    1-stream `ScenarioSource` (duck-typed, keeps core ↛ data), which is
+    materialized once — regret against the offline comparator is inherently
+    a full-trace metric, and the comparator reads the same remote labels
+    the policy's losses charge (`hrs`, not `ys`).
 
     `run` is a fleet runner `(fs, hrs, betas, key=None, *, stream_keys)` →
     `(state, StepOutput)` — pass a `PolicyEngine.run` bound method to choose
@@ -49,6 +55,20 @@ def empirical_regret(
     batch runs as one fleet (seed i → stream i with the same key
     `run_stream` would consume). Identical losses on every engine.
     """
+    if hasattr(fs, "materialize"):                    # ScenarioSource
+        if hrs is not None or betas is not None:
+            raise TypeError(
+                "empirical_regret(source, ...) takes no hrs/betas — the "
+                "source generates them")
+        if fs.n_streams != 1:
+            raise ValueError(
+                f"empirical_regret needs a 1-stream source (got "
+                f"{fs.n_streams}); regret is a per-stream quantity")
+        batch = fs.materialize()
+        fs, hrs, betas = batch.fs[0], batch.hrs[0], batch.betas[0]
+    if hrs is None or betas is None or key is None:
+        raise TypeError("empirical_regret needs hrs/betas/key unless given "
+                        "a ScenarioSource")
     if run is None:
         run = functools.partial(policy.run_fleet_fused, cfg)
     keys = jax.random.split(key, n_seeds)

@@ -1,0 +1,376 @@
+"""ScenarioSource registry: streamed, nonstationary workload generation.
+
+The paper's headline claims beyond the regret bound are robustness to
+distribution shift and to mismatched classifiers; this module turns every
+such workload into a registered generator, the same way
+`serving/policy_engine.py` turned execution backends into registered
+engines (`register_scenario` / `get_scenario`).
+
+A `ScenarioSource` never materializes the full (S, T) trace on the host.
+It emits the horizon in **slot blocks** through the jit-able hook
+
+    emit(state, key, slot) -> (state, SlotBatch)     # leaves (S, block)
+
+pulled by `lax.scan` drivers (`materialize`, `core.policy.run_fleet_source`,
+`HIServer.run_source`), so peak trace residency is one block however long
+the horizon is.
+
+Chunk-invariance contract: every random draw for absolute slot t is made
+from `fold_in(domain-separated key, t)` (purpose-tagged sub-keys via a
+further fold), never from a block-shaped one-shot draw. The emitted trace is therefore
+bit-identical for ANY block size, stateful scenarios included, and
+`materialize()` is exactly the concatenation of the chunks.
+
+Registered scenarios:
+
+  "stationary"   — the calibrated Table 2/3 specs (old `sample_trace`).
+  "piecewise"    — arbitrary drift schedules: (start_slot, spec) segments;
+                   generalizes and absorbs the old two-regime `drift_trace`.
+  "beta_process" — network-cost dynamics over a stationary confidence
+                   stream: fixed | uniform | bursty (two-state Markov
+                   congestion, state carried across blocks) | sinusoidal.
+  "noisy_rdl"    — mismatched remote classifier: the feedback labels `hrs`
+                   are drawn from the RDL's own confusion spec while the
+                   true labels stay in `ys` for simulation-grade accounting.
+  "hetero_fleet" — per-stream dataset/model specs stacked into one fleet.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import StreamSpec
+from repro.data.datasets import calibrate, get_spec
+
+SpecLike = Union[str, StreamSpec]
+
+# Purpose tags folded into the per-slot key: one tag per draw, so scenarios
+# can consume any subset without perturbing each other's streams.
+_K_Y, _K_F1, _K_F0, _K_BETA, _K_RDL, _K_REGIME = range(6)
+# Domain separator folded in before the slot index: scenario draws and the
+# policy's `source_slot_keys` tree (fold_in(fold_in(key, t), stream)) stay
+# disjoint even when a caller reuses one base key for both.
+_K_DOMAIN = 0x5CE11A21
+
+
+class SlotBatch(NamedTuple):
+    """One emitted slot block; every leaf is (n_streams, block)."""
+
+    fs: jnp.ndarray      # LDL confidences in (0, 1), float32
+    hrs: jnp.ndarray     # remote labels the policy's feedback sees, int32
+    ys: jnp.ndarray      # ground truth, int32 (== hrs unless the RDL is noisy)
+    betas: jnp.ndarray   # offloading costs, float32
+
+
+_SCENARIOS: Dict[str, Type["ScenarioSource"]] = {}
+
+
+def register_scenario(name: str):
+    """Class decorator: add a ScenarioSource implementation to the registry."""
+
+    def deco(cls):
+        cls.name = name
+        _SCENARIOS[name] = cls
+        return cls
+
+    return deco
+
+
+def available_scenarios() -> Tuple[str, ...]:
+    return tuple(_SCENARIOS)
+
+
+def get_scenario(name: str, **opts) -> "ScenarioSource":
+    """Resolve a registered scenario name to a constructed source."""
+    try:
+        cls = _SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; expected one of "
+            f"{available_scenarios()}") from None
+    return cls(**opts)
+
+
+def _trunc_normal(key: jax.Array, mu, sigma, shape) -> jnp.ndarray:
+    """Truncated N(mu, sigma) on (0, 1) via inverse-CDF on the base normal."""
+    from jax.scipy.stats import norm
+
+    lo = (0.0 - mu) / sigma
+    hi = (1.0 - mu) / sigma
+    u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0 - 1e-6)
+    a, b = norm.cdf(lo), norm.cdf(hi)
+    x = norm.ppf(a + u * (b - a))
+    return jnp.clip(mu + sigma * x, 1e-6, 1.0 - 1e-6)
+
+
+def _as_params(spec: SpecLike) -> Dict[str, jnp.ndarray]:
+    spec = get_spec(spec) if isinstance(spec, str) else spec
+    return {k: jnp.float32(v) for k, v in calibrate(spec).items()}
+
+
+def _confidence_slot(kt: jax.Array, params, s: int):
+    """One slot's (y, f) draws for S streams.
+
+    `params` values may be scalars or (S,) arrays (heterogeneous fleets);
+    both broadcast through the truncated-normal inverse CDF.
+    """
+    y = jax.random.bernoulli(
+        jax.random.fold_in(kt, _K_Y), params["p1"], (s,)).astype(jnp.int32)
+    f1 = _trunc_normal(jax.random.fold_in(kt, _K_F1),
+                       params["mu1"], params["sigma1"], (s,))
+    f0 = _trunc_normal(jax.random.fold_in(kt, _K_F0),
+                       params["mu0"], params["sigma0"], (s,))
+    return y, jnp.where(y == 1, f1, f0).astype(jnp.float32)
+
+
+class ScenarioSource:
+    """Base class: block bookkeeping + the stateless per-slot emit loop.
+
+    Subclasses implement `_slot(kt, t) -> (f, hr, y, beta)` (all (S,)) for
+    stateless generation, or override `emit` entirely when the scenario
+    carries state across slots (see the bursty β process). `horizon` must
+    divide into `block`-sized chunks; `block=None` means one block — the
+    materialized shape, still bit-identical to any other chunking.
+    """
+
+    name = "abstract"
+    BETA_MODES = ("fixed", "uniform")
+
+    def __init__(self, n_streams: int = 1, horizon: int = 10_000,
+                 block: Optional[int] = None, key: Optional[jax.Array] = None,
+                 beta: float = 0.3, beta_mode: str = "fixed"):
+        block = horizon if block is None else block
+        if n_streams < 1:
+            raise ValueError(f"n_streams must be ≥ 1 (got {n_streams})")
+        if horizon < 1 or block < 1 or horizon % block:
+            raise ValueError(
+                f"horizon {horizon} must be a positive multiple of the "
+                f"block size {block}")
+        if beta_mode not in self.BETA_MODES:
+            raise ValueError(
+                f"unknown beta_mode {beta_mode!r}; expected one of "
+                f"{self.BETA_MODES}")
+        self.n_streams = int(n_streams)
+        self.horizon = int(horizon)
+        self.block = int(block)
+        self.key = jax.random.PRNGKey(0) if key is None else key
+        self.beta = float(beta)
+        self.beta_mode = beta_mode
+
+    @property
+    def n_blocks(self) -> int:
+        return self.horizon // self.block
+
+    def init_state(self):
+        """Generator carry threaded through emit; () for stateless sources."""
+        return ()
+
+    def _draw_betas(self, kt: jax.Array, t) -> jnp.ndarray:
+        if self.beta_mode == "uniform":
+            return jax.random.uniform(
+                jax.random.fold_in(kt, _K_BETA), (self.n_streams,),
+                maxval=self.beta)
+        return jnp.full((self.n_streams,), self.beta, jnp.float32)
+
+    def _slot(self, kt: jax.Array, t):
+        raise NotImplementedError
+
+    def emit(self, state, key: jax.Array, slot) -> Tuple[object, SlotBatch]:
+        """Emit slot block `slot` (block index): leaves (S, block)."""
+        key = jax.random.fold_in(key, _K_DOMAIN)
+        ts = slot * self.block + jnp.arange(self.block, dtype=jnp.int32)
+        f, hr, y, b = jax.vmap(
+            lambda t: self._slot(jax.random.fold_in(key, t), t))(ts)
+        tp = lambda a: jnp.swapaxes(a, 0, 1)
+        return state, SlotBatch(fs=tp(f), hrs=tp(hr), ys=tp(y), betas=tp(b))
+
+    def materialize(self, key: Optional[jax.Array] = None) -> SlotBatch:
+        """Concatenate all blocks into one (S, T) SlotBatch (tests/offline
+        comparators only — the chunked drivers never call this)."""
+        key = self.key if key is None else key
+
+        def step(st, b):
+            return self.emit(st, key, b)
+
+        _, batches = jax.lax.scan(step, self.init_state(),
+                                  jnp.arange(self.n_blocks))
+        # leaves (n_blocks, S, block) → (S, T)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.swapaxes(a, 0, 1).reshape(
+                self.n_streams, self.horizon), batches)
+
+
+@register_scenario("stationary")
+class StationarySource(ScenarioSource):
+    """The calibrated Table 2/3 workloads — old `sample_trace`, chunked."""
+
+    def __init__(self, spec: SpecLike = "synthetic", **kw):
+        super().__init__(**kw)
+        self.params = _as_params(spec)
+
+    def _slot(self, kt, t):
+        y, f = _confidence_slot(kt, self.params, self.n_streams)
+        return f, y, y, self._draw_betas(kt, t)
+
+
+@register_scenario("hetero_fleet")
+class HeteroFleetSource(StationarySource):
+    """Per-stream specs stacked into one fleet: stream i runs specs[i].
+
+    Defaults cycle the manuscript datasets up to `n_streams`; passing
+    `specs` pins the fleet mix (and its length wins over `n_streams`).
+    """
+
+    DEFAULT_SPECS = ("breakhis", "chest", "phishing", "synthetic")
+
+    def __init__(self, specs: Optional[Sequence[SpecLike]] = None,
+                 n_streams: Optional[int] = None, **kw):
+        if specs is None:
+            n_streams = len(self.DEFAULT_SPECS) if n_streams is None else n_streams
+            specs = tuple(self.DEFAULT_SPECS[i % len(self.DEFAULT_SPECS)]
+                          for i in range(n_streams))
+        elif n_streams is not None and n_streams != len(specs):
+            raise ValueError(
+                f"n_streams={n_streams} contradicts len(specs)={len(specs)}")
+        ScenarioSource.__init__(self, n_streams=len(specs), **kw)
+        per = [_as_params(sp) for sp in specs]
+        self.specs = tuple(specs)
+        self.params = {k: jnp.stack([p[k] for p in per]) for k in per[0]}
+
+
+@register_scenario("piecewise")
+class PiecewiseSource(ScenarioSource):
+    """Arbitrary drift schedules: `segments` = ((start_slot, spec), ...).
+
+    Slot t draws from the last segment whose start ≤ t (searchsorted on
+    device, so emit stays one jit-able function across the whole schedule).
+    The default reproduces the old `drift_trace` BreakHis→BreaCh switch at
+    T/2; any number of regimes works.
+    """
+
+    def __init__(self, segments: Optional[Sequence[Tuple[int, SpecLike]]] = None,
+                 **kw):
+        super().__init__(**kw)
+        if segments is None:
+            segments = ((0, "breakhis"), (self.horizon // 2, "breach"))
+        starts = [int(s) for s, _ in segments]
+        if not starts or starts[0] != 0:
+            raise ValueError("segments must start at slot 0")
+        if any(b <= a for a, b in zip(starts, starts[1:])):
+            raise ValueError(f"segment starts must strictly increase: {starts}")
+        if starts[-1] >= self.horizon:
+            raise ValueError(
+                f"segment start {starts[-1]} is past the horizon {self.horizon}")
+        per = [_as_params(sp) for _, sp in segments]
+        self.segments = tuple((int(s), sp) for s, sp in segments)
+        self.starts = jnp.asarray(starts, jnp.int32)
+        self.params = {k: jnp.stack([p[k] for p in per]) for k in per[0]}
+
+    def _slot(self, kt, t):
+        idx = jnp.searchsorted(self.starts, t, side="right") - 1
+        params_t = {k: v[idx] for k, v in self.params.items()}
+        y, f = _confidence_slot(kt, params_t, self.n_streams)
+        return f, y, y, self._draw_betas(kt, t)
+
+
+@register_scenario("noisy_rdl")
+class NoisyRDLSource(ScenarioSource):
+    """Mismatched remote classifier: feedback labels from the RDL's own
+    confusion spec instead of ground truth.
+
+    `hrs` flips the true label with the RDL's conditional error rates
+    (P(hr=0|y=1) = rdl_fn, P(hr=1|y=0) = rdl_fp) — either given directly or
+    derived from a Table 2/3 `rdl_spec` (fn/p1, fp/(1−p1)). `ys` keeps the
+    true label so simulation-grade accounting can separate what the policy
+    believes (observed loss) from what it actually costs (true loss).
+    """
+
+    def __init__(self, spec: SpecLike = "synthetic",
+                 rdl_spec: Optional[SpecLike] = None,
+                 rdl_fn: float = 0.05, rdl_fp: float = 0.05, **kw):
+        super().__init__(**kw)
+        self.params = _as_params(spec)
+        if rdl_spec is not None:
+            rs = get_spec(rdl_spec) if isinstance(rdl_spec, str) else rdl_spec
+            rdl_fn, rdl_fp = rs.fn / rs.p1, rs.fp / (1.0 - rs.p1)
+        if not (0.0 <= rdl_fn < 1.0 and 0.0 <= rdl_fp < 1.0):
+            raise ValueError(
+                f"RDL error rates must lie in [0, 1): fn={rdl_fn}, fp={rdl_fp}")
+        self.rdl_fn, self.rdl_fp = float(rdl_fn), float(rdl_fp)
+
+    def _slot(self, kt, t):
+        y, f = _confidence_slot(kt, self.params, self.n_streams)
+        u = jax.random.uniform(jax.random.fold_in(kt, _K_RDL),
+                               (self.n_streams,))
+        flip = jnp.where(y == 1, u < self.rdl_fn, u < self.rdl_fp)
+        hr = jnp.where(flip, 1 - y, y).astype(jnp.int32)
+        return f, hr, y, self._draw_betas(kt, t)
+
+
+@register_scenario("beta_process")
+class BetaProcessSource(ScenarioSource):
+    """Network-cost dynamics over a stationary confidence stream.
+
+    beta_mode:
+      "fixed"      — constant β (degenerate case, for sweeps).
+      "uniform"    — β_t ~ U(0, β), the oblivious adversary.
+      "sinusoidal" — β_t sweeps [beta_lo, beta] with period `period` slots
+                     (diurnal congestion), identical across streams.
+      "bursty"     — per-stream two-state Markov congestion: β jumps
+                     beta_lo ↔ beta with transition probs p_up / p_down.
+                     The regime vector is the carried generator state —
+                     the reason `emit` threads `state` at all — and the
+                     per-slot keying keeps even this stateful trace
+                     bit-identical across block sizes.
+    """
+
+    BETA_MODES = ("fixed", "uniform", "sinusoidal", "bursty")
+
+    def __init__(self, spec: SpecLike = "synthetic", beta_mode: str = "bursty",
+                 beta_lo: float = 0.05, period: int = 512,
+                 p_up: float = 0.05, p_down: float = 0.25, **kw):
+        super().__init__(beta_mode=beta_mode, **kw)
+        self.params = _as_params(spec)
+        self.beta_lo = float(beta_lo)
+        self.period = int(period)
+        self.p_up, self.p_down = float(p_up), float(p_down)
+
+    def init_state(self):
+        if self.beta_mode == "bursty":
+            return jnp.zeros((self.n_streams,), jnp.int32)   # all uncongested
+        return ()
+
+    def _slot(self, kt, t):
+        y, f = _confidence_slot(kt, self.params, self.n_streams)
+        if self.beta_mode == "sinusoidal":
+            phase = 2.0 * jnp.pi * t / self.period
+            val = self.beta_lo + 0.5 * (self.beta - self.beta_lo) * (
+                1.0 + jnp.sin(phase))
+            b = jnp.full((self.n_streams,), 1.0, jnp.float32) * val
+        else:
+            b = self._draw_betas(kt, t)
+        return f, y, y, b
+
+    def emit(self, state, key, slot):
+        if self.beta_mode != "bursty":
+            return super().emit(state, key, slot)
+        key = jax.random.fold_in(key, _K_DOMAIN)
+        ts = slot * self.block + jnp.arange(self.block, dtype=jnp.int32)
+
+        def one(regime, t):
+            kt = jax.random.fold_in(key, t)
+            y, f = _confidence_slot(kt, self.params, self.n_streams)
+            u = jax.random.uniform(jax.random.fold_in(kt, _K_REGIME),
+                                   (self.n_streams,))
+            regime = jnp.where(regime == 1,
+                               (u >= self.p_down).astype(jnp.int32),
+                               (u < self.p_up).astype(jnp.int32))
+            b = jnp.where(regime == 1, self.beta, self.beta_lo
+                          ).astype(jnp.float32)
+            return regime, (f, y, b)
+
+        state, (f, y, b) = jax.lax.scan(one, state, ts)
+        tp = lambda a: jnp.swapaxes(a, 0, 1)
+        return state, SlotBatch(fs=tp(f), hrs=tp(y), ys=tp(y), betas=tp(b))

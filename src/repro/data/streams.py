@@ -1,13 +1,25 @@
-"""Simulated HI streams: draw (f_t, h_r_t, β_t) traces from calibrated specs."""
+"""Simulated HI streams — thin compatibility shims over the ScenarioSource
+registry (`repro.data.scenarios`).
+
+`sample_trace` / `dataset_trace` / `drift_trace` predate the registry and
+materialized (S, T) traces on the host in one shot. They now materialize
+the matching scenario sources (`stationary`, `piecewise`), so there is a
+single generation path: the chunked per-slot-keyed draws. Chunked emission
+and these materialized traces are bit-identical by construction — prefer a
+`ScenarioSource` (and `run_fleet_source` / `HIServer.run_source`) for
+anything long-horizon or nonstationary; these shims exist for the paper
+figures and tests that genuinely need the whole trace at once.
+"""
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import StreamSpec
-from repro.data.datasets import calibrate, get_spec
+from repro.data.datasets import get_spec
+from repro.data.scenarios import PiecewiseSource, SlotBatch, StationarySource
 
 
 class Trace(NamedTuple):
@@ -16,45 +28,31 @@ class Trace(NamedTuple):
     betas: jnp.ndarray   # offloading costs
 
 
-def _trunc_normal(key: jax.Array, mu, sigma, shape) -> jnp.ndarray:
-    """Truncated N(mu, sigma) on (0, 1) via inverse-CDF on the base normal."""
-    lo = (0.0 - mu) / sigma
-    hi = (1.0 - mu) / sigma
-    u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0 - 1e-6)
-    from jax.scipy.stats import norm
-
-    a, b = norm.cdf(lo), norm.cdf(hi)
-    x = norm.ppf(a + u * (b - a))
-    return jnp.clip(mu + sigma * x, 1e-6, 1.0 - 1e-6)
+def _to_trace(batch: SlotBatch, squeeze: bool) -> Trace:
+    fs, hrs, betas = batch.fs, batch.hrs, batch.betas
+    if squeeze:
+        fs, hrs, betas = fs[0], hrs[0], betas[0]
+    return Trace(fs=fs, hrs=hrs, betas=betas)
 
 
 def sample_trace(
-    spec: StreamSpec,
+    spec: Union[StreamSpec, str],
     horizon: int,
     key: jax.Array,
     beta: float = 0.3,
     beta_mode: str = "fixed",
     n_streams: Optional[int] = None,
 ) -> Trace:
-    """Draw a trace of length `horizon` (optionally (n_streams, horizon)).
+    """Materialized stationary trace of length `horizon` (optionally
+    (n_streams, horizon)) — `StationarySource` run to completion.
 
     beta_mode: 'fixed' — constant β (paper's comparison study);
                'uniform' — β_t ~ U(0, β) oblivious adversary.
     """
-    params = calibrate(spec)
-    shape = (horizon,) if n_streams is None else (n_streams, horizon)
-    k_y, k_f1, k_f0, k_b = jax.random.split(key, 4)
-    hrs = jax.random.bernoulli(k_y, params["p1"], shape).astype(jnp.int32)
-    f1 = _trunc_normal(k_f1, params["mu1"], params["sigma1"], shape)
-    f0 = _trunc_normal(k_f0, params["mu0"], params["sigma0"], shape)
-    fs = jnp.where(hrs == 1, f1, f0)
-    if beta_mode == "fixed":
-        betas = jnp.full(shape, beta, jnp.float32)
-    elif beta_mode == "uniform":
-        betas = jax.random.uniform(k_b, shape, maxval=beta)
-    else:
-        raise ValueError(f"unknown beta_mode {beta_mode!r}")
-    return Trace(fs=fs.astype(jnp.float32), hrs=hrs, betas=betas)
+    src = StationarySource(spec=spec, n_streams=n_streams or 1,
+                           horizon=horizon, key=key, beta=beta,
+                           beta_mode=beta_mode)
+    return _to_trace(src.materialize(), squeeze=n_streams is None)
 
 
 def dataset_trace(
@@ -63,8 +61,10 @@ def dataset_trace(
     return sample_trace(get_spec(name), horizon, key, beta=beta, **kw)
 
 
-def empirical_confusion(trace: Trace) -> Tuple[float, float, float]:
-    """(accuracy, fp, fn) of the argmax rule on a trace — sanity vs Table 2."""
+def empirical_confusion(trace) -> Tuple[float, float, float]:
+    """(accuracy, fp, fn) of the argmax rule on a trace — sanity vs Table 2.
+
+    Accepts a `Trace` or any (fs, hrs)-carrying batch (e.g. `SlotBatch`)."""
     pred1 = trace.fs >= 0.5
     fp = float(jnp.mean(pred1 & (trace.hrs == 0)))
     fn = float(jnp.mean(~pred1 & (trace.hrs == 1)))
@@ -79,13 +79,9 @@ def drift_trace(
     beta: float = 0.3,
     switch_at: Optional[int] = None,
 ) -> Trace:
-    """Concatenate two dataset regimes — distribution-shift robustness runs."""
+    """Two-regime shift trace — the `piecewise` scenario's simplest schedule,
+    kept for the distribution-shift robustness runs."""
     switch_at = horizon // 2 if switch_at is None else switch_at
-    k_a, k_b = jax.random.split(key)
-    a = dataset_trace(name_a, switch_at, k_a, beta=beta)
-    b = dataset_trace(name_b, horizon - switch_at, k_b, beta=beta)
-    return Trace(
-        fs=jnp.concatenate([a.fs, b.fs]),
-        hrs=jnp.concatenate([a.hrs, b.hrs]),
-        betas=jnp.concatenate([a.betas, b.betas]),
-    )
+    src = PiecewiseSource(segments=((0, name_a), (switch_at, name_b)),
+                          horizon=horizon, key=key, beta=beta)
+    return _to_trace(src.materialize(), squeeze=True)

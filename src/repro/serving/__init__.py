@@ -8,6 +8,10 @@ slot-by-slot (`engine.step`), or serves online with delayed remote feedback
 (`engine.decide` / `engine.feedback`, the `HIServer` flow). `HIServer` routes
 only offloaded samples to the RDL via `compact_offloads`/`scatter_results`
 and applies slot t's RDL results as feedback at slot t+1 (double-buffered).
+
+Both the engines and the servers also consume `ScenarioSource`s directly
+(`engine.run_source`, `HIServer.run_source`): the workload is pulled one
+slot block at a time, so a fleet horizon never materializes on the host.
 """
 from repro.serving.batching import OffloadBatch, compact_offloads, scatter_results
 from repro.serving.engine import Engine, EngineConfig, classifier_fn

@@ -30,6 +30,15 @@ Engines (`HIServerConfig.engine`): "fused" (default, kernel-backed),
 "reference" (paper-shaped vmapped `h2t2_step`), "sharded" (fleet sharded
 over a device mesh). All consume identical per-stream keys, so the serving
 decisions do not depend on the engine choice.
+
+Source-driven serving: `run_source` serves a whole `ScenarioSource` horizon
+without ever materializing the (S, T) trace — each slot block is emitted on
+device, the block's slots run as one `lax.scan` of the identical
+decide/compact/feedback flow, and only per-run counters leave the device.
+The source plays both classifier roles (fs = LDL confidences, hrs = RDL
+labels); its `ys` stay separate so the summary can report ground-truth cost
+next to what the policy observes. Peak trace residency is one (S, block)
+SlotBatch at any horizon.
 """
 from __future__ import annotations
 
@@ -40,8 +49,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FleetDecision, HIConfig
-from repro.core.policy import H2T2State, effective_local_pred
-from repro.serving.batching import compact_offloads, scatter_results
+from repro.core.policy import (
+    H2T2State,
+    classification_cost,
+    effective_local_pred,
+    source_slot_keys,
+)
+from repro.data.scenarios import ScenarioSource
+from repro.serving.batching import (
+    OffloadBatch,
+    compact_offloads,
+    scatter_results,
+)
 from repro.serving.policy_engine import get_engine
 
 
@@ -86,6 +105,38 @@ class HIServerState(NamedTuple):
     pending: Optional[PendingFeedback]   # None until the first slot completes
 
 
+def _rotated_compact(payload: jnp.ndarray, offload: jnp.ndarray,
+                     capacity: int, t) -> "OffloadBatch":
+    """Compact offloaded rows into one RDL batch, rotating the drop priority.
+
+    Compaction keeps the first `capacity` offloads in order, which would
+    permanently starve high-index streams under sustained overload — when
+    drops are possible, rotate the start index by the slot count `t` so they
+    share the pain. At full capacity rotation cannot change the outcome, so
+    skip its gathers on the hot path. Shared by the token-serving
+    `serve_slot` and the source-serving scan so both drop identically.
+    """
+    s = payload.shape[0]
+    if capacity >= s:
+        return compact_offloads(payload, offload, capacity)
+    rot = (jnp.arange(s) + t % s) % s
+    batch = compact_offloads(payload[rot], offload[rot], capacity)
+    return batch._replace(src=jnp.where(
+        batch.valid, rot[batch.src], -1).astype(jnp.int32))
+
+
+class _ServeCounters(NamedTuple):
+    """Scalar accumulators of a source-driven serving run (device-resident)."""
+
+    loss: jnp.ndarray          # Σ β over samples actually offloaded
+    true_loss: jnp.ndarray     # Σ β·sent + φ(final pred, ground truth)
+    offloads: jnp.ndarray      # int32 — samples actually served remotely
+    dropped: jnp.ndarray       # int32 — offload decisions dropped by capacity
+    rdl_evals: jnp.ndarray     # int32 — valid samples evaluated by the RDL
+    rdl_batches: jnp.ndarray   # int32 — RDL launches (≤ 1 per slot)
+    correct: jnp.ndarray       # int32 — final predictions matching ground truth
+
+
 class SlotResult(NamedTuple):
     f: jnp.ndarray          # (S,) LDL confidences
     offload: jnp.ndarray    # (S,) bool — the policy's offload decision
@@ -107,6 +158,7 @@ class HIServer:
         self.ldl = ldl
         self.rdl = rdl
         self.engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret)
+        self._serve_block = None    # jitted source-serving scan, built lazily
 
     def init_state(self) -> HIServerState:
         zero = jnp.zeros((), jnp.float32)
@@ -141,19 +193,9 @@ class HIServer:
         fs = self.ldl(tokens)                                # (S,)
         keys = jax.random.split(key, s)
         decision = self.engine.decide(policy, fs, keys)
-        # Phase 2: compact ONLY the offloaded samples into one RDL batch.
-        # Compaction keeps the first `cap` offloads in order, which would
-        # permanently starve high-index streams under sustained overload —
-        # when drops are possible, rotate the start index by the slot count
-        # so they share the pain. At full capacity rotation cannot change
-        # the outcome, so skip its gathers on the hot path.
-        if cap < s:
-            rot = (jnp.arange(s) + state.t % s) % s
-            batch = compact_offloads(tokens[rot], decision.offload[rot], cap)
-            batch = batch._replace(src=jnp.where(
-                batch.valid, rot[batch.src], -1).astype(jnp.int32))
-        else:
-            batch = compact_offloads(tokens, decision.offload, cap)
+        # Phase 2: compact ONLY the offloaded samples into one RDL batch
+        # (rotating the drop priority when capacity can overflow).
+        batch = _rotated_compact(tokens, decision.offload, cap, state.t)
         n_valid = int(jnp.sum(batch.valid))
         if n_valid:
             labels = self.rdl(batch.tokens).astype(jnp.int32)     # (C,)
@@ -187,12 +229,165 @@ class HIServer:
         policy = self._apply_pending(state)
         return state._replace(policy=policy, pending=None)
 
-    def run(
+    def _serve_block_fn(self):
+        """The jitted per-block serving scan, built once per server instance
+        (jit's own cache handles distinct (S, block) shapes), so repeated
+        `run_source` calls never re-trace. Each scanned slot replays
+        `serve_slot`'s flow with the source standing in for both
+        classifiers."""
+        if self._serve_block is not None:
+            return self._serve_block
+        eng, hi, cap = self.engine, self.cfg.hi, self.cfg.capacity
+
+        def slot(key, carry, xs):
+            pol, pending, has_pending, t, acc = carry
+            f, hr, y, beta = xs
+            s = f.shape[0]
+            # Phase 0: previous slot's RDL results (double-buffered).
+            pol = jax.lax.cond(
+                has_pending,
+                lambda p: eng.feedback(p, pending.decision, pending.hrs,
+                                       pending.betas, sent=pending.sent)[0],
+                lambda p: p, pol)
+            # Phase 1: offload decisions, label-free.
+            dec = eng.decide(pol, f, source_slot_keys(key, t, s))
+            # Phase 2: offload-only RDL batch over the remote labels; the
+            # per-slot payload is the (S, 1) label column, so compaction,
+            # capacity, and rotation behave exactly as with real tokens.
+            batch = _rotated_compact(hr[:, None], dec.offload, cap, t)
+            labels = batch.tokens[:, 0]            # the RDL lookup
+            hrs_back = scatter_results(labels, batch, s, fill=0)
+            sent = scatter_results(
+                batch.valid.astype(jnp.int32), batch, s, fill=0).astype(bool)
+            n_valid = jnp.sum(batch.valid.astype(jnp.int32))
+            dropped = dec.offload & ~sent
+            pred = jnp.where(sent, hrs_back, effective_local_pred(dec, sent))
+            loss = jnp.where(sent, beta, 0.0)
+            phi_true = classification_cost(hi, pred, y)
+            acc = _ServeCounters(
+                loss=acc.loss + jnp.sum(loss),
+                true_loss=acc.true_loss + jnp.sum(loss + phi_true),
+                offloads=acc.offloads + jnp.sum(sent.astype(jnp.int32)),
+                dropped=acc.dropped + jnp.sum(dropped.astype(jnp.int32)),
+                rdl_evals=acc.rdl_evals + n_valid,
+                rdl_batches=acc.rdl_batches + (n_valid > 0).astype(jnp.int32),
+                correct=acc.correct + jnp.sum((pred == y).astype(jnp.int32)))
+            pending = PendingFeedback(decision=dec, hrs=hrs_back, sent=sent,
+                                      betas=beta)
+            return (pol, pending, jnp.asarray(True), t + 1, acc), None
+
+        @jax.jit
+        def serve_block(pol, pending, has_pending, t0, acc, key, batch):
+            tp = lambda a: jnp.swapaxes(a, 0, 1)
+            carry, _ = jax.lax.scan(
+                lambda c, xs: slot(key, c, xs),
+                (pol, pending, has_pending, t0, acc),
+                (tp(batch.fs), tp(batch.hrs), tp(batch.ys), tp(batch.betas)))
+            return carry
+
+        self._serve_block = serve_block
+        return serve_block
+
+    def run_source(
         self,
-        token_stream: jnp.ndarray,   # (T, S, L)
-        betas: jnp.ndarray,          # (T, S)
+        source: ScenarioSource,
         key: jax.Array,
     ) -> Tuple[HIServerState, Dict[str, float]]:
+        """Serve a whole `ScenarioSource` horizon, one slot block at a time.
+
+        The flow per slot is exactly `serve_slot`'s — delayed double-buffered
+        feedback, offload-only compaction at `capacity`, rotation under
+        overflow — but each block runs as a single on-device `lax.scan`, so
+        the (S, T) trace is never materialized: the host loop only threads
+        the policy state, the pending buffer, and seven scalar counters.
+        The source stands in for both classifiers (fs = LDL confidences,
+        hrs = the labels the RDL would return); `ys` feed the ground-truth
+        summary fields (`avg_true_cost`, `accuracy`) that a real server
+        could not observe.
+        """
+        cfg = self.cfg
+        s, cap = cfg.n_streams, cfg.capacity
+        if key is None:
+            raise TypeError("run_source needs a policy `key` (the source "
+                            "carries only its own generative key)")
+        if source.n_streams != s:
+            raise ValueError(
+                f"source has {source.n_streams} streams but the server is "
+                f"configured for {s}")
+        eng = self.engine
+        izero = jnp.zeros((), jnp.int32)
+        fzero = jnp.zeros((), jnp.float32)
+        # Neutral pending buffer for the has_pending=False first slot: the
+        # scan carry needs a fixed pytree structure, so the "no feedback yet"
+        # case is a flag, not a missing leaf.
+        pending0 = PendingFeedback(
+            decision=FleetDecision(
+                i_f=jnp.zeros((s,), jnp.int32),
+                offload=jnp.zeros((s,), bool),
+                explored=jnp.zeros((s,), bool),
+                local_pred=jnp.zeros((s,), jnp.int32),
+                q=jnp.zeros((s,)), p=jnp.zeros((s,)), psi=jnp.zeros((s,))),
+            hrs=jnp.zeros((s,), jnp.int32),
+            sent=jnp.zeros((s,), bool),
+            betas=jnp.zeros((s,)))
+
+        serve_block = self._serve_block_fn()
+        pol = eng.init(s)
+        pending, has_pending = pending0, jnp.asarray(False)
+        t, acc, sst = izero, _ServeCounters(fzero, fzero, *([izero] * 5)), \
+            source.init_state()
+        for blk in range(source.n_blocks):
+            # Emit eagerly, scan the block under one (instance-cached) jit:
+            # only this (S, block) SlotBatch is ever live.
+            sst, batch = source.emit(sst, source.key, blk)
+            pol, pending, has_pending, t, acc = serve_block(
+                pol, pending, has_pending, t, acc, key, batch)
+        if bool(has_pending):                       # final flush
+            pol, _ = eng.feedback(pol, pending.decision, pending.hrs,
+                                  pending.betas, sent=pending.sent)
+
+        state = HIServerState(
+            policy=pol, t=t,
+            total_loss=acc.loss,
+            total_offloads=acc.offloads.astype(jnp.float32),
+            total_dropped=acc.dropped.astype(jnp.float32),
+            rdl_evals=acc.rdl_evals, rdl_batches=acc.rdl_batches,
+            pending=None)
+        n = source.horizon * s
+        rdl_evals = int(acc.rdl_evals)
+        rdl_rows = int(acc.rdl_batches) * cap
+        return state, {
+            "avg_offload_cost": float(acc.loss) / n,
+            "offload_rate": float(acc.offloads) / n,
+            "drop_rate": float(acc.dropped) / n,
+            "rdl_evals": float(rdl_evals),
+            "rdl_eval_rate": rdl_evals / n,
+            "rdl_savings": 1.0 - rdl_evals / n,
+            "rdl_batches": float(acc.rdl_batches),
+            "rdl_compute_rows": float(rdl_rows),
+            "rdl_row_savings": 1.0 - rdl_rows / n,
+            # Simulation-grade fields a real server could not observe:
+            "avg_true_cost": float(acc.true_loss) / n,
+            "accuracy": float(acc.correct) / n,
+        }
+
+    def run(
+        self,
+        token_stream: jnp.ndarray,   # (T, S, L) — or a ScenarioSource
+        betas: jnp.ndarray = None,   # (T, S)
+        key: jax.Array = None,
+    ) -> Tuple[HIServerState, Dict[str, float]]:
+        if isinstance(token_stream, ScenarioSource):
+            if key is None and betas is not None:
+                betas, key = None, betas  # the run(source, key) positional form
+            if betas is not None:
+                raise TypeError(
+                    "HIServer.run(source, ...) takes no betas — the source "
+                    "generates them")
+            return self.run_source(token_stream, key)
+        if betas is None or key is None:
+            raise TypeError("HIServer.run(token_stream, betas, key) needs "
+                            "betas and key")
         state = self.init_state()
         horizon = token_stream.shape[0]
         for t in range(horizon):

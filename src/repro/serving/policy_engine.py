@@ -6,7 +6,11 @@ simulation, the benchmarks, and the `HIServer` all speak one interface:
 
   init(n_streams)                  → fleet H2T2State (leaves batched (S,))
   step(state, fs, betas, hrs, keys)→ one slot for the whole fleet
-  run(fs, hrs, betas, key)         → whole (S, T) horizon in one call
+  run(fs, hrs, betas, key)         → whole (S, T) horizon in one call; also
+                                     accepts a ScenarioSource as first arg
+  run_source(source, key)          → chunked scan over a ScenarioSource:
+                                     per-block aggregates, one-block
+                                     trace residency (any horizon)
   decide(state, fs, keys) /        → the two-phase serving flow: decide
   feedback(state, decision, …)       offloads first, apply (possibly
                                      delayed) RDL feedback later
@@ -40,6 +44,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.policy import (
     FleetDecision,
     H2T2State,
+    SourceRunOutput,
     StepOutput,
     draw_fleet_randomness,
     draw_psi_zeta,
@@ -50,8 +55,10 @@ from repro.core.policy import (
     h2t2_step,
     run_fleet,
     run_fleet_fused,
+    run_fleet_source,
 )
 from repro.core.types import HIConfig
+from repro.data.scenarios import ScenarioSource
 
 _REGISTRY: Dict[str, Type["PolicyEngine"]] = {}
 
@@ -121,10 +128,40 @@ class PolicyEngine:
         """One slot for the whole fleet (decide + immediate feedback)."""
         raise NotImplementedError
 
-    def run(self, fs, hrs, betas, key=None, *, stream_keys=None
-            ) -> Tuple[H2T2State, StepOutput]:
-        """Whole (S, T) horizon; same key tree as `run_fleet`."""
+    def run(self, fs, hrs=None, betas=None, key=None, *, stream_keys=None):
+        """Whole horizon in one call: (S, T) arrays OR a `ScenarioSource`.
+
+        With arrays, returns the stacked (S, T) StepOutput and consumes the
+        same key tree as `run_fleet`. With a source as the first argument,
+        dispatches to `run_source` (chunked scan, per-block aggregates) —
+        `key` is then the policy key; the source carries its own.
+        """
+        if isinstance(fs, ScenarioSource):
+            if key is None and betas is None and hrs is not None:
+                hrs, key = None, hrs      # the run(source, key) positional form
+            if hrs is not None or betas is not None:
+                raise TypeError(
+                    "engine.run(source, ...) takes no hrs/betas — the source "
+                    "generates them")
+            return self.run_source(fs, key)
+        return self.run_arrays(fs, hrs, betas, key, stream_keys=stream_keys)
+
+    def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None
+                   ) -> Tuple[H2T2State, StepOutput]:
+        """Whole materialized (S, T) horizon; same key tree as `run_fleet`."""
         raise NotImplementedError
+
+    def run_source(self, source: ScenarioSource, key,
+                   state: Optional[H2T2State] = None
+                   ) -> Tuple[H2T2State, SourceRunOutput]:
+        """Chunked run over a `ScenarioSource` on this engine's step path.
+
+        Peak trace residency is one (S, block) SlotBatch; randomness follows
+        `source_slot_keys`, so all engines return identical costs for the
+        same source + key.
+        """
+        return run_fleet_source(self.hi, source, key, state=state,
+                                step_fn=self._step)
 
     def decide(self, state: H2T2State, fs, keys) -> FleetDecision:
         """Phase 1 of a slot: offload decisions, no labels consumed."""
@@ -152,7 +189,7 @@ class ReferenceEngine(PolicyEngine):
     def step(self, state, fs, betas, hrs, keys):
         return self._step(state, fs, betas, hrs, keys)
 
-    def run(self, fs, hrs, betas, key=None, *, stream_keys=None):
+    def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
         return run_fleet(self.hi, fs, hrs, betas, key,
                          stream_keys=stream_keys)
 
@@ -183,7 +220,7 @@ class FusedEngine(PolicyEngine):
     def step(self, state, fs, betas, hrs, keys):
         return self._step(state, fs, betas, hrs, keys)
 
-    def run(self, fs, hrs, betas, key=None, *, stream_keys=None):
+    def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
         return run_fleet_fused(self.hi, fs, hrs, betas, key,
                                use_kernel=self.use_kernel,
                                interpret=self.interpret,
@@ -303,7 +340,7 @@ class ShardedEngine(PolicyEngine):
     def step(self, state, fs, betas, hrs, keys):
         return self._step(state, fs, betas, hrs, keys)
 
-    def run(self, fs, hrs, betas, key=None, *, stream_keys=None):
+    def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
         s, t = fs.shape
         psis, zetas = draw_fleet_randomness(self.hi, key, s, t, stream_keys)
         return self._run(fs, hrs, betas, psis, zetas.astype(jnp.int32))

@@ -1,0 +1,391 @@
+"""ScenarioSource registry: resolution, chunk-invariance, statistical
+fidelity of every scenario, cross-engine cost identity from a source, and
+streamed (one-block-residency) serving at T ≥ 100k.
+
+The load-bearing acceptance tests:
+  * `test_stationary_chunked_bit_identical_across_block_sizes` — the same
+    key yields the SAME trace whatever the block size, so chunked runs and
+    the materialized `sample_trace` shim agree bit-for-bit.
+  * `test_engines_identical_costs_from_source` — reference/fused/sharded
+    produce identical costs when driven from the same source + policy key.
+  * `test_hi_server_streams_100k_horizon_one_block_residency` — `HIServer`
+    serves T = 100_000 slots from a source while only ever emitting
+    (S, block) chunks, classifiers untouched.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HIConfig, run_fleet_source
+from repro.data import DATASETS, Trace, empirical_confusion, sample_trace
+from repro.data.scenarios import (
+    BetaProcessSource,
+    HeteroFleetSource,
+    NoisyRDLSource,
+    PiecewiseSource,
+    ScenarioSource,
+    StationarySource,
+    available_scenarios,
+    get_scenario,
+    register_scenario,
+)
+from repro.serving import HIServer, HIServerConfig, get_engine
+
+
+def _eager_blocks(src, key=None):
+    """Concatenate emit() calls one block at a time (the serving pull)."""
+    key = src.key if key is None else key
+    st, outs = src.init_state(), []
+    for b in range(src.n_blocks):
+        st, batch = src.emit(st, key, b)
+        outs.append(batch)
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=1), *outs)
+
+
+def _segment(batch, lo, hi):
+    return Trace(batch.fs[:, lo:hi], batch.hrs[:, lo:hi],
+                 batch.betas[:, lo:hi])
+
+
+# --------------------------------- registry -----------------------------------
+
+
+def test_registry_exposes_at_least_five_scenarios():
+    names = set(available_scenarios())
+    assert names >= {"stationary", "piecewise", "beta_process", "noisy_rdl",
+                     "hetero_fleet"}
+    assert len(names) >= 5
+    src = get_scenario("stationary", n_streams=2, horizon=64, block=32,
+                       key=jax.random.PRNGKey(0))
+    assert isinstance(src, StationarySource)
+    assert src.n_blocks == 2
+
+
+def test_get_scenario_unknown_raises():
+    with pytest.raises(ValueError, match="scenario"):
+        get_scenario("warp-drive")
+
+
+def test_register_scenario_extends_registry():
+    @register_scenario("_test_dummy")
+    class Dummy(StationarySource):
+        pass
+
+    try:
+        assert "_test_dummy" in available_scenarios()
+        assert isinstance(get_scenario("_test_dummy", horizon=8), Dummy)
+    finally:
+        from repro.data import scenarios
+        del scenarios._SCENARIOS["_test_dummy"]
+
+
+def test_source_validates_geometry():
+    with pytest.raises(ValueError, match="block"):
+        StationarySource(horizon=100, block=33)
+    with pytest.raises(ValueError, match="n_streams"):
+        StationarySource(n_streams=0, horizon=8)
+    with pytest.raises(ValueError, match="beta_mode"):
+        StationarySource(horizon=8, beta_mode="bursty")   # stationary: no Markov β
+
+
+# ------------------------------ chunk invariance ------------------------------
+
+
+def test_stationary_chunked_bit_identical_across_block_sizes():
+    """Same key ⇒ identical trace whatever the chunking: per-slot keying
+    makes `materialize` independent of the block size, bit-for-bit."""
+    kw = dict(spec="breakhis", n_streams=3, horizon=96,
+              key=jax.random.PRNGKey(5), beta=0.3, beta_mode="uniform")
+    full = StationarySource(**kw).materialize()
+    for blk in (8, 32, 48):
+        got = StationarySource(block=blk, **kw).materialize()
+        for name, a, b in zip(full._fields, full, got):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (blk, name)
+
+
+def test_eager_emit_matches_materialize():
+    """Pulling blocks one `emit` at a time (the serving path) agrees with the
+    scanned materialization: random bits exactly, floats to XLA fusion noise."""
+    src = StationarySource(spec="phishing", n_streams=2, horizon=64, block=16,
+                           key=jax.random.PRNGKey(1), beta_mode="uniform")
+    full = StationarySource(spec="phishing", n_streams=2, horizon=64,
+                            key=jax.random.PRNGKey(1), beta_mode="uniform"
+                            ).materialize()
+    got = _eager_blocks(src)
+    assert np.array_equal(np.asarray(full.hrs), np.asarray(got.hrs))
+    assert np.array_equal(np.asarray(full.ys), np.asarray(got.ys))
+    np.testing.assert_allclose(np.asarray(full.fs), np.asarray(got.fs),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(full.betas), np.asarray(got.betas),
+                               atol=1e-6)
+
+
+def test_sample_trace_shim_is_materialized_stationary():
+    """`sample_trace` is now literally StationarySource.materialize()."""
+    tr = sample_trace(DATASETS["phishing"], 128, jax.random.PRNGKey(1),
+                      beta=0.25)
+    m = StationarySource(spec="phishing", horizon=128,
+                         key=jax.random.PRNGKey(1), beta=0.25).materialize()
+    assert np.array_equal(np.asarray(tr.fs), np.asarray(m.fs[0]))
+    assert np.array_equal(np.asarray(tr.hrs), np.asarray(m.hrs[0]))
+    assert np.array_equal(np.asarray(tr.betas), np.asarray(m.betas[0]))
+
+
+def test_bursty_state_carries_across_blocks():
+    """The Markov β regime is generator state: chunked emission must continue
+    it across block boundaries, not restart it — traces stay bit-identical
+    between one-block and 8-block chunkings."""
+    kw = dict(spec="synthetic", n_streams=4, horizon=256,
+              key=jax.random.PRNGKey(2), beta=0.4, beta_mode="bursty")
+    full = BetaProcessSource(**kw).materialize()
+    got = BetaProcessSource(block=32, **kw).materialize()
+    for name, a, b in zip(full._fields, full, got):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+    vals = np.unique(np.asarray(full.betas))
+    np.testing.assert_allclose(vals, [0.05, 0.4], atol=1e-6)
+
+
+# --------------------------- scenario statistics ------------------------------
+
+
+def test_piecewise_segments_match_source_specs():
+    """Pre-/post-switch segments reproduce their own specs' confusion stats."""
+    switch = 10_000
+    src = PiecewiseSource(segments=((0, "breakhis"), (switch, "breach")),
+                          n_streams=2, horizon=20_000, block=5_000,
+                          key=jax.random.PRNGKey(3))
+    b = src.materialize()
+    for lo, hi, name in [(0, switch, "breakhis"), (switch, 20_000, "breach")]:
+        spec = DATASETS[name]
+        _, fp, fn = empirical_confusion(_segment(b, lo, hi))
+        assert abs(fp - spec.fp) < 0.02, (name, fp, spec.fp)
+        assert abs(fn - spec.fn) < 0.02, (name, fn, spec.fn)
+
+
+def test_piecewise_accepts_many_segments():
+    src = PiecewiseSource(
+        segments=((0, "breakhis"), (300, "chest"), (700, "breach")),
+        horizon=1000, block=250, key=jax.random.PRNGKey(8))
+    b = src.materialize()
+    assert b.fs.shape == (1, 1000)
+    with pytest.raises(ValueError, match="start"):
+        PiecewiseSource(segments=((5, "breakhis"),), horizon=100)
+    with pytest.raises(ValueError, match="increase"):
+        PiecewiseSource(segments=((0, "breakhis"), (50, "chest"), (50, "breach")),
+                        horizon=100)
+    with pytest.raises(ValueError, match="horizon"):
+        PiecewiseSource(segments=((0, "breakhis"), (100, "chest")), horizon=100)
+
+
+def test_noisy_rdl_noise_rates_match_rdl_spec():
+    """The mismatched-classifier feedback flips labels at exactly the RDL
+    spec's conditional error rates; ground truth stays in `ys`."""
+    src = NoisyRDLSource(spec="synthetic", rdl_fn=0.12, rdl_fp=0.07,
+                         n_streams=2, horizon=20_000,
+                         key=jax.random.PRNGKey(4))
+    b = src.materialize()
+    ys, hrs = np.asarray(b.ys), np.asarray(b.hrs)
+    fn_rate = ((hrs == 0) & (ys == 1)).sum() / (ys == 1).sum()
+    fp_rate = ((hrs == 1) & (ys == 0)).sum() / (ys == 0).sum()
+    assert abs(fn_rate - 0.12) < 0.015, fn_rate
+    assert abs(fp_rate - 0.07) < 0.015, fp_rate
+    # Confidences are generated from the TRUE label, not the noisy feedback.
+    _, fp, fn = empirical_confusion(Trace(b.fs, b.ys, b.betas))
+    spec = DATASETS["synthetic"]
+    assert abs(fp - spec.fp) < 0.02 and abs(fn - spec.fn) < 0.02
+
+
+def test_noisy_rdl_rates_from_spec_table():
+    src = NoisyRDLSource(rdl_spec="chest", horizon=8)
+    spec = DATASETS["chest"]
+    assert src.rdl_fn == pytest.approx(spec.fn / spec.p1)
+    assert src.rdl_fp == pytest.approx(spec.fp / (1.0 - spec.p1))
+
+
+def test_hetero_fleet_per_stream_stats():
+    src = HeteroFleetSource(specs=("breakhis", "chest"), horizon=30_000,
+                            key=jax.random.PRNGKey(3))
+    assert src.n_streams == 2
+    b = src.materialize()
+    for i, name in enumerate(("breakhis", "chest")):
+        spec = DATASETS[name]
+        _, fp, fn = empirical_confusion(_segment(b, 0, 30_000)._replace(
+            fs=b.fs[i], hrs=b.hrs[i]))
+        assert abs(fp - spec.fp) < 0.02, (name, fp)
+        assert abs(fn - spec.fn) < 0.02, (name, fn)
+    with pytest.raises(ValueError, match="n_streams"):
+        HeteroFleetSource(specs=("breakhis",), n_streams=3, horizon=8)
+
+
+def test_beta_process_sinusoidal_and_uniform():
+    sin = get_scenario("beta_process", beta_mode="sinusoidal", n_streams=2,
+                       horizon=1024, key=jax.random.PRNGKey(1), beta=0.5,
+                       beta_lo=0.1, period=256).materialize()
+    bs = np.asarray(sin.betas)
+    assert bs.min() >= 0.1 - 1e-6 and bs.max() <= 0.5 + 1e-6
+    assert bs.std() > 0.05                      # actually sweeps
+    assert np.allclose(bs[0], bs[1])            # network-wide congestion
+    uni = get_scenario("beta_process", beta_mode="uniform", horizon=512,
+                       key=jax.random.PRNGKey(1), beta=0.4).materialize()
+    ub = np.asarray(uni.betas)
+    assert ub.max() <= 0.4 and ub.std() > 0.05
+
+
+# --------------------------- source-driven running ----------------------------
+
+
+@pytest.mark.parametrize("name", ["reference", "fused", "sharded"])
+def test_engines_identical_costs_from_source(name):
+    """Acceptance: every engine produces identical costs when driven from the
+    same source and policy key."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0)
+    mk = lambda: get_scenario("piecewise", n_streams=6, horizon=192, block=48,
+                              key=jax.random.PRNGKey(6))
+    key = jax.random.PRNGKey(9)
+    _, ref = get_engine("reference", cfg).run_source(mk(), key)
+    st, out = get_engine(name, cfg).run_source(mk(), key)
+    assert np.array_equal(np.asarray(ref.offloads), np.asarray(out.offloads))
+    assert np.array_equal(np.asarray(ref.explores), np.asarray(out.explores))
+    assert np.array_equal(np.asarray(ref.correct), np.asarray(out.correct))
+    np.testing.assert_allclose(np.asarray(ref.loss), np.asarray(out.loss),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref.true_loss),
+                               np.asarray(out.true_loss), atol=1e-5)
+    assert out.loss.shape == (6, 4)             # (S, n_blocks) aggregates
+    assert int(st.t[0]) == 192
+
+
+def test_engine_run_dispatches_source():
+    cfg = HIConfig(bits=3, eps=0.05)
+    src = get_scenario("stationary", n_streams=4, horizon=128, block=32,
+                       key=jax.random.PRNGKey(2))
+    eng = get_engine("fused", cfg)
+    _, via_run = eng.run(src, key=jax.random.PRNGKey(5))
+    _, via_rs = eng.run_source(src, jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(via_run.loss),
+                                  np.asarray(via_rs.loss))
+    with pytest.raises(TypeError, match="hrs"):
+        eng.run(src, jnp.zeros((4, 128)), key=jax.random.PRNGKey(5))
+
+
+def test_run_fleet_source_matches_fused_engine():
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    src = get_scenario("noisy_rdl", n_streams=3, horizon=96, block=24,
+                       key=jax.random.PRNGKey(4), rdl_fn=0.3, rdl_fp=0.3)
+    key = jax.random.PRNGKey(7)
+    _, a = run_fleet_source(cfg, src, key)
+    _, b = get_engine("fused", cfg).run_source(src, key)
+    np.testing.assert_allclose(np.asarray(a.loss), np.asarray(b.loss),
+                               atol=1e-6)
+    # Under heavy RDL noise the ground-truth cost must exceed what the
+    # policy observes: offloads pay β AND the remote model's mistakes.
+    assert float(jnp.sum(a.true_loss)) > float(jnp.sum(a.loss))
+
+
+def test_source_run_block_size_invariant_costs():
+    """The policy key contract is per-(slot, stream), so chunking the same
+    scenario differently cannot change the run."""
+    cfg = HIConfig(bits=3, eps=0.1)
+    key = jax.random.PRNGKey(11)
+    totals = []
+    for blk in (16, 64, 256):
+        src = get_scenario("stationary", n_streams=4, horizon=256, block=blk,
+                           key=jax.random.PRNGKey(1))
+        _, out = get_engine("fused", cfg).run_source(src, key)
+        totals.append(float(jnp.sum(out.loss)))
+    np.testing.assert_allclose(totals[0], totals[1:], rtol=1e-6)
+
+
+def test_empirical_regret_accepts_source():
+    from repro.core import regret
+
+    cfg = HIConfig(bits=3, eps=0.1, eta=0.5)
+    src = get_scenario("stationary", n_streams=1, horizon=2000,
+                       key=jax.random.PRNGKey(0))
+    res = regret.empirical_regret(cfg, src, key=jax.random.PRNGKey(1),
+                                  n_seeds=2)
+    assert set(res) == {"algo_loss", "best_fixed_loss", "regret"}
+    assert res["algo_loss"] >= res["best_fixed_loss"] - 1e-3
+    with pytest.raises(ValueError, match="1-stream"):
+        regret.empirical_regret(
+            cfg, get_scenario("stationary", n_streams=2, horizon=64),
+            key=jax.random.PRNGKey(1))
+
+
+# ------------------------------ streamed serving ------------------------------
+
+
+class _RecordingSource(StationarySource):
+    """Asserts nothing bigger than one (S, block) chunk is ever emitted."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.emitted_shapes = []
+
+    def emit(self, state, key, slot):
+        state, batch = super().emit(state, key, slot)
+        self.emitted_shapes.append(
+            tuple(tuple(leaf.shape) for leaf in batch))
+        return state, batch
+
+
+def _no_classifier(tokens):
+    raise AssertionError("source-driven serving must not invoke a classifier")
+
+
+def test_hi_server_streams_100k_horizon_one_block_residency():
+    """Acceptance: serve T = 100_000 slots from a ScenarioSource; the trace
+    exists only as (S, block) chunks (block = 1000 ≪ T) and the LDL/RDL
+    callables are never touched."""
+    s, block, horizon = 4, 1000, 100_000
+    hi = HIConfig(bits=3, eps=0.05)
+    server = HIServer(HIServerConfig(n_streams=s, hi=hi, engine="fused"),
+                      _no_classifier, _no_classifier)
+    src = _RecordingSource(spec="breakhis", n_streams=s, horizon=horizon,
+                           block=block, key=jax.random.PRNGKey(0), beta=0.25)
+    state, summary = server.run_source(src, jax.random.PRNGKey(1))
+    assert int(state.t) == horizon
+    # Every emitted chunk — including while tracing — is exactly (S, block).
+    assert src.emitted_shapes
+    assert all(shape == (s, block) for shapes in src.emitted_shapes
+               for shape in shapes)
+    n = horizon * s
+    assert 0.01 < summary["offload_rate"] < 1.0
+    assert summary["rdl_evals"] == float(state.total_offloads)
+    assert abs(summary["avg_offload_cost"]
+               - 0.25 * summary["offload_rate"]) < 1e-5
+    assert summary["rdl_savings"] == 1.0 - summary["rdl_evals"] / n
+    assert 0.0 < summary["accuracy"] < 1.0
+    assert summary["avg_true_cost"] >= summary["avg_offload_cost"]
+
+
+def test_hi_server_source_capacity_and_rotation():
+    """Capacity-limited source serving drops overflow (no β) and still
+    reports honest row accounting, exactly like the token path."""
+    s = 6
+    server = HIServer(
+        HIServerConfig(n_streams=s, hi=HIConfig(bits=3, eps=0.4),
+                       engine="fused", offload_capacity=2),
+        _no_classifier, _no_classifier)
+    src = get_scenario("stationary", n_streams=s, horizon=256, block=64,
+                       key=jax.random.PRNGKey(5), beta=0.05)
+    state, summary = server.run_source(src, jax.random.PRNGKey(2))
+    assert summary["drop_rate"] > 0.0
+    assert summary["rdl_compute_rows"] == summary["rdl_batches"] * 2
+    assert summary["rdl_evals"] <= 2 * 256
+    assert float(state.total_dropped) > 0
+
+
+def test_hi_server_run_dispatches_source():
+    server = HIServer(HIServerConfig(n_streams=2, hi=HIConfig(bits=2)),
+                      _no_classifier, _no_classifier)
+    src = get_scenario("stationary", n_streams=2, horizon=64, block=32,
+                       key=jax.random.PRNGKey(0))
+    state, summary = server.run(src, key=jax.random.PRNGKey(1))
+    assert int(state.t) == 64
+    with pytest.raises(ValueError, match="streams"):
+        server.run_source(
+            get_scenario("stationary", n_streams=3, horizon=32),
+            jax.random.PRNGKey(1))
