@@ -1,0 +1,189 @@
+"""BEYOND-PAPER: shift-aware adaptive serving policies.
+
+Three arms run over the same workload with identical policy randomness
+(`source_slot_keys`), so the comparison is paired sample-for-sample:
+
+  fixed    — the chosen engine with the paper's fixed (η, decay) schedule.
+  adaptive — the `adaptive` PolicyEngine: per-stream CUSUM shift detection
+             over the quantized-confidence stream, schedule boost, and a
+             weight restart on confirmed shift (`--engine` is ignored for
+             this arm; the detector composes with the reference round).
+  oracle   — fixed schedule, but the expert weights are re-initialized
+             (`fleet_restart`) exactly at the true shift slots the scenario
+             was built with; the unbeatable restart baseline. On scenarios
+             with no step shift it has no restart slots and reproduces the
+             fixed arm.
+
+Per scenario the rows report observed cost, ground-truth cost, offload
+rate, post-shift ground-truth cost (second half of the horizon), and the
+restart count, e.g. how often the detector actually fired.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import engine_cached
+from repro.core import HIConfig
+from repro.core.policy import (
+    draw_psi_zeta,
+    fleet_init,
+    fleet_restart,
+    fleet_step_fused,
+    source_slot_keys,
+    true_loss_fleet,
+)
+from repro.data.scenarios import get_scenario
+from repro.serving import get_engine
+
+POLICY_KEY = 11
+
+
+def oracle_restart_run(cfg: HIConfig, source, key, restart_slots: Sequence[int]):
+    """Run the fused fleet step over `source` with oracle weight restarts.
+
+    The trace is materialized once and scanned segment-by-segment;
+    `fleet_restart` re-initializes every stream's expert weights at each
+    slot in `restart_slots`. Policy keys follow `source_slot_keys`, so with
+    no restart slots this reproduces the chunked `run_source` runs
+    decision-for-decision. Returns per-slot (S, T) arrays
+    (loss, true_loss, offload).
+    """
+    tr = source.materialize()
+    s, t = tr.fs.shape
+    state = fleet_init(cfg, s)
+    bounds = [0, *sorted(int(r) for r in restart_slots), t]
+
+    @jax.jit
+    def seg(state, fs, hrs, ys, betas, t0):
+        ts = t0 + jnp.arange(fs.shape[1], dtype=jnp.int32)
+        tp = lambda a: jnp.swapaxes(a, 0, 1)
+
+        def body(st, xs):
+            f, hr, y, beta, ti = xs
+            psi, zeta = draw_psi_zeta(source_slot_keys(key, ti, s), cfg.eps)
+            st, out = fleet_step_fused(cfg, st, f, psi, zeta, hr, beta)
+            return st, (out.loss, true_loss_fleet(cfg, out, y, beta), out.offload)
+
+        state, per = jax.lax.scan(
+            body, state, (tp(fs), tp(hrs), tp(ys), tp(betas), ts)
+        )
+        loss, true, off = per
+        return state, (tp(loss), tp(true), tp(off))
+
+    parts = []
+    for a, b in zip(bounds, bounds[1:]):
+        if a > 0:
+            state = fleet_restart(cfg, state, jnp.ones((s,), bool))
+        sl = lambda arr: arr[:, a:b]
+        state, per = seg(
+            state, sl(tr.fs), sl(tr.hrs), sl(tr.ys), sl(tr.betas), jnp.int32(a)
+        )
+        parts.append(per)
+    cat = lambda i: jnp.concatenate([p[i] for p in parts], axis=1)
+    return cat(0), cat(1), cat(2)
+
+
+def _scenarios(quick: bool):
+    horizon = 4000 if quick else 20_000
+    block = 500 if quick else 1000
+    n_streams = 4 if quick else 8
+    half = horizon // 2
+    mk = lambda name, **kw: (
+        lambda: get_scenario(
+            name,
+            n_streams=n_streams,
+            horizon=horizon,
+            block=block,
+            key=jax.random.PRNGKey(0),
+            beta=0.3,
+            **kw,
+        )
+    )
+    return horizon, n_streams, {
+        # Mild shift: the stale experts stay serviceable, so this measures
+        # the adaptive layer's overhead when restarting barely pays.
+        "drift_mild": (
+            mk("piecewise", segments=((0, "breakhis"), (half, "breach"))),
+            (half,),
+        ),
+        # OOD shift (paper Table 3's xract mismatch): stale experts are
+        # badly wrong and restarts dominate.
+        "drift_ood": (
+            mk("piecewise", segments=((0, "breakhis"), (half, "xract"))),
+            (half,),
+        ),
+        # No step shift: these measure false-restart overhead under network
+        # -cost dynamics and remote-label noise.
+        "beta_process": (mk("beta_process"), ()),
+        "noisy_rdl": (mk("noisy_rdl", rdl_fn=0.3, rdl_fp=0.3), ()),
+    }
+
+
+def run(quick: bool = False, engine: str = "fused", scenario: str = "") -> List[str]:
+    rows = []
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    horizon, n_streams, scenarios = _scenarios(quick)
+    names = [n for n in scenario.split(",") if n] or list(scenarios)
+    key = jax.random.PRNGKey(POLICY_KEY)
+
+    for name in names:
+        maker, restart_slots = scenarios[name]
+        n = n_streams * horizon
+
+        def report(arm, us, cost, true_cost, offloads, post_true, restarts):
+            rows.append(
+                f"adaptive_{name}_{arm},{us:.0f},"
+                f"cost={cost / n:.4f},true_cost={true_cost / n:.4f},"
+                f"offload_rate={offloads / n:.3f},"
+                f"post_true_cost={post_true / (n / 2):.4f},"
+                f"restarts={restarts}"
+            )
+
+        for arm in ("fixed", "adaptive"):
+            eng = (
+                get_engine("adaptive", cfg)
+                if arm == "adaptive"
+                else engine_cached(engine, cfg)
+            )
+            src = maker()
+            t0 = time.perf_counter()
+            state, out = eng.run_source(src, key)
+            jax.block_until_ready(out.loss)
+            us = (time.perf_counter() - t0) * 1e6
+            half_blocks = out.loss.shape[1] // 2
+            restarts = (
+                int(jnp.sum(state.shift.n_alarms)) if arm == "adaptive" else 0
+            )
+            report(
+                arm,
+                us,
+                float(jnp.sum(out.loss)),
+                float(jnp.sum(out.true_loss)),
+                float(jnp.sum(out.offloads)),
+                float(jnp.sum(out.true_loss[:, half_blocks:])),
+                restarts,
+            )
+
+        t0 = time.perf_counter()
+        loss, true, off = oracle_restart_run(cfg, maker(), key, restart_slots)
+        jax.block_until_ready(loss)
+        us = (time.perf_counter() - t0) * 1e6
+        report(
+            "oracle",
+            us,
+            float(jnp.sum(loss)),
+            float(jnp.sum(true)),
+            float(jnp.sum(off)),
+            float(jnp.sum(true[:, horizon // 2 :])),
+            len(restart_slots) * n_streams,
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

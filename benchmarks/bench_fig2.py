@@ -6,7 +6,6 @@ import time
 from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import HIConfig, offline

@@ -1,0 +1,139 @@
+"""Gate benchmark results against a committed baseline.
+
+    python benchmarks/check_regression.py current.json results/bench_baseline.json
+    python benchmarks/check_regression.py current.json results/bench_baseline.json --update
+
+Both files are `benchmarks.run --json` documents. Every numeric metric in
+the baseline must be reproduced by the current run within a relative
+tolerance (default ±10%, with a small absolute floor so near-zero metrics
+don't demand infinite precision). Timing (`us_per_call`) is machine-
+dependent and never compared. Benchmarks present in the current run but
+missing from the baseline are reported informationally — commit a refreshed
+baseline (`--update`) to start tracking them.
+
+Stdlib-only on purpose: the gate can run without jax installed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import shutil
+import sys
+from typing import Dict, List
+
+DEFAULT_TOLERANCE = 0.10
+ABS_FLOOR = 0.02
+# Discrete event counts (how often the shift detector fired) flip by whole
+# units on ulp-level numeric drift, so a ±10% float gate on them is pure
+# noise; the cost/rate metrics gate the behavior they produce.
+SKIP_METRICS = frozenset({"restarts"})
+
+
+def compare(
+    current: Dict,
+    baseline: Dict,
+    tolerance: float = DEFAULT_TOLERANCE,
+    abs_floor: float = ABS_FLOOR,
+) -> List[str]:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    failures = []
+    cur = current.get("benchmarks", {})
+    base = baseline.get("benchmarks", {})
+    for name, brec in sorted(base.items()):
+        if brec.get("error"):
+            failures.append(
+                f"{name}: baseline record is errored — refresh the baseline"
+            )
+            continue
+        crec = cur.get(name)
+        if crec is None:
+            failures.append(f"{name}: missing from current results")
+            continue
+        if crec.get("error"):
+            failures.append(f"{name}: current run errored")
+            continue
+        for key, bval in sorted(brec.get("metrics", {}).items()):
+            if key in SKIP_METRICS:
+                continue
+            if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+                continue
+            cval = crec.get("metrics", {}).get(key)
+            if not isinstance(cval, (int, float)) or isinstance(cval, bool):
+                failures.append(f"{name}.{key}: missing from current results")
+                continue
+            limit = max(tolerance * abs(bval), abs_floor)
+            if not math.isfinite(cval) or abs(cval - bval) > limit:
+                failures.append(
+                    f"{name}.{key}: {cval:.6g} deviates from baseline "
+                    f"{bval:.6g} by more than ±{limit:.6g}"
+                )
+    return failures
+
+
+def untracked(current: Dict, baseline: Dict) -> List[str]:
+    """Benchmark names in the current run the baseline doesn't cover."""
+    base = baseline.get("benchmarks", {})
+    return sorted(n for n in current.get("benchmarks", {}) if n not in base)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh `benchmarks.run --json` output")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=DEFAULT_TOLERANCE,
+        help=f"relative tolerance per metric (default {DEFAULT_TOLERANCE})",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="overwrite the baseline with the current results and exit 0",
+    )
+    args = ap.parse_args()
+
+    with open(args.current) as fh:
+        current = json.load(fh)
+
+    if args.update:
+        errored = sorted(
+            n
+            for n, rec in current.get("benchmarks", {}).items()
+            if rec.get("error")
+        )
+        if errored:
+            print(
+                "refusing to update the baseline from an errored run: "
+                + ", ".join(errored)
+            )
+            return 1
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    failures = compare(current, baseline, tolerance=args.tolerance)
+    extra = untracked(current, baseline)
+    if extra:
+        print(
+            "note: benchmarks not in the baseline (run with --update to "
+            "track): " + ", ".join(extra)
+        )
+    if failures:
+        print(f"REGRESSION GATE FAILED ({len(failures)} deviation(s)):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    n = len(baseline.get("benchmarks", {}))
+    print(f"regression gate passed: {n} benchmark(s) within "
+          f"±{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

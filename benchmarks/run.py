@@ -1,6 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
+                                            [--json out.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout) — one row per measured
 configuration, matching the paper's artifacts:
@@ -16,15 +17,24 @@ configuration, matching the paper's artifacts:
     multiclass BEYOND-PAPER: online K-class HI via learned risk threshold (paper §6)
     scenarios BEYOND-PAPER: cost/regret across the ScenarioSource registry
               (chunked engine runs; --scenario restricts the sweep)
+    adaptive BEYOND-PAPER: fixed vs shift-aware adaptive vs oracle-restart
+              policies under drift / β dynamics / RDL noise
+
+``--json out.json`` additionally writes the rows as machine-readable
+per-benchmark records (see `parse_row`); `benchmarks/check_regression.py`
+gates CI on such a file against `results/bench_baseline.json`.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
+from typing import Dict, Tuple
 
 from benchmarks import (
+    bench_adaptive,
     bench_drift,
     bench_multiclass,
     bench_fig2,
@@ -48,7 +58,48 @@ MODULES = {
     "drift": bench_drift,
     "multiclass": bench_multiclass,
     "scenarios": bench_scenarios,
+    "adaptive": bench_adaptive,
 }
+
+
+def parse_row(row: str) -> Tuple[str, Dict[str, object]]:
+    """Parse one ``name,us_per_call,derived`` row into (name, record).
+
+    The derived field is a `,`- or `;`-separated list of ``key=value``
+    items; numeric values parse to floats, anything else stays a string
+    (regression gating only compares the numeric ones). Malformed or ERROR
+    rows yield a record with ``"error": True``.
+    """
+    parts = row.split(",")
+    name = parts[0]
+    record: Dict[str, object] = {"metrics": {}}
+    try:
+        record["us_per_call"] = float(parts[1])
+    except (IndexError, ValueError):
+        record["error"] = True
+        return name, record
+    derived = ",".join(parts[2:])
+    if derived == "ERROR":
+        record["error"] = True
+        return name, record
+    for item in derived.replace(";", ",").split(","):
+        if "=" not in item:
+            continue
+        k, v = item.split("=", 1)
+        try:
+            record["metrics"][k] = float(v)
+        except ValueError:
+            record["metrics"][k] = v
+    return name, record
+
+
+def rows_to_report(rows, meta: Dict[str, object]) -> Dict[str, object]:
+    """Assemble parsed rows into the --json / baseline document shape."""
+    benchmarks: Dict[str, object] = {}
+    for row in rows:
+        name, record = parse_row(row)
+        benchmarks[name] = record
+    return {"meta": meta, "benchmarks": benchmarks}
 
 
 def main() -> int:
@@ -57,6 +108,9 @@ def main() -> int:
                     help="reduced horizons/sweeps (CI-sized)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of " + ",".join(MODULES))
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write per-benchmark metrics as JSON "
+                         "(the regression-gate input)")
     from repro.data.scenarios import available_scenarios
     from repro.serving.policy_engine import available_engines
 
@@ -70,6 +124,7 @@ def main() -> int:
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(MODULES)
     print("name,us_per_call,derived")
+    all_rows = []
     failed = False
     for name in names:
         kwargs = {"quick": args.quick}
@@ -81,11 +136,21 @@ def main() -> int:
         try:
             for row in MODULES[name].run(**kwargs):
                 print(row)
+                all_rows.append(row)
                 sys.stdout.flush()
         except Exception:  # noqa: BLE001
             failed = True
             print(f"{name},0,ERROR")
+            all_rows.append(f"{name},0,ERROR")
             traceback.print_exc()
+    if args.json:
+        report = rows_to_report(all_rows, meta={
+            "quick": args.quick, "engine": args.engine, "only": names,
+        })
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
     return 1 if failed else 0
 
 

@@ -18,7 +18,6 @@ def main():
     ap.add_argument("--res", type=int, default=30)
     args = ap.parse_args()
 
-    k = 3
     # A representative asymmetric cost matrix (rows: true, cols: predicted).
     c = jnp.asarray([[0.0, 0.7, 0.9],
                      [1.0, 0.0, 0.6],

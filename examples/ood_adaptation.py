@@ -41,7 +41,7 @@ def main():
         label = "paper H2T2        " if decay == 1.0 else f"discounted γ={decay}"
         print(f"  {label}: pre-shift {float(jnp.mean(out.loss[:half])):.4f}  "
               f"post-shift {float(jnp.mean(out.loss[half:])):.4f}")
-        print(f"    cost trajectory: "
+        print("    cost trajectory: "
               + " ".join(f"{c:.3f}" for c in window_costs(out.loss)))
 
 

@@ -14,9 +14,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import LDL_CONFIG, RDL_CONFIG
+from repro.configs import LDL_CONFIG
 from repro.core import HIConfig
-from repro.data.tokens import classification_batch
 from repro.models import init_params
 from repro.models.heads import binary_head_init
 from repro.serving import HIServer, HIServerConfig, available_engines, classifier_fn

@@ -8,7 +8,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import RDL_CONFIG
 from repro.data import synthetic_batch

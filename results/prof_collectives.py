@@ -2,7 +2,8 @@
 depth-2, group collective ops by (kind, shape), print descending total bytes."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-import argparse, re, sys
+import argparse
+import re
 from collections import defaultdict
 import jax
 from repro.configs import get_config, get_shape

@@ -6,6 +6,7 @@ from repro.core.policy import (
     H2T2State,
     SourceRunOutput,
     StepOutput,
+    adapt_schedule,
     classification_cost,
     draw_fleet_randomness,
     draw_psi_zeta,
@@ -13,6 +14,7 @@ from repro.core.policy import (
     fleet_decide,
     fleet_feedback,
     fleet_init,
+    fleet_restart,
     fleet_step_fused,
     h2t2_init,
     h2t2_step,
@@ -27,6 +29,14 @@ from repro.core.policy import (
     source_slot_keys,
     true_loss_fleet,
 )
+from repro.core.shift import (
+    COUNTER_CAP,
+    ShiftConfig,
+    ShiftState,
+    detect_shifts,
+    shift_init,
+    shift_update,
+)
 from repro.core.calibrated import (
     CalibratedDecision,
     calibrated_rule,
@@ -38,13 +48,18 @@ from repro.core.calibrated import (
 from repro.core import baselines, multiclass, offline, regret
 
 __all__ = [
+    "COUNTER_CAP",
     "HIConfig", "StreamSpec", "FleetDecision", "H2T2State",
-    "SourceRunOutput", "StepOutput", "classification_cost",
+    "ShiftConfig", "ShiftState",
+    "SourceRunOutput", "StepOutput", "adapt_schedule", "classification_cost",
+    "detect_shifts",
     "draw_fleet_randomness", "draw_psi_zeta", "effective_local_pred",
-    "fleet_decide", "fleet_feedback", "fleet_init", "fleet_step_fused",
+    "fleet_decide", "fleet_feedback", "fleet_init", "fleet_restart",
+    "fleet_step_fused",
     "h2t2_init", "h2t2_step", "local_fallback_pred", "pseudo_loss",
     "quantize", "region_masks",
     "run_fleet", "run_fleet_fused", "run_fleet_source", "run_stream",
+    "shift_init", "shift_update",
     "source_slot_keys", "true_loss_fleet",
     "CalibratedDecision", "calibrated_rule", "chow_rule",
     "multiclass_regions", "multiclass_rule", "optimal_thresholds",

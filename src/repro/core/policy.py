@@ -195,6 +195,9 @@ def fleet_feedback(
     hrs: jnp.ndarray,        # (S,) remote labels; only consumed where sent/explored
     betas: jnp.ndarray,      # (S,) decision-time offload costs
     sent: Optional[jnp.ndarray] = None,   # (S,) bool — offloads that reached the RDL
+    *,
+    eta: Optional[jnp.ndarray] = None,    # (S,) or scalar; None → cfg.eta
+    decay: Optional[jnp.ndarray] = None,  # (S,) or scalar; None → cfg.decay
 ) -> Tuple[H2T2State, StepOutput]:
     """Second half of `h2t2_step`: charge losses and update expert weights.
 
@@ -206,6 +209,11 @@ def fleet_feedback(
     returned `StepOutput.loss`; a real server without ground truth should
     ignore those rows.
 
+    `eta`/`decay` override the config's fixed schedule per stream (the
+    adaptive engine passes `adapt_schedule`'s output here); the defaults
+    broadcast the HIConfig scalars, which is bit-identical to the fixed
+    paper schedule.
+
     `fleet_decide` + `fleet_feedback` (with full `hrs` and `sent=None`)
     reproduces the vmapped `h2t2_step` exactly — state and outputs.
     """
@@ -215,15 +223,20 @@ def fleet_feedback(
     explored = decision.explored & sent
     loss, pred = _charge_losses(cfg, sent, effective_local_pred(decision, sent),
                                 hrs, betas)
+    dtype = state.log_w.dtype
+    eta = jnp.broadcast_to(
+        jnp.asarray(cfg.eta if eta is None else eta, dtype), sent.shape)
+    decay = jnp.broadcast_to(
+        jnp.asarray(cfg.decay if decay is None else decay, dtype), sent.shape)
 
-    def one(lw, i_f, off, exp_, hr, beta):
+    def one(lw, i_f, off, exp_, hr, beta, eta_s, decay_s):
         lt = pseudo_loss(cfg, i_f, off, exp_, hr, beta)
-        new_lw = cfg.decay * lw - cfg.eta * lt
+        new_lw = decay_s * lw - eta_s * lt
         return new_lw - jnp.max(jnp.where(jnp.isfinite(new_lw), new_lw,
                                           -jnp.inf))
 
     log_w = jax.vmap(one)(
-        state.log_w, decision.i_f, sent, explored, hrs, betas)
+        state.log_w, decision.i_f, sent, explored, hrs, betas, eta, decay)
     new_state = H2T2State(
         log_w=log_w,
         t=state.t + 1,
@@ -234,6 +247,55 @@ def fleet_feedback(
         offload=sent, pred=pred, local_pred=decision.local_pred, loss=loss,
         explored=explored, q=decision.q, p=decision.p,
     )
+
+
+# ------------------------ shift-conditioned schedules -------------------------
+#
+# The fixed (η, decay) schedule is Algorithm 1; under distribution shift the
+# accumulated expert evidence is stale, so the adaptive serving policy
+# conditions the schedule on detector state (core.shift) and may restart the
+# expert weights outright on a confirmed shift. Both pieces are jit-able and
+# per-stream, composing with the batched fleet rounds above.
+
+
+def adapt_schedule(cfg: HIConfig, shift_cfg, shift_state
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-stream (η, decay) conditioned on detector state.
+
+    Right after stream s's last confirmed shift (`since_alarm = 0`) the
+    learning rate is boosted to `eta_boost · η` and the weight decay pulled
+    to `recovery_decay` (None: left at cfg.decay), so fresh evidence
+    dominates; both anneal back to the HIConfig values as
+    exp(-since_alarm / recovery). A stream that has never alarmed sits at
+    the fixed-schedule *values* exactly (`since_alarm` starts at
+    `COUNTER_CAP`, where the boost underflows to 0); note the returned
+    arrays are traced, so XLA may fuse the weight update differently than
+    with compile-time-constant η/decay (≈1-ulp weight differences — disable
+    the detector outright for bit-parity).
+    """
+    boost = jnp.exp(-shift_state.since_alarm.astype(cfg.dtype)
+                    / shift_cfg.recovery)
+    eta = cfg.eta * (1.0 + (shift_cfg.eta_boost - 1.0) * boost)
+    decay_target = (cfg.decay if shift_cfg.recovery_decay is None
+                    else shift_cfg.recovery_decay)
+    decay = cfg.decay + (decay_target - cfg.decay) * boost
+    return eta, decay
+
+
+def fleet_restart(cfg: HIConfig, state: H2T2State,
+                  mask: jnp.ndarray) -> H2T2State:
+    """Re-initialize expert log-weights where `mask` (S,) is set.
+
+    The restart is weights-only: the round/offload/exploration counters —
+    the stream's threshold *history* — are preserved, so regret accounting
+    and ε/η horizon schedules keep their meaning across a restart. Streams
+    outside the mask are untouched.
+    """
+    g = cfg.grid
+    fresh = jnp.where(_valid_mask(g), 0.0, -jnp.inf).astype(state.log_w.dtype)
+    mask = mask.astype(bool)
+    return state._replace(
+        log_w=jnp.where(mask[:, None, None], fresh[None], state.log_w))
 
 
 def h2t2_step(

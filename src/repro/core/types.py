@@ -10,7 +10,6 @@ Notation follows the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 

@@ -6,7 +6,7 @@ loss to decrease during the example training runs without external data.
 """
 from __future__ import annotations
 
-from typing import Iterator, NamedTuple, Optional, Tuple
+from typing import Iterator, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

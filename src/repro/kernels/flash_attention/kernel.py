@@ -97,7 +97,6 @@ def flash_attention_pallas(
 ) -> jnp.ndarray:
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape
-    groups = h // hkv
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     sq_pad = math.ceil(sq / block_q) * block_q

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
-from repro.kernels.flash_attention.ref import attention_ref
 
 
 @functools.partial(

@@ -3,18 +3,15 @@ in_shardings) for a given (arch × shape × mesh × strategy)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ModelConfig, InputShape
 from repro.launch import sharding, specs as spec_lib
 from repro.models import (
     decode_step,
-    forward,
     init_decode_state,
     init_params,
     prefill,

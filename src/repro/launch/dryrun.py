@@ -13,7 +13,6 @@ Emits one JSON object: memory analysis (bytes/device), cost analysis
 three-term roofline via the delta method (see launch/roofline.py).
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -21,7 +20,7 @@ import time
 import jax
 
 from repro.configs import ASSIGNED, SHAPES, get_config, get_shape
-from repro.launch import builders, roofline as roofline_lib
+from repro.launch import roofline as roofline_lib
 from repro.launch.mesh import HBM_BYTES, make_production_mesh
 
 

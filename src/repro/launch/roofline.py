@@ -20,7 +20,6 @@ the optimized HLO text for collectives. Two corrections:
 """
 from __future__ import annotations
 
-import dataclasses
 import re
 from typing import Any, Dict, Optional
 

@@ -18,13 +18,11 @@ All rules are divisibility-safe: jit in_shardings reject uneven shards
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 
 
 def _sizes(mesh: Mesh) -> Tuple[int, int]:

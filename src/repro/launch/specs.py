@@ -2,7 +2,7 @@
 weak-type-correct, shardable, never allocating device memory."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

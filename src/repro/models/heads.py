@@ -3,7 +3,6 @@ turns any backbone into an LDL/RDL classifier emitting the confidence f_t that
 repro.core consumes."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -52,7 +52,6 @@ def init_params(key, cfg: ModelConfig) -> Params:
     if cfg.family == "vlm":
         p["projector"] = dense_init(ks[4], cfg.d_model, cfg.d_model, dtype)
     if cfg.family == "encdec":
-        enc_cfg = cfg
         p["enc_pos"] = learned_positions_init(ks[5], cfg.n_frames, cfg.d_model, dtype)
         import dataclasses
 
@@ -171,7 +170,6 @@ def decode_step(
     x = embed(p["embed"], token)
     if cfg.rope_theta == 0 and "pos" in p:
         # Use the cache index of the first attention layer as the position.
-        idx = jax.tree.leaves(state.caches)[-1]
         pos = _first_cache_index(state.caches)
         x = x + p["pos"]["pos"][None, (pos % MAX_LEARNED_POS)[None], :]
     x = constrain(x, "batch", None, None)

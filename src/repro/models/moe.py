@@ -7,7 +7,7 @@ per-expert d_ff tensor-parallel). Aux load-balancing loss follows Switch.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

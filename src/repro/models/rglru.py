@@ -11,7 +11,7 @@ conv1d(width 4) + GeGLU-style output gate.
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ exact associative recurrence. Decode maintains the (H, P, N) state directly.
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -33,7 +33,6 @@ from repro.models.layers import (
     mlp_init,
     norm_init,
 )
-from repro.utils import constrain
 
 
 # --------------------------- depth plan --------------------------------------

@@ -23,6 +23,8 @@ from repro.serving.hi_server import (
     SlotResult,
 )
 from repro.serving.policy_engine import (
+    AdaptiveEngine,
+    AdaptiveState,
     FusedEngine,
     PolicyEngine,
     ReferenceEngine,
@@ -33,6 +35,7 @@ from repro.serving.policy_engine import (
 )
 
 __all__ = [
+    "AdaptiveEngine", "AdaptiveState",
     "Engine", "EngineConfig", "FusedEngine", "HIServer", "HIServerConfig",
     "HIServerState", "OffloadBatch", "PendingFeedback", "PolicyEngine",
     "ReferenceEngine", "ShardedEngine", "SlotResult", "available_engines",

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import DecodeState, decode_step, init_decode_state, prefill
+from repro.models import DecodeState, decode_step, prefill
 from repro.models.transformer import RunFlags
 
 
@@ -68,7 +68,6 @@ def classifier_fn(
 
     This is the LDL/RDL entry point for hierarchical inference: backbone
     features pooled by the binary head into the paper's f_t."""
-    from repro.models import forward as model_forward
     from repro.models.heads import binary_head, confidence
     from repro.models.layers import apply_norm
     from repro.models import model as model_lib

@@ -26,6 +26,13 @@ the same keys. Registered engines:
                 (S,) stream axis sharded, so one fleet spans a pod. Streams
                 are padded up to a device-count multiple; validate on CPU
                 with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+  "adaptive"  — detect → adapt → restart: an online shift detector
+                (`core.shift`) watches each stream's per-slot signal, the
+                (η, decay) schedule is conditioned on detector state
+                (`core.policy.adapt_schedule`), and a confirmed shift
+                restarts that stream's expert weights
+                (`core.policy.fleet_restart`). With the detector disabled
+                it reduces bit-identically to the fixed-schedule policy.
 
 Use `get_engine(name, hi_cfg, **opts)` to resolve a name, or instantiate the
 classes directly. `register_engine` adds new backends (e.g. an RPC-remote
@@ -33,7 +40,7 @@ policy) without touching any caller.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple, Type
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Type
 
 import jax
 import jax.numpy as jnp
@@ -46,17 +53,20 @@ from repro.core.policy import (
     H2T2State,
     SourceRunOutput,
     StepOutput,
+    adapt_schedule,
     draw_fleet_randomness,
     draw_psi_zeta,
     fleet_decide,
     fleet_feedback,
     fleet_init,
+    fleet_restart,
     fleet_step_fused,
     h2t2_step,
     run_fleet,
     run_fleet_fused,
     run_fleet_source,
 )
+from repro.core.shift import ShiftConfig, ShiftState, shift_init, shift_update
 from repro.core.types import HIConfig
 from repro.data.scenarios import ScenarioSource
 
@@ -344,3 +354,140 @@ class ShardedEngine(PolicyEngine):
         s, t = fs.shape
         psis, zetas = draw_fleet_randomness(self.hi, key, s, t, stream_keys)
         return self._run(fs, hrs, betas, psis, zetas.astype(jnp.int32))
+
+
+class AdaptiveState(NamedTuple):
+    """Fleet policy state + per-stream detector state, threaded as one pytree.
+
+    The passthrough properties expose the inner `H2T2State` fields, so code
+    written against a plain fleet state (tests, summaries) can read an
+    adaptive state unchanged.
+    """
+
+    policy: H2T2State        # leaves batched over (S,)
+    shift: ShiftState        # leaves batched over (S,)
+
+    @property
+    def log_w(self):
+        return self.policy.log_w
+
+    @property
+    def t(self):
+        return self.policy.t
+
+    @property
+    def n_offloads(self):
+        return self.policy.n_offloads
+
+    @property
+    def n_explores(self):
+        return self.policy.n_explores
+
+
+@register_engine("adaptive")
+class AdaptiveEngine(PolicyEngine):
+    """Shift-aware policy: detect → adapt → (restart) around the fleet round.
+
+    Per slot the engine (1) conditions the (η, decay) schedule on each
+    stream's detector state (`adapt_schedule` — boosted right after a
+    confirmed shift, annealing back to the HIConfig values), (2) runs the
+    exact reference decide/feedback round with that schedule, (3) folds the
+    slot's signal (observed loss, or the quantized confidence) into the
+    detector, and (4) if the detector fires and `restart=True`, re-
+    initializes the alarmed streams' expert weights while preserving their
+    threshold history (`fleet_restart`).
+
+    State is an `AdaptiveState` (policy + detector); `init`/`step`/`run`/
+    `run_source` and the serving `decide`/`feedback` split all thread it, so
+    `HIServer` drives this engine unchanged. With `shift.detector="none"`
+    every decision, loss, and weight update is bit-identical to the
+    fixed-schedule engines for the same keys; an enabled-but-alarm-free run
+    applies the same schedule values but as traced arrays, which XLA may
+    fuse differently (≈1-ulp weight drift over long horizons).
+
+    Serving note: in the `HIServer` flow the observed loss charges the
+    scattered remote labels, whose `~sent` rows are fill values — the
+    detector still sees level shifts through them, but a real deployment
+    may prefer `ShiftConfig(signal="confidence")`, which watches the
+    decision-time quantized confidence only.
+    """
+
+    def __init__(self, hi_cfg: HIConfig,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None,
+                 shift: Optional[ShiftConfig] = None,
+                 restart: bool = True):
+        super().__init__(hi_cfg, interpret, use_kernel)
+        self.shift_cfg = ShiftConfig() if shift is None else shift
+        self.restart = bool(restart)
+        scfg = self.shift_cfg
+        do_restart = scfg.enabled and self.restart
+
+        def feedback(state, decision, hrs, betas, sent):
+            if scfg.enabled:
+                eta, decay = adapt_schedule(hi_cfg, scfg, state.shift)
+            else:
+                eta = decay = None
+            policy, out = fleet_feedback(hi_cfg, state.policy, decision, hrs,
+                                         betas, sent, eta=eta, decay=decay)
+            if scfg.signal == "confidence":
+                x = decision.i_f.astype(hi_cfg.dtype) / hi_cfg.grid
+            else:
+                x = out.loss
+            shift_state, alarm = shift_update(scfg, state.shift, x)
+            if do_restart:
+                policy = fleet_restart(hi_cfg, policy, alarm)
+            return AdaptiveState(policy=policy, shift=shift_state), out
+
+        self._feedback = jax.jit(feedback)
+
+        def decide(state, fs, keys):
+            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+            return fleet_decide(hi_cfg, state.policy, fs, psi, zeta)
+
+        self._decide = jax.jit(decide)
+
+        def step(state, fs, betas, hrs, keys):
+            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+            decision = fleet_decide(hi_cfg, state.policy, fs, psi, zeta)
+            return feedback(state, decision, hrs, betas, decision.offload)
+
+        self._step = jax.jit(step)
+
+        def run(state, fs, hrs, betas, keys_t):
+            def body(st, xs):
+                f, hr, beta, keys = xs
+                return step(st, f, beta, hr, keys)
+
+            tp = lambda a: jnp.swapaxes(a, 0, 1)
+            final, outs = jax.lax.scan(
+                body, state, (tp(fs), tp(hrs), tp(betas), tp(keys_t)))
+            return final, jax.tree_util.tree_map(tp, outs)
+
+        self._run = jax.jit(run)
+
+    def init(self, n_streams: int) -> AdaptiveState:
+        return AdaptiveState(policy=fleet_init(self.hi, n_streams),
+                             shift=shift_init(n_streams, self.hi.dtype))
+
+    def step(self, state, fs, betas, hrs, keys):
+        return self._step(state, fs, betas, hrs, keys)
+
+    def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
+        s, t = fs.shape
+        if stream_keys is None:
+            if key is None:
+                raise ValueError("AdaptiveEngine.run needs `key` or "
+                                 "`stream_keys`")
+            stream_keys = jax.random.split(key, s)
+        # The run_fleet key tree: stream key → T round keys, so an alarm-free
+        # adaptive run is decision-identical to the fixed engines.
+        keys_t = jax.vmap(lambda sk: jax.random.split(sk, t))(stream_keys)
+        return self._run(self.init(s), fs, hrs, betas, keys_t)
+
+    def run_source(self, source: ScenarioSource, key,
+                   state: Optional[AdaptiveState] = None):
+        if state is None:
+            state = self.init(source.n_streams)
+        return run_fleet_source(self.hi, source, key, state=state,
+                                step_fn=self._step)

@@ -1,9 +1,8 @@
 """Train-step builder: LM cross-entropy (+ MoE aux loss) with optional remat."""
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

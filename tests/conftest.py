@@ -3,6 +3,8 @@ import sys
 
 # Tests run on the single real CPU device; ONLY dryrun.py forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Repo root, so tests can drive the benchmark harness (`import benchmarks`).
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,166 @@
+"""The bench-regression CI gate: row parsing (`benchmarks.run`), tolerance
+comparison (`benchmarks.check_regression`), and the committed baseline."""
+
+import json
+import os
+
+from benchmarks.check_regression import compare, untracked
+from benchmarks.run import parse_row, rows_to_report
+
+BASELINE = os.path.join(
+    os.path.dirname(__file__), "..", "results", "bench_baseline.json"
+)
+
+
+def _report(**metrics_by_name):
+    return {
+        "meta": {},
+        "benchmarks": {
+            name: {"us_per_call": 100.0, "metrics": dict(metrics)}
+            for name, metrics in metrics_by_name.items()
+        },
+    }
+
+
+# -------------------------------- row parsing ---------------------------------
+
+
+def test_parse_row_comma_separated_metrics():
+    name, rec = parse_row(
+        "scenario_stationary,123,cost=0.2052,true_cost=0.2052,offload_rate=0.407"
+    )
+    assert name == "scenario_stationary"
+    assert rec["us_per_call"] == 123.0
+    assert rec["metrics"] == {
+        "cost": 0.2052,
+        "true_cost": 0.2052,
+        "offload_rate": 0.407,
+    }
+
+
+def test_parse_row_semicolon_and_string_values():
+    name, rec = parse_row(
+        "hedge_fleet_G16_S64_T2048_fused,42,us_per_round=0.02;engine=fused"
+    )
+    assert name == "hedge_fleet_G16_S64_T2048_fused"
+    assert rec["metrics"]["us_per_round"] == 0.02
+    assert rec["metrics"]["engine"] == "fused"
+
+
+def test_parse_row_error_and_malformed():
+    _, rec = parse_row("fig4,0,ERROR")
+    assert rec.get("error")
+    _, rec = parse_row("just-a-name")
+    assert rec.get("error")
+
+
+def test_rows_to_report_shape():
+    report = rows_to_report(
+        ["a,1,x=2", "b,3,y=4"], meta={"quick": True}
+    )
+    assert report["meta"] == {"quick": True}
+    assert set(report["benchmarks"]) == {"a", "b"}
+    assert report["benchmarks"]["a"]["metrics"]["x"] == 2.0
+
+
+# ------------------------------- the tolerance gate ---------------------------
+
+
+def test_compare_passes_within_tolerance():
+    base = _report(bench={"cost": 1.0, "rate": 0.5})
+    cur = _report(bench={"cost": 1.08, "rate": 0.52})
+    assert compare(cur, base, tolerance=0.10) == []
+
+
+def test_compare_fails_outside_tolerance():
+    base = _report(bench={"cost": 1.0})
+    cur = _report(bench={"cost": 1.2})
+    failures = compare(cur, base, tolerance=0.10)
+    assert len(failures) == 1 and "bench.cost" in failures[0]
+
+
+def test_compare_absolute_floor_for_tiny_metrics():
+    base = _report(bench={"drop_rate": 0.0})
+    assert compare(_report(bench={"drop_rate": 0.01}), base) == []
+    failures = compare(_report(bench={"drop_rate": 4.0}), base)
+    assert len(failures) == 1
+
+
+def test_compare_skips_discrete_restart_counts():
+    """Alarm counts flip by whole units on ulp-level drift; they are
+    excluded from the float gate (the cost metrics gate the behavior)."""
+    base = _report(bench={"restarts": 4.0, "cost": 1.0})
+    assert compare(_report(bench={"restarts": 5.0, "cost": 1.0}), base) == []
+
+
+def test_compare_flags_missing_benchmark_and_metric():
+    base = _report(a={"cost": 1.0}, b={"cost": 1.0})
+    cur = _report(a={"other": 1.0})
+    failures = compare(cur, base)
+    assert any("a.cost" in f for f in failures)
+    assert any(f.startswith("b:") for f in failures)
+
+
+def test_compare_skips_strings_and_timing():
+    base = _report(bench={"engine": "fused", "cost": 1.0})
+    cur = {
+        "meta": {},
+        "benchmarks": {
+            "bench": {
+                "us_per_call": 9e9,  # timing never gated
+                "metrics": {"engine": "reference", "cost": 1.0},
+            }
+        },
+    }
+    assert compare(cur, base) == []
+
+
+def test_compare_flags_errored_run():
+    base = _report(bench={"cost": 1.0})
+    cur = {"meta": {}, "benchmarks": {"bench": {"error": True, "metrics": {}}}}
+    failures = compare(cur, base)
+    assert failures and "errored" in failures[0]
+
+
+def test_compare_flags_errored_baseline_record():
+    base = {"meta": {}, "benchmarks": {"bench": {"error": True, "metrics": {}}}}
+    cur = _report(bench={"cost": 1.0})
+    failures = compare(cur, base)
+    assert failures and "refresh the baseline" in failures[0]
+
+
+def test_untracked_reports_new_benchmarks():
+    base = _report(a={"cost": 1.0})
+    cur = _report(a={"cost": 1.0}, b={"cost": 2.0})
+    assert untracked(cur, base) == ["b"]
+    assert untracked(base, base) == []
+
+
+# ------------------------------ committed baseline ----------------------------
+
+
+def test_committed_baseline_is_valid_and_covers_gated_modules():
+    with open(BASELINE) as fh:
+        baseline = json.load(fh)
+    benches = baseline["benchmarks"]
+    assert len(benches) >= 10
+    # The gated CI subset: drift, scenarios, and all three adaptive arms.
+    for required in (
+        "drift_h2t2_paper",
+        "scenario_stationary",
+        "adaptive_drift_ood_fixed",
+        "adaptive_drift_ood_adaptive",
+        "adaptive_drift_ood_oracle",
+    ):
+        assert required in benches, required
+        metrics = benches[required]["metrics"]
+        assert any(
+            isinstance(v, (int, float)) for v in metrics.values()
+        ), required
+    # A baseline compares clean against itself.
+    assert compare(baseline, baseline) == []
+    # The headline result is pinned in the baseline itself: adaptive beats
+    # fixed under OOD drift.
+    fixed = benches["adaptive_drift_ood_fixed"]["metrics"]["true_cost"]
+    adaptive = benches["adaptive_drift_ood_adaptive"]["metrics"]["true_cost"]
+    assert adaptive < fixed

@@ -26,6 +26,7 @@ from repro.core import (
     local_fallback_pred,
 )
 from repro.serving import (
+    AdaptiveEngine,
     FusedEngine,
     PolicyEngine,
     ReferenceEngine,
@@ -59,12 +60,14 @@ def _assert_states_close(a, b, atol=1e-4):
 # --------------------------------- registry -----------------------------------
 
 
-def test_registry_resolves_all_three_engines():
-    assert set(available_engines()) >= {"reference", "fused", "sharded"}
+def test_registry_resolves_all_engines():
+    assert set(available_engines()) >= {"reference", "fused", "sharded",
+                                        "adaptive"}
     cfg = HIConfig(bits=3)
     assert isinstance(get_engine("reference", cfg), ReferenceEngine)
     assert isinstance(get_engine("fused", cfg), FusedEngine)
     assert isinstance(get_engine("sharded", cfg), ShardedEngine)
+    assert isinstance(get_engine("adaptive", cfg), AdaptiveEngine)
 
 
 def test_registry_unknown_engine_raises():

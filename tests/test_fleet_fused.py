@@ -13,7 +13,6 @@ import pytest
 
 from repro.core import HIConfig, fleet_init, run_fleet, run_fleet_fused
 from repro.kernels.hedge.ops import fleet_hedge_rounds, fleet_hedge_step
-from repro.kernels.hedge.ref import hedge_rounds_ref, hedge_step_ref
 from repro.serving import get_engine
 
 

@@ -7,7 +7,6 @@ import pytest
 
 from repro.configs import ARCHS, ASSIGNED
 from repro.models import forward, init_params, param_count
-from repro.models.transformer import RunFlags
 from repro.training import AdamWConfig, TrainState, build_train_step, init_opt_state
 
 B, S = 2, 32

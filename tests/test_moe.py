@@ -10,7 +10,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHS
-from repro.models.moe import MoEOutput, _group_tokens, moe_forward, moe_init
+from repro.models.moe import _group_tokens, moe_forward, moe_init
 
 
 def _cfg(e=4, k=2, d=32, f=64, cf=8.0):

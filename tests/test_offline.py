@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import HIConfig, offline
-from repro.core.policy import quantize
 
 
 CFG = HIConfig(bits=3, delta_fp=0.7, delta_fn=1.0)

@@ -14,7 +14,6 @@ import pytest
 from repro.core import (
     HIConfig,
     draw_fleet_randomness,
-    h2t2_init,
     quantize,
     region_masks,
     run_stream,

@@ -1,6 +1,5 @@
 """Recurrent blocks: RG-LRU scan vs step recurrence; SSD seeded-state decode
 chain; discounted-hedge policy behaviour."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -10,9 +9,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.configs import ARCHS
 from repro.core import HIConfig, run_stream
-from repro.data import drift_trace
 from repro.models.rglru import lru_scan
 
 

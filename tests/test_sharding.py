@@ -1,7 +1,5 @@
 """Sharding-rule unit tests (pure CPU — no device mesh needed beyond 1)."""
 import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_shape

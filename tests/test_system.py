@@ -17,7 +17,7 @@ from repro.core import (
     offline,
     run_stream,
 )
-from repro.data import DATASETS, dataset_trace
+from repro.data import dataset_trace
 
 
 def test_calibrated_rule_optimal_among_threshold_policies():

@@ -65,7 +65,7 @@ def test_lr_schedule_shape():
 
 
 def test_grad_clip_bounds_update():
-    from repro.training.optimizer import apply_updates, global_norm
+    from repro.training.optimizer import apply_updates
 
     cfg = AdamWConfig(lr=1e-2, grad_clip=0.5, weight_decay=0.0)
     params = {"w": jnp.ones((4, 4), jnp.float32)}
@@ -90,8 +90,6 @@ def test_checkpoint_roundtrip(rng):
 
 
 def test_checkpoint_shape_mismatch_raises(rng):
-    cfg = LDL_CONFIG.reduced(vocab=64, n_layers=2)
-    state = _state(cfg, rng)
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "ckpt.npz")
         checkpoint.save(path, {"a": jnp.zeros((3,))})
