@@ -5,7 +5,16 @@ The hedge-fleet section times the full H2T2 simulation engine under every
 registered `PolicyEngine` ("reference" vmapped scan, "fused" kernel-backed
 scan — including the time-blocked multi-round variant — and "sharded" when
 more than one device is visible) so the perf trajectory tracks the paths
-serving actually runs."""
+serving actually runs. The serving-split section times `engine.decide` /
+`engine.feedback` — the exact two phases `HIServer.serve_slot` runs — per
+engine. All timing metrics use `*_us` keys, which the regression gate never
+compares (`check_regression.py` timing policy).
+
+`run(autotune=True)` (the `benchmarks.run --only kernels --autotune` path)
+additionally sweeps the hedge kernel's (stream_block × time_block) launch
+geometry and persists the per-(G, S, platform) winners to
+`results/hedge_autotune.json` — the cache `repro.kernels.hedge.ops`
+consults for its launch defaults."""
 from __future__ import annotations
 
 from typing import List
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 from benchmarks.common import timed
 from repro.core import HIConfig
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hedge import autotune as hedge_autotune
 from repro.kernels.ssd.ref import ssd_ref
 from repro.serving.policy_engine import get_engine
 
@@ -46,8 +56,50 @@ def _hedge_fleet_rows(quick: bool) -> List[str]:
     return rows
 
 
-def run(quick: bool = False) -> List[str]:
+def _serving_split_rows(quick: bool) -> List[str]:
+    """Per-phase serving timings: decide / feedback on the production path
+    (kernel on TPU, jnp elsewhere) for each engine the HIServer can drive."""
+    rows = []
+    shapes = [(4, 16)] if quick else [(4, 64), (4, 256)]
+    for bits, s in shapes:
+        cfg = HIConfig(bits=bits, eps=0.05, eta=1.0)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        fs = jax.random.uniform(ks[0], (s,))
+        hrs = jax.random.bernoulli(ks[1], 0.5, (s,)).astype(jnp.int32)
+        betas = jnp.full((s,), 0.3)
+        keys = jax.random.split(ks[2], s)
+        for name in ("reference", "fused", "adaptive"):
+            eng = get_engine(name, cfg)
+            state = eng.init(s)
+            dec = eng.decide(state, fs, keys)
+            us_d = timed(lambda keys_: eng.decide(state, fs, keys_), keys)
+            us_f = timed(
+                lambda hrs_: eng.feedback(state, dec, hrs_, betas)[0].log_w,
+                hrs)
+            rows.append(
+                f"hedge_serving_G{cfg.grid}_S{s}_{name},{us_d + us_f:.0f},"
+                f"decide_us={us_d:.1f};feedback_us={us_f:.1f};engine={name}")
+    return rows
+
+
+def _autotune_rows(quick: bool) -> List[str]:
+    """Sweep (SB × TB) and persist the winners (see kernels.hedge.autotune)."""
+    entries = hedge_autotune.sweep(
+        grids=(8,) if quick else (8, 16),
+        streams=(8,) if quick else (16, 64),
+        stream_blocks=(1, 4, 8) if quick else (1, 2, 4, 8, 16),
+        time_blocks=(1, 8) if quick else (1, 2, 4, 8, 16),
+        reps=2 if quick else 3)
+    rows = hedge_autotune.rows(entries)
+    rows.append(f"hedge_autotune_cache,0,path={hedge_autotune.cache_path()}")
+    return rows
+
+
+def run(quick: bool = False, autotune: bool = False) -> List[str]:
     rows = _hedge_fleet_rows(quick)
+    rows += _serving_split_rows(quick)
+    if autotune:
+        rows += _autotune_rows(quick)
     key = jax.random.PRNGKey(0)
     # Attention oracle at serving-ish shapes.
     for (b, s, h, hkv, d) in ([(1, 256, 4, 2, 64)] if quick

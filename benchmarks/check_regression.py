@@ -6,8 +6,10 @@
 Both files are `benchmarks.run --json` documents. Every numeric metric in
 the baseline must be reproduced by the current run within a relative
 tolerance (default ±10%, with a small absolute floor so near-zero metrics
-don't demand infinite precision). Timing (`us_per_call`) is machine-
-dependent and never compared. Benchmarks present in the current run but
+don't demand infinite precision). Timing is machine-dependent and never
+compared — neither `us_per_call` nor derived metrics named like timings
+(`us_*`/`*_us`, `wall_s`, `*speedup*`; see `is_timing_metric`). Benchmarks
+present in the current run but
 missing from the baseline are reported informationally — commit a refreshed
 baseline (`--update`) to start tracking them.
 
@@ -27,8 +29,27 @@ DEFAULT_TOLERANCE = 0.10
 ABS_FLOOR = 0.02
 # Discrete event counts (how often the shift detector fired) flip by whole
 # units on ulp-level numeric drift, so a ±10% float gate on them is pure
-# noise; the cost/rate metrics gate the behavior they produce.
-SKIP_METRICS = frozenset({"restarts"})
+# noise; the cost/rate metrics gate the behavior they produce. The autotune
+# rows' launch-geometry winners (stream_block/time_block) are derived purely
+# from machine-dependent timings and never affect results, so they are
+# advisory too.
+SKIP_METRICS = frozenset({"restarts", "stream_block", "time_block"})
+
+
+def is_timing_metric(key: str) -> bool:
+    """Machine-dependent timing metrics, never gated (like `us_per_call`).
+
+    Benchmarks name them with a `us_`/`_us` microsecond affix, a `wall_s`
+    second counter, or a `speedup` ratio of two timings — so kernel/serving
+    latency rows can live in the tracked baseline while only their
+    deterministic cost metrics gate.
+    """
+    return (
+        key.endswith("_us")
+        or key.startswith("us_")
+        or key == "wall_s"
+        or "speedup" in key
+    )
 
 
 def compare(
@@ -55,7 +76,7 @@ def compare(
             failures.append(f"{name}: current run errored")
             continue
         for key, bval in sorted(brec.get("metrics", {}).items()):
-            if key in SKIP_METRICS:
+            if key in SKIP_METRICS or is_timing_metric(key):
                 continue
             if not isinstance(bval, (int, float)) or isinstance(bval, bool):
                 continue

@@ -121,6 +121,12 @@ def main() -> int:
                     help="comma-separated ScenarioSource subset for "
                          "scenario-aware modules; choose from "
                          + ",".join(available_scenarios()))
+    ap.add_argument("--autotune", action="store_true",
+                    help="with `--only kernels`: sweep the hedge kernel's "
+                         "(stream_block × time_block) launch geometry and "
+                         "persist the per-(G, S, platform) winners to "
+                         "results/hedge_autotune.json (consulted by "
+                         "repro.kernels.hedge.ops defaults)")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(MODULES)
     print("name,us_per_call,derived")
@@ -133,6 +139,8 @@ def main() -> int:
             kwargs["engine"] = args.engine
         if "scenario" in params:
             kwargs["scenario"] = args.scenario
+        if "autotune" in params:
+            kwargs["autotune"] = args.autotune
         try:
             for row in MODULES[name].run(**kwargs):
                 print(row)

@@ -15,6 +15,7 @@ from repro.core.policy import (
     fleet_feedback,
     fleet_init,
     fleet_restart,
+    fleet_rounds_fused,
     fleet_step_fused,
     h2t2_init,
     h2t2_step,
@@ -55,7 +56,7 @@ __all__ = [
     "detect_shifts",
     "draw_fleet_randomness", "draw_psi_zeta", "effective_local_pred",
     "fleet_decide", "fleet_feedback", "fleet_init", "fleet_restart",
-    "fleet_step_fused",
+    "fleet_rounds_fused", "fleet_step_fused",
     "h2t2_init", "h2t2_step", "local_fallback_pred", "pseudo_loss",
     "quantize", "region_masks",
     "run_fleet", "run_fleet_fused", "run_fleet_source", "run_stream",

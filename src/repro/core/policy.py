@@ -141,12 +141,27 @@ def _decide_one(
                          local_pred=local_pred, q=q, p=p, psi=psi)
 
 
+def _resolve_use_kernel(use_kernel: Optional[bool],
+                        interpret: Optional[bool]) -> bool:
+    """The fused-path auto-select: compiled Pallas on TPU, jnp elsewhere —
+    unless `interpret=True`, which forces the kernel in interpret mode (the
+    correctness-test path on CPU)."""
+    if use_kernel is not None:
+        return use_kernel
+    from repro.kernels.hedge.ops import kernel_available
+
+    return kernel_available() or interpret is True
+
+
 def fleet_decide(
     cfg: HIConfig,
     state: H2T2State,        # leaves batched over (S,)
     fs: jnp.ndarray,         # (S,)
     psi: jnp.ndarray,        # (S,) pre-drawn uniforms (see draw_psi_zeta)
     zeta: jnp.ndarray,       # (S,) pre-drawn bernoulli(ε)
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> FleetDecision:
     """Decide offload/local for a whole fleet without touching any label.
 
@@ -154,7 +169,22 @@ def fleet_decide(
     does not update them, so a serving layer can route only the offloaded
     samples to the remote model and apply `fleet_feedback` once (delayed)
     results arrive.
+
+    `use_kernel` routes the region reductions through the Pallas decide
+    kernel (`hedge_decide_pallas`); the default auto-selects like
+    `fleet_step_fused` (kernel on TPU, vmapped jnp elsewhere,
+    `interpret=True` forces the kernel for CPU correctness runs). Both
+    paths make identical decisions.
     """
+    if _resolve_use_kernel(use_kernel, interpret):
+        from repro.kernels.hedge.ops import fleet_hedge_decide
+
+        i_f, off, exp_, lp, q, p = fleet_hedge_decide(
+            cfg, state.log_w, fs, psi, zeta.astype(jnp.int32),
+            interpret=interpret)
+        return FleetDecision(i_f=i_f, offload=off.astype(bool),
+                             explored=exp_.astype(bool), local_pred=lp,
+                             q=q, p=p, psi=psi)
     return jax.vmap(lambda lw, f, ps, zt: _decide_one(cfg, lw, f, ps, zt))(
         state.log_w, fs, psi, zeta)
 
@@ -198,6 +228,8 @@ def fleet_feedback(
     *,
     eta: Optional[jnp.ndarray] = None,    # (S,) or scalar; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) or scalar; None → cfg.decay
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> Tuple[H2T2State, StepOutput]:
     """Second half of `h2t2_step`: charge losses and update expert weights.
 
@@ -214,6 +246,12 @@ def fleet_feedback(
     broadcast the HIConfig scalars, which is bit-identical to the fixed
     paper schedule.
 
+    `use_kernel` routes the (S, G, G) weight update through the Pallas
+    feedback kernel (`hedge_feedback_pallas`, which takes the
+    post-compaction `sent` mask and the per-stream schedule as VMEM
+    vectors); the (S,) loss/prediction accounting always stays in jnp. The
+    default auto-selects like `fleet_step_fused`.
+
     `fleet_decide` + `fleet_feedback` (with full `hrs` and `sent=None`)
     reproduces the vmapped `h2t2_step` exactly — state and outputs.
     """
@@ -229,14 +267,26 @@ def fleet_feedback(
     decay = jnp.broadcast_to(
         jnp.asarray(cfg.decay if decay is None else decay, dtype), sent.shape)
 
-    def one(lw, i_f, off, exp_, hr, beta, eta_s, decay_s):
-        lt = pseudo_loss(cfg, i_f, off, exp_, hr, beta)
-        new_lw = decay_s * lw - eta_s * lt
-        return new_lw - jnp.max(jnp.where(jnp.isfinite(new_lw), new_lw,
-                                          -jnp.inf))
+    if _resolve_use_kernel(use_kernel, interpret):
+        from repro.kernels.hedge.ops import fleet_hedge_feedback
 
-    log_w = jax.vmap(one)(
-        state.log_w, decision.i_f, sent, explored, hrs, betas, eta, decay)
+        new_lw = fleet_hedge_feedback(
+            cfg, state.log_w, decision.i_f, sent.astype(jnp.int32),
+            explored.astype(jnp.int32), hrs.astype(jnp.int32), betas,
+            interpret=interpret, eta=eta, decay=decay)
+        # The kernel's NEG sentinel → -inf, so kernel- and jnp-updated states
+        # are interchangeable representations.
+        log_w = jnp.where(_valid_mask(cfg.grid)[None], new_lw,
+                          -jnp.inf).astype(dtype)
+    else:
+        def one(lw, i_f, off, exp_, hr, beta, eta_s, decay_s):
+            lt = pseudo_loss(cfg, i_f, off, exp_, hr, beta)
+            new_lw = decay_s * lw - eta_s * lt
+            return new_lw - jnp.max(jnp.where(jnp.isfinite(new_lw), new_lw,
+                                              -jnp.inf))
+
+        log_w = jax.vmap(one)(
+            state.log_w, decision.i_f, sent, explored, hrs, betas, eta, decay)
     new_state = H2T2State(
         log_w=log_w,
         t=state.t + 1,
@@ -568,21 +618,26 @@ def fleet_step_fused(
     beta: jnp.ndarray,       # (S,)
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    *,
+    eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
+    decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
 ) -> Tuple[H2T2State, StepOutput]:
     """One fleet round via the fused kernel; mirrors vmapped `h2t2_step`.
 
     `use_kernel=None` auto-selects: compiled Pallas on TPU, jnp oracle
     elsewhere — unless `interpret=True`, which forces the kernel in
-    interpret mode (the correctness-test path on CPU).
+    interpret mode (the correctness-test path on CPU). `eta`/`decay`
+    override the fixed schedule per stream (the kernels take them as (S,)
+    VMEM vectors; the broadcast defaults are bit-identical to the paper
+    schedule).
     """
-    from repro.kernels.hedge.ops import fleet_hedge_step, kernel_available
+    from repro.kernels.hedge.ops import fleet_hedge_step
 
-    if use_kernel is None:
-        use_kernel = kernel_available() or interpret is True
+    use_kernel = _resolve_use_kernel(use_kernel, interpret)
     new_lw, off, exp_, lp, q, p = fleet_hedge_step(
         cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
         h_r.astype(jnp.int32), beta,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, eta=eta, decay=decay)
     offload = off.astype(bool)
     explored = exp_.astype(bool)
     loss, pred = _charge_losses(cfg, offload, lp, h_r, beta)
@@ -602,6 +657,49 @@ def fleet_step_fused(
     )
 
 
+def fleet_rounds_fused(
+    cfg: HIConfig,
+    state: H2T2State,        # leaves batched over (S,)
+    f: jnp.ndarray,          # (S, TB)
+    psi: jnp.ndarray,        # (S, TB) pre-drawn uniforms
+    zeta: jnp.ndarray,       # (S, TB) pre-drawn bernoulli(ε)
+    h_r: jnp.ndarray,        # (S, TB)
+    beta: jnp.ndarray,       # (S, TB)
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    *,
+    eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
+    decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
+) -> Tuple[H2T2State, StepOutput]:
+    """TB rounds for the whole fleet in one multi-round kernel launch.
+
+    Mirrors a TB-long chain of `fleet_step_fused` calls — same state, same
+    (S, TB) StepOutput leaves — with the expert grids resident in VMEM for
+    the whole block on TPU. The (η, decay) schedule is per-stream but held
+    fixed across the block (a constraint the serving layer checks before
+    taking this path for an adaptive schedule).
+    """
+    from repro.kernels.hedge.ops import fleet_hedge_rounds
+
+    use_kernel = _resolve_use_kernel(use_kernel, interpret)
+    new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
+        cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
+        h_r.astype(jnp.int32), beta, use_kernel=use_kernel,
+        interpret=interpret, eta=eta, decay=decay)
+    offload = off.astype(bool)
+    explored = exp_.astype(bool)
+    loss, pred = _charge_losses(cfg, offload, lp, h_r, beta)
+    valid = _valid_mask(cfg.grid)[None]
+    new_state = H2T2State(
+        log_w=jnp.where(valid, new_lw, -jnp.inf).astype(cfg.dtype),
+        t=state.t + f.shape[1],
+        n_offloads=state.n_offloads + jnp.sum(off, axis=1),
+        n_explores=state.n_explores + jnp.sum(exp_, axis=1),
+    )
+    return new_state, StepOutput(offload=offload, pred=pred, local_pred=lp,
+                                 loss=loss, explored=explored, q=q, p=p)
+
+
 def run_fleet_fused(
     cfg: HIConfig,
     fs: jnp.ndarray,       # (S, T)
@@ -614,6 +712,8 @@ def run_fleet_fused(
     interpret: Optional[bool] = None,
     time_block: int = 1,
     stream_keys: Optional[jnp.ndarray] = None,
+    eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
+    decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
 ) -> Tuple[H2T2State, StepOutput]:
     """Kernel-backed `run_fleet`: scan over time of the batched fused step.
 
@@ -621,7 +721,8 @@ def run_fleet_fused(
     batched (S,) / (S, T) — and, for the same `key`, the same decisions.
     `time_block > 1` drives the multi-round kernel (`fleet_hedge_rounds`),
     which keeps the expert grids in VMEM for `time_block` rounds per launch;
-    requires T % time_block == 0.
+    requires T % time_block == 0. `eta`/`decay` thread a per-stream (S,)
+    schedule (held fixed over the horizon) through either kernel path.
     """
     s, t = fs.shape
     if state is None:
@@ -632,7 +733,8 @@ def run_fleet_fused(
         def body(st, xs):
             f, psi, zeta, hr, beta = xs
             return fleet_step_fused(cfg, st, f, psi, zeta, hr, beta,
-                                    use_kernel=use_kernel, interpret=interpret)
+                                    use_kernel=use_kernel, interpret=interpret,
+                                    eta=eta, decay=decay)
 
         final, outs = jax.lax.scan(
             body, state, (fs.T, psis.T, zetas.T, hrs.T, betas.T))
@@ -641,34 +743,17 @@ def run_fleet_fused(
 
     if t % time_block:
         raise ValueError(f"horizon {t} not divisible by time_block {time_block}")
-    from repro.kernels.hedge.ops import fleet_hedge_rounds, kernel_available
-
-    if use_kernel is None:
-        use_kernel = kernel_available() or interpret is True
-    uk = use_kernel
+    uk = _resolve_use_kernel(use_kernel, interpret)
     n_blocks = t // time_block
     # (S, T) → (n_blocks, S, TB) so scan iterates over time blocks.
     blocked = lambda a: jnp.swapaxes(a.reshape(s, n_blocks, time_block), 0, 1)
     xs = tuple(blocked(a) for a in (fs, psis, zetas, hrs, betas))
-    valid = _valid_mask(cfg.grid)[None]
 
     def body(st, xs_):
         f, psi, zeta, hr, beta = xs_                     # (S, TB) each
-        new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
-            cfg, st.log_w, f, psi, zeta.astype(jnp.int32),
-            hr.astype(jnp.int32), beta, use_kernel=uk, interpret=interpret)
-        offload = off.astype(bool)
-        explored = exp_.astype(bool)
-        loss, pred = _charge_losses(cfg, offload, lp, hr, beta)
-        new_state = H2T2State(
-            log_w=jnp.where(valid, new_lw, -jnp.inf).astype(cfg.dtype),
-            t=st.t + time_block,
-            n_offloads=st.n_offloads + jnp.sum(off, axis=1),
-            n_explores=st.n_explores + jnp.sum(exp_, axis=1),
-        )
-        return new_state, StepOutput(offload=offload, pred=pred,
-                                     local_pred=lp, loss=loss,
-                                     explored=explored, q=q, p=p)
+        return fleet_rounds_fused(cfg, st, f, psi, zeta, hr, beta,
+                                  use_kernel=uk, interpret=interpret,
+                                  eta=eta, decay=decay)
 
     final, outs = jax.lax.scan(body, state, xs)
     # (n_blocks, S, TB) → (S, T)

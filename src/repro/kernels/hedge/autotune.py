@@ -1,0 +1,227 @@
+"""(stream_block × time_block) autotuner for the hedge kernel family, with a
+persistent per-(G, S, platform) JSON cache under `results/`.
+
+The multi-round kernel's launch geometry has two knobs: SB (streams per
+program instance — VMEM residency per launch) and TB (sequential rounds per
+launch — HBM round-trips amortized per weight block). The best pair depends
+on the expert-grid side G, the fleet size S, and the backend (CPU interpret
+timings are NOT predictive for TPU — which is exactly why the cache is
+keyed by platform and ships per-platform entries).
+
+Workflow:
+
+    # sweep and persist (CI nightly runs the --quick variant):
+    PYTHONPATH=src python -m benchmarks.run --only kernels --autotune
+
+    # consult (what ops.py does automatically when stream_block=None):
+    from repro.kernels.hedge import autotune
+    autotune.best_blocks(g=16, s=64)     # -> (stream_block, time_block)
+
+Cache location: `results/hedge_autotune.json` at the repo root, overridable
+via $REPRO_HEDGE_AUTOTUNE_CACHE (tests point it at a tmpdir). Lookups are
+mtime-invalidated, so a rewritten cache is re-read on the next lookup —
+but note the ops consult it at jit TRACE time: (cfg, shape) combinations a
+process has already traced keep their launch geometry until new shapes
+arrive or the process restarts.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_STREAM_BLOCK = 8
+DEFAULT_TIME_BLOCK = 8
+_ENV_VAR = "REPRO_HEDGE_AUTOTUNE_CACHE"
+
+
+def cache_path() -> str:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    root = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "..", ".."))
+    return os.path.join(root, "results", "hedge_autotune.json")
+
+
+def _entry_key(g: int, s: int, platform: str) -> str:
+    return f"{platform}/G{g}/S{s}"
+
+
+@functools.lru_cache(maxsize=None)
+def _load(path: str, mtime: float) -> Dict[str, dict]:
+    # mtime participates in the cache key purely to invalidate on rewrite.
+    del mtime
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    entries = doc.get("entries", {})
+    return entries if isinstance(entries, dict) else {}
+
+
+def load_cache(path: Optional[str] = None) -> Dict[str, dict]:
+    """The cache's entries dict ({} when the file is missing/corrupt)."""
+    path = cache_path() if path is None else path
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        return {}
+    return _load(path, mtime)
+
+
+def lookup(g: int, s: int, platform: Optional[str] = None,
+           path: Optional[str] = None) -> Optional[dict]:
+    """The cached best-(SB, TB) record for (G, S, platform), or None."""
+    platform = jax.default_backend() if platform is None else platform
+    return load_cache(path).get(_entry_key(g, s, platform))
+
+
+def best_blocks(g: int, s: int, platform: Optional[str] = None
+                ) -> Tuple[int, int]:
+    """(stream_block, time_block) — cached winner, or the static defaults.
+
+    Tolerant of partial entries (hand-edited or older-format caches): a
+    missing field falls back to its default rather than crashing the
+    serving hot path over an advisory performance cache.
+    """
+    rec = lookup(g, s, platform)
+    if rec is None:
+        return DEFAULT_STREAM_BLOCK, DEFAULT_TIME_BLOCK
+    try:
+        return (int(rec.get("stream_block", DEFAULT_STREAM_BLOCK)),
+                int(rec.get("time_block", DEFAULT_TIME_BLOCK)))
+    except (TypeError, ValueError):
+        return DEFAULT_STREAM_BLOCK, DEFAULT_TIME_BLOCK
+
+
+def best_stream_block(g: int, s: int, platform: Optional[str] = None) -> int:
+    return best_blocks(g, s, platform)[0]
+
+
+def best_time_block(g: int, s: int, platform: Optional[str] = None) -> int:
+    return best_blocks(g, s, platform)[1]
+
+
+def _measure_rounds_us(cfg, s: int, sb: int, tb: int, interpret: bool,
+                       reps: int) -> float:
+    """µs per H2T2 round of one multi-round launch chain at (SB, TB)."""
+    from repro.kernels.hedge.ops import fleet_hedge_rounds
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    logw = jnp.where(
+        jnp.arange(cfg.grid)[:, None] <= jnp.arange(cfg.grid)[None, :],
+        0.0, -1e30)[None].repeat(s, 0).astype(jnp.float32)
+    args = (logw,
+            jax.random.uniform(ks[0], (s, tb)),
+            jax.random.uniform(ks[1], (s, tb)),
+            jax.random.bernoulli(ks[2], cfg.eps, (s, tb)).astype(jnp.int32),
+            jax.random.bernoulli(ks[3], 0.5, (s, tb)).astype(jnp.int32),
+            jax.random.uniform(ks[4], (s, tb), maxval=0.6))
+
+    def fn():
+        return fleet_hedge_rounds(cfg, *args, use_kernel=True,
+                                  interpret=interpret, stream_block=sb)
+
+    jax.block_until_ready(fn())                       # compile outside timing
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps / tb * 1e6
+
+
+def sweep(
+    grids: Sequence[int] = (8, 16),
+    streams: Sequence[int] = (16, 64),
+    stream_blocks: Sequence[int] = (1, 2, 4, 8, 16),
+    time_blocks: Sequence[int] = (1, 2, 4, 8, 16),
+    *,
+    reps: int = 3,
+    interpret: Optional[bool] = None,
+    path: Optional[str] = None,
+    write: bool = True,
+) -> Dict[str, dict]:
+    """Time every (SB ≤ S) × TB pair per (G, S); persist the winners.
+
+    Returns the new entries (keyed like the cache). With `write=True`
+    (default) they are merged into the JSON cache at `path`, preserving
+    other platforms' entries.
+    """
+    import math
+
+    from repro.core.types import HIConfig
+    from repro.kernels.hedge.ops import _interpret_default
+
+    platform = jax.default_backend()
+    interp = _interpret_default() if interpret is None else interpret
+    entries: Dict[str, dict] = {}
+    for g in grids:
+        cfg = HIConfig(bits=int(math.log2(g)))
+        assert cfg.grid == g, f"grid {g} must be a power of two"
+        for s in streams:
+            best = None
+            measured = {}
+            # The kernels cap SB at S anyway, so clamp (and dedupe) rather
+            # than dropping candidates — stream_blocks larger than a small
+            # fleet must not leave the sweep empty.
+            for sb in sorted({min(b, s) for b in stream_blocks}):
+                for tb in time_blocks:
+                    us = _measure_rounds_us(cfg, s, sb, tb, interp, reps)
+                    measured[f"sb{sb}_tb{tb}"] = round(us, 3)
+                    if best is None or us < best[0]:
+                        best = (us, sb, tb)
+            us, sb, tb = best
+            entries[_entry_key(g, s, platform)] = {
+                "stream_block": sb,
+                "time_block": tb,
+                "us_per_round": round(us, 3),
+                "interpret": bool(interp),
+                "measured": measured,
+            }
+    if write:
+        write_cache(entries, path)
+    return entries
+
+
+def write_cache(entries: Dict[str, dict], path: Optional[str] = None) -> str:
+    """Merge `entries` into the JSON cache (other keys preserved)."""
+    path = cache_path() if path is None else path
+    merged = dict(load_cache(path))
+    merged.update(entries)
+    doc = {
+        "format": "hedge-autotune-v1",
+        "note": ("best (stream_block, time_block) per platform/G<grid>/"
+                 "S<streams>; interpret-mode (CPU) timings are not "
+                 "predictive for TPU — entries are consulted per-platform "
+                 "only. Refresh: benchmarks.run --only kernels --autotune"),
+        "entries": {k: merged[k] for k in sorted(merged)},
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def rows(entries: Dict[str, dict]) -> List[str]:
+    """Benchmark-harness CSV rows for a sweep's entries (timings only — the
+    regression gate never compares `*_us` metrics)."""
+    out = []
+    for key in sorted(entries):
+        rec = entries[key]
+        name = "hedge_autotune_" + key.replace("/", "_")
+        out.append(
+            f"{name},{rec['us_per_round']:.1f},"
+            f"stream_block={rec['stream_block']};"
+            f"time_block={rec['time_block']};"
+            f"best_us={rec['us_per_round']:.3f}")
+    return out

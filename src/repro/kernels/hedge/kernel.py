@@ -1,7 +1,9 @@
-"""Fused H2T2 hedge step as a Pallas TPU kernel.
+"""Fused H2T2 hedge kernels (monolithic step, multi-round, and the serving
+decide/feedback split) as Pallas TPU kernels.
 
 One program instance processes a block of SB streams, each owning the full
-(G, G) expert log-weight grid resident in VMEM. Per stream the kernel
+(G, G) expert log-weight grid resident in VMEM. Per stream the monolithic
+step kernel
 
   1. reduces the three region log-masses (masked max + exp-sum),
   2. applies the pre-drawn randomness (ψ, ζ) to form the offload / explore /
@@ -15,8 +17,23 @@ grid is dense (G×G) with an l ≤ u validity mask, so every reduction is a
 regular 8×128-lane VPU op; region membership is integer comparison against
 the quantized confidence index (no gathers).
 
-Grid: (S // SB,). Block shapes: log_w (SB, G, G); per-stream scalars (SB,).
-VMEM footprint ≈ 2 · SB·G²·4 B (e.g. SB=8, b=8 ⇒ 4 MiB).
+The serving split mirrors `core.policy.fleet_decide`/`fleet_feedback`:
+`hedge_decide_kernel` runs phases 1–2 only (region log-mass reduce + ψ/ζ
+decisions, no weight write), `hedge_feedback_kernel` runs phases 3–4 with
+the post-compaction `sent` mask — so an `HIServer` that routes offloads to a
+remote model and applies results one slot later runs both halves of the
+round at kernel speed.
+
+The (η, decay) schedule arrives as per-stream (SB,) VMEM vectors on every
+kernel (the adaptive serving policy anneals them per stream after a shift);
+broadcasting the HIConfig scalars reproduces the fixed paper schedule
+bit-for-bit — v·x with v = broadcast(c) is elementwise identical to c·x.
+
+Grid: (S_pad // SB,). Block shapes: log_w (SB, G, G); per-stream vectors
+(SB,). A fleet whose stream count is not a multiple of `stream_block`
+(primes included) is zero-padded up to one and the outputs sliced back —
+never degraded to an S-wide grid of SB=1 launches. VMEM footprint ≈
+2 · SB·G²·4 B (e.g. SB=8, b=8 ⇒ 4 MiB).
 """
 from __future__ import annotations
 
@@ -37,10 +54,11 @@ def _region_logsum(logw, mask):
     return m[..., 0, 0] + jnp.log(jnp.maximum(s, 1e-38))
 
 
-def _round_body(logw, i_f, psi, zeta, h_r, beta, l_idx, u_idx, valid,
-                *, eta, eps, delta_fp, delta_fn, decay):
-    """One H2T2 round over a (SB, G, G) block; shared by the single-round and
-    multi-round kernels so the two stay step-for-step identical."""
+def _decide_body(logw, i_f, psi, zeta, l_idx, u_idx, valid):
+    """Label-free half of the round over a (SB, G, G) block: region masses +
+    the (offload, explored, local_pred) decisions. Shared by the decide-only
+    kernel and `_round_body` so the split stays step-for-step identical to
+    the monolithic kernels."""
     i_b = i_f[:, None, None]
     r2 = valid & (l_idx <= i_b) & (i_b < u_idx)          # ambiguous → offload
     r3 = valid & (u_idx <= i_b)                          # predict 1
@@ -56,39 +74,68 @@ def _round_body(logw, i_f, psi, zeta, h_r, beta, l_idx, u_idx, valid,
     offload = in_r2 | (zeta != 0)
     explored = (zeta != 0) & ~in_r2
     local_pred = (psi <= q + p).astype(jnp.int32)
+    return r2, r3, offload, explored, local_pred, q, p
 
-    # Eq. 10 pseudo-loss per expert.
+
+def _feedback_body(logw, i_f, sent, explored, h_r, beta, eta, decay,
+                   l_idx, u_idx, valid, *, eps, delta_fp, delta_fn):
+    """Eq.-10 pseudo-loss update over a (SB, G, G) block.
+
+    `sent` is the offload mask that actually reached the remote model (the
+    post-compaction mask in serving; the raw offload decision in
+    simulation), `explored` the already-`sent`-masked exploration flag.
+    η/decay are (SB,) per-stream vectors.
+    """
+    i_b = i_f[:, None, None]
+    r2 = valid & (l_idx <= i_b) & (i_b < u_idx)
+    r3 = valid & (u_idx <= i_b)
     pred1 = r3
     phi = jnp.where(pred1,
                     jnp.where(h_r[:, None, None] == 0, delta_fp, 0.0),
                     jnp.where(h_r[:, None, None] == 1, delta_fn, 0.0))
-    lt = jnp.where(offload[:, None, None] & r2, beta[:, None, None], 0.0)
+    lt = jnp.where(sent[:, None, None] & r2, beta[:, None, None], 0.0)
     lt = lt + jnp.where(explored[:, None, None] & valid & ~r2, phi / eps, 0.0)
     # decay < 1 = discounted Hedge (see HIConfig.decay); decay = 1 is Alg. 1.
-    new_logw = decay * logw - eta * lt
-    new_max = jnp.max(jnp.where(valid, new_logw, NEG), axis=(-2, -1), keepdims=True)
-    new_logw = jnp.where(valid, new_logw - new_max, NEG)
+    new_logw = decay[:, None, None] * logw - eta[:, None, None] * lt
+    new_max = jnp.max(jnp.where(valid, new_logw, NEG), axis=(-2, -1),
+                      keepdims=True)
+    return jnp.where(valid, new_logw - new_max, NEG)
+
+
+def _round_body(logw, i_f, psi, zeta, h_r, beta, eta, decay,
+                l_idx, u_idx, valid, *, eps, delta_fp, delta_fn):
+    """One full H2T2 round over a (SB, G, G) block; composition of the decide
+    and feedback bodies (with `sent` = the raw offload decision), shared by
+    the single-round and multi-round kernels so all four stay
+    step-for-step identical."""
+    _, _, offload, explored, local_pred, q, p = _decide_body(
+        logw, i_f, psi, zeta, l_idx, u_idx, valid)
+    new_logw = _feedback_body(
+        logw, i_f, offload, explored, h_r, beta, eta, decay,
+        l_idx, u_idx, valid, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
     return new_logw, offload, explored, local_pred, q, p
+
+
+def _grid_iota(g: int):
+    l_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 1)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 2)
+    return l_idx, u_idx, l_idx <= u_idx
 
 
 def hedge_step_kernel(
     # inputs
-    log_w_ref, i_f_ref, psi_ref, zeta_ref, h_r_ref, beta_ref,
+    log_w_ref, i_f_ref, psi_ref, zeta_ref, h_r_ref, beta_ref, eta_ref,
+    decay_ref,
     # outputs
     new_log_w_ref, offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
-    *, grid_side: int, eta: float, eps: float, delta_fp: float, delta_fn: float,
-    decay: float = 1.0,
+    *, grid_side: int, eps: float, delta_fp: float, delta_fn: float,
 ):
-    g = grid_side
     logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
-
-    l_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 1)
-    u_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 2)
-    valid = l_idx <= u_idx
+    l_idx, u_idx, valid = _grid_iota(grid_side)
     new_logw, offload, explored, local_pred, q, p = _round_body(
         logw, i_f_ref[...], psi_ref[...], zeta_ref[...], h_r_ref[...],
-        beta_ref[...], l_idx, u_idx, valid,
-        eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+        beta_ref[...], eta_ref[...], decay_ref[...], l_idx, u_idx, valid,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
 
     new_log_w_ref[...] = new_logw.astype(new_log_w_ref.dtype)
     offload_ref[...] = offload.astype(jnp.int32)
@@ -100,30 +147,34 @@ def hedge_step_kernel(
 
 def hedge_rounds_kernel(
     # inputs
-    log_w_ref, i_f_ref, psi_ref, zeta_ref, h_r_ref, beta_ref,
+    log_w_ref, i_f_ref, psi_ref, zeta_ref, h_r_ref, beta_ref, eta_ref,
+    decay_ref,
     # outputs
     new_log_w_ref, offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
-    *, grid_side: int, n_rounds: int, eta: float, eps: float,
-    delta_fp: float, delta_fn: float, decay: float = 1.0,
+    *, grid_side: int, n_rounds: int, eps: float,
+    delta_fp: float, delta_fn: float,
 ):
     """Time-blocked variant: TB sequential H2T2 rounds per kernel invocation.
 
     The (SB, G, G) log-weight block stays resident in VMEM across all TB
     rounds — one HBM round-trip amortized over the whole time block, instead
     of one per round. Per-round inputs/outputs are (SB, TB) and indexed with
-    a static (unrolled) round index, so there are no dynamic stores.
+    a static (unrolled) round index, so there are no dynamic stores. The
+    per-stream (η, decay) vectors apply to every round in the block, so the
+    fast path is valid whenever the schedule is constant across the block
+    (fixed schedules always; adaptive schedules only between detector
+    updates).
     """
-    g = grid_side
     logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
-    l_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 1)
-    u_idx = jax.lax.broadcasted_iota(jnp.int32, (1, g, g), 2)
-    valid = l_idx <= u_idx
+    l_idx, u_idx, valid = _grid_iota(grid_side)
+    eta = eta_ref[...]
+    decay = decay_ref[...]
 
     for t in range(n_rounds):                            # static unroll
         logw, offload, explored, local_pred, q, p = _round_body(
             logw, i_f_ref[:, t], psi_ref[:, t], zeta_ref[:, t], h_r_ref[:, t],
-            beta_ref[:, t], l_idx, u_idx, valid,
-            eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+            beta_ref[:, t], eta, decay, l_idx, u_idx, valid,
+            eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
         offload_ref[:, t] = offload.astype(jnp.int32)
         explored_ref[:, t] = explored.astype(jnp.int32)
         local_pred_ref[:, t] = local_pred
@@ -133,11 +184,81 @@ def hedge_rounds_kernel(
     new_log_w_ref[...] = logw.astype(new_log_w_ref.dtype)
 
 
-def _stream_block(s: int, stream_block: int) -> int:
-    sb = min(stream_block, s)
-    while s % sb:
-        sb -= 1
-    return sb
+def hedge_decide_kernel(
+    # inputs
+    log_w_ref, i_f_ref, psi_ref, zeta_ref,
+    # outputs
+    offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
+    *, grid_side: int,
+):
+    """Serving phase 1: region log-mass reduce + ψ/ζ decisions. Reads the
+    expert grid, never writes it — the weight update waits for the (delayed)
+    remote labels in `hedge_feedback_kernel`."""
+    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
+    l_idx, u_idx, valid = _grid_iota(grid_side)
+    _, _, offload, explored, local_pred, q, p = _decide_body(
+        logw, i_f_ref[...], psi_ref[...], zeta_ref[...], l_idx, u_idx, valid)
+    offload_ref[...] = offload.astype(jnp.int32)
+    explored_ref[...] = explored.astype(jnp.int32)
+    local_pred_ref[...] = local_pred
+    q_ref[...] = q.astype(jnp.float32)
+    p_ref[...] = p.astype(jnp.float32)
+
+
+def hedge_feedback_kernel(
+    # inputs
+    log_w_ref, i_f_ref, sent_ref, explored_ref, h_r_ref, beta_ref, eta_ref,
+    decay_ref,
+    # outputs
+    new_log_w_ref,
+    *, grid_side: int, eps: float, delta_fp: float, delta_fn: float,
+):
+    """Serving phase 2: the Eq.-10 weight update under the post-compaction
+    `sent` mask and the per-stream (η, decay) schedule. The cheap (S,) loss
+    and prediction accounting stays in jnp (`core.policy.fleet_feedback`) —
+    only the (S, G, G) weight traffic runs here."""
+    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
+    l_idx, u_idx, valid = _grid_iota(grid_side)
+    new_logw = _feedback_body(
+        logw, i_f_ref[...], sent_ref[...] != 0, explored_ref[...] != 0,
+        h_r_ref[...], beta_ref[...], eta_ref[...], decay_ref[...],
+        l_idx, u_idx, valid, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+    new_log_w_ref[...] = new_logw.astype(new_log_w_ref.dtype)
+
+
+def _block_streams(s: int, stream_block: int):
+    """Resolve the (SB, S_pad, grid) launch geometry for an S-stream fleet.
+
+    SB never exceeds S; when S is not a multiple of SB (odd or prime fleet
+    sizes included) the stream axis is zero-padded up to one — outputs for
+    the padding rows are sliced off by the wrappers. This replaces the old
+    largest-divisor fallback, which degraded a prime fleet to SB=1 and an
+    S-wide grid of tiny launches.
+    """
+    sb = max(1, min(int(stream_block), s))
+    pad = (-s) % sb
+    return sb, s + pad, pad
+
+
+def _pad_streams(pad: int, *arrays):
+    """Zero-pad the leading stream axis of every array by `pad` rows.
+
+    Padding rows carry inert inputs (all-zero — but structurally valid —
+    expert grids, i_f = 0, ψ = 0, …); nothing in a hedge kernel couples
+    streams, so they can never affect a real stream's outputs, which is why
+    slicing (rather than masking arithmetic) is enough on the way out.
+    """
+    if pad == 0:
+        return arrays
+    return tuple(
+        jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+        for a in arrays)
+
+
+def _sched_vec(val, s: int) -> jnp.ndarray:
+    """Broadcast a scalar-or-(S,) schedule value to an (S,) float32 vector."""
+    return jnp.broadcast_to(jnp.asarray(val, jnp.float32), (s,))
 
 
 def hedge_step_pallas(
@@ -147,33 +268,36 @@ def hedge_step_pallas(
     zeta: jnp.ndarray,       # (S,) int32
     h_r: jnp.ndarray,        # (S,) int32
     beta: jnp.ndarray,       # (S,) float32
+    eta,                     # scalar or (S,) float32 — per-stream η
+    decay,                   # scalar or (S,) float32 — per-stream decay
     *,
-    eta: float, eps: float, delta_fp: float, delta_fn: float,
-    decay: float = 1.0,
+    eps: float, delta_fp: float, delta_fn: float,
     stream_block: int = 8,
     interpret: bool = True,
 ):
     s, g, _ = log_w.shape
-    sb = _stream_block(s, stream_block)
-    grid = (s // sb,)
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
     kern = functools.partial(
-        hedge_step_kernel, grid_side=g, eta=eta, eps=eps,
-        delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+        hedge_step_kernel, grid_side=g, eps=eps,
+        delta_fp=delta_fp, delta_fn=delta_fn)
     vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
     out_shapes = (
-        jax.ShapeDtypeStruct((s, g, g), jnp.float32),
-        jax.ShapeDtypeStruct((s,), jnp.int32),
-        jax.ShapeDtypeStruct((s,), jnp.int32),
-        jax.ShapeDtypeStruct((s,), jnp.int32),
-        jax.ShapeDtypeStruct((s,), jnp.float32),
-        jax.ShapeDtypeStruct((s,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad, g, g), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
     )
-    return pl.pallas_call(
+    args = _pad_streams(pad, log_w, i_f, psi, zeta, h_r, beta,
+                        _sched_vec(eta, s), _sched_vec(decay, s))
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
-            vec(), vec(), vec(), vec(), vec(),
+            vec(), vec(), vec(), vec(), vec(), vec(), vec(),
         ],
         out_specs=(
             pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
@@ -181,7 +305,8 @@ def hedge_step_pallas(
         ),
         out_shape=out_shapes,
         interpret=interpret,
-    )(log_w, i_f, psi, zeta, h_r, beta)
+    )(*args)
+    return tuple(o[:s] for o in out)
 
 
 def hedge_rounds_pallas(
@@ -191,9 +316,10 @@ def hedge_rounds_pallas(
     zeta: jnp.ndarray,       # (S, TB) int32
     h_r: jnp.ndarray,        # (S, TB) int32
     beta: jnp.ndarray,       # (S, TB) float32
+    eta,                     # scalar or (S,) float32 — per-stream η
+    decay,                   # scalar or (S,) float32 — per-stream decay
     *,
-    eta: float, eps: float, delta_fp: float, delta_fn: float,
-    decay: float = 1.0,
+    eps: float, delta_fp: float, delta_fn: float,
     stream_block: int = 8,
     interpret: bool = True,
 ):
@@ -204,26 +330,29 @@ def hedge_rounds_pallas(
     """
     s, g, _ = log_w.shape
     tb = i_f.shape[1]
-    sb = _stream_block(s, stream_block)
-    grid = (s // sb,)
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
     kern = functools.partial(
-        hedge_rounds_kernel, grid_side=g, n_rounds=tb, eta=eta, eps=eps,
-        delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+        hedge_rounds_kernel, grid_side=g, n_rounds=tb, eps=eps,
+        delta_fp=delta_fp, delta_fn=delta_fn)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
     mat = lambda: pl.BlockSpec((sb, tb), lambda i: (i, 0))
     out_shapes = (
-        jax.ShapeDtypeStruct((s, g, g), jnp.float32),
-        jax.ShapeDtypeStruct((s, tb), jnp.int32),
-        jax.ShapeDtypeStruct((s, tb), jnp.int32),
-        jax.ShapeDtypeStruct((s, tb), jnp.int32),
-        jax.ShapeDtypeStruct((s, tb), jnp.float32),
-        jax.ShapeDtypeStruct((s, tb), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad, g, g), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.float32),
     )
-    return pl.pallas_call(
+    args = _pad_streams(pad, log_w, i_f, psi, zeta, h_r, beta,
+                        _sched_vec(eta, s), _sched_vec(decay, s))
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
-            mat(), mat(), mat(), mat(), mat(),
+            mat(), mat(), mat(), mat(), mat(), vec(), vec(),
         ],
         out_specs=(
             pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
@@ -231,4 +360,81 @@ def hedge_rounds_pallas(
         ),
         out_shape=out_shapes,
         interpret=interpret,
-    )(log_w, i_f, psi, zeta, h_r, beta)
+    )(*args)
+    return tuple(o[:s] for o in out)
+
+
+def hedge_decide_pallas(
+    log_w: jnp.ndarray,      # (S, G, G) float32
+    i_f: jnp.ndarray,        # (S,) int32
+    psi: jnp.ndarray,        # (S,) float32
+    zeta: jnp.ndarray,       # (S,) int32
+    *,
+    stream_block: int = 8,
+    interpret: bool = True,
+):
+    """Serving phase 1 for the fleet: (offload, explored, local_pred, q, p),
+    no weight write."""
+    s, g, _ = log_w.shape
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
+    kern = functools.partial(hedge_decide_kernel, grid_side=g)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+    )
+    args = _pad_streams(pad, log_w, i_f, psi, zeta)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            vec(), vec(), vec(),
+        ],
+        out_specs=(vec(), vec(), vec(), vec(), vec()),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:s] for o in out)
+
+
+def hedge_feedback_pallas(
+    log_w: jnp.ndarray,      # (S, G, G) float32
+    i_f: jnp.ndarray,        # (S,) int32 — decision-time quantized confidence
+    sent: jnp.ndarray,       # (S,) int32 — offloads that reached the RDL
+    explored: jnp.ndarray,   # (S,) int32 — exploration flag, already ∧ sent
+    h_r: jnp.ndarray,        # (S,) int32
+    beta: jnp.ndarray,       # (S,) float32
+    eta,                     # scalar or (S,) float32 — per-stream η
+    decay,                   # scalar or (S,) float32 — per-stream decay
+    *,
+    eps: float, delta_fp: float, delta_fn: float,
+    stream_block: int = 8,
+    interpret: bool = True,
+):
+    """Serving phase 2 for the fleet: the Eq.-10 weight update only."""
+    s, g, _ = log_w.shape
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
+    kern = functools.partial(
+        hedge_feedback_kernel, grid_side=g, eps=eps,
+        delta_fp=delta_fp, delta_fn=delta_fn)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    args = _pad_streams(pad, log_w, i_f, sent, explored, h_r, beta,
+                        _sched_vec(eta, s), _sched_vec(decay, s))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            vec(), vec(), vec(), vec(), vec(), vec(), vec(),
+        ],
+        out_specs=pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, g, g), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out[:s]

@@ -1,4 +1,12 @@
-"""jit'd public wrappers for the fused hedge kernels (single- and multi-round)."""
+"""jit'd public wrappers for the fused hedge kernels: the monolithic
+single-/multi-round steps and the serving decide/feedback split.
+
+Every op takes the (η, decay) schedule as optional per-stream (S,) arrays
+(None → the HIConfig scalars, broadcast — bit-identical to the fixed paper
+schedule) and a `stream_block` override (None → consult the persistent
+autotune cache, `kernels.hedge.autotune`, falling back to its static
+default).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,8 +15,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import HIConfig
-from repro.kernels.hedge.kernel import hedge_rounds_pallas, hedge_step_pallas
-from repro.kernels.hedge.ref import hedge_rounds_ref, hedge_step_ref
+from repro.kernels.hedge import autotune
+from repro.kernels.hedge.kernel import (
+    hedge_decide_pallas,
+    hedge_feedback_pallas,
+    hedge_rounds_pallas,
+    hedge_step_pallas,
+)
+from repro.kernels.hedge.ref import (
+    hedge_decide_ref,
+    hedge_feedback_ref,
+    hedge_rounds_ref,
+    hedge_step_ref,
+)
 
 
 def _interpret_default() -> bool:
@@ -20,12 +39,31 @@ def kernel_available() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _cfg_kw(cfg: HIConfig) -> dict:
-    return dict(eta=cfg.eta, eps=cfg.eps, delta_fp=cfg.delta_fp,
-                delta_fn=cfg.delta_fn, decay=cfg.decay)
+def _loss_kw(cfg: HIConfig) -> dict:
+    return dict(eps=cfg.eps, delta_fp=cfg.delta_fp, delta_fn=cfg.delta_fn)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret"))
+def _sched(cfg: HIConfig, eta, decay):
+    """Resolve the schedule: HIConfig scalars where not overridden."""
+    return (cfg.eta if eta is None else eta,
+            cfg.decay if decay is None else decay)
+
+
+def _stream_block(stream_block, g: int, s: int) -> int:
+    """Static launch geometry: explicit override, else the autotune cache.
+
+    Called at trace time (shapes are concrete), so the cache lookup is pure
+    Python and free at execution time — which also means a (cfg, shape)
+    combo this process already traced keeps its geometry even if the cache
+    file is rewritten (jit never re-traces identical static args).
+    """
+    if stream_block is not None:
+        return int(stream_block)
+    return autotune.best_stream_block(g, s)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
+                                             "stream_block"))
 def fleet_hedge_step(
     cfg: HIConfig,
     log_w: jnp.ndarray,      # (S, G, G)
@@ -36,24 +74,30 @@ def fleet_hedge_step(
     beta: jnp.ndarray,       # (S,) offload costs
     use_kernel: bool = True,
     interpret: bool = None,
+    eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
+    decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
+    stream_block: int = None,    # None → autotune cache default
 ):
     """One H2T2 round for a whole fleet of streams."""
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
-    kw = _cfg_kw(cfg)
+    eta, decay = _sched(cfg, eta, decay)
     if use_kernel:
         interp = _interpret_default() if interpret is None else interpret
         return hedge_step_pallas(
             log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
             zeta.astype(jnp.int32), h_r.astype(jnp.int32),
-            beta.astype(jnp.float32), interpret=interp, **kw)
+            beta.astype(jnp.float32), eta, decay, interpret=interp,
+            stream_block=_stream_block(stream_block, g, log_w.shape[0]),
+            **_loss_kw(cfg))
     return hedge_step_ref(
         log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
         zeta.astype(jnp.int32), h_r.astype(jnp.int32),
-        beta.astype(jnp.float32), **kw)
+        beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
+                                             "stream_block"))
 def fleet_hedge_rounds(
     cfg: HIConfig,
     log_w: jnp.ndarray,      # (S, G, G)
@@ -64,22 +108,102 @@ def fleet_hedge_rounds(
     beta: jnp.ndarray,       # (S, TB) offload costs
     use_kernel: bool = True,
     interpret: bool = None,
+    eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
+    decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
+    stream_block: int = None,    # None → autotune cache default
 ):
     """TB sequential H2T2 rounds for a whole fleet in one launch.
 
-    Step-for-step identical to TB chained `fleet_hedge_step` calls; on TPU the
-    expert grids stay in VMEM for the whole time block.
+    Step-for-step identical to TB chained `fleet_hedge_step` calls (with the
+    schedule held fixed across the block); on TPU the expert grids stay in
+    VMEM for the whole time block.
     """
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
-    kw = _cfg_kw(cfg)
+    eta, decay = _sched(cfg, eta, decay)
     if use_kernel:
         interp = _interpret_default() if interpret is None else interpret
         return hedge_rounds_pallas(
             log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
             zeta.astype(jnp.int32), h_r.astype(jnp.int32),
-            beta.astype(jnp.float32), interpret=interp, **kw)
+            beta.astype(jnp.float32), eta, decay, interpret=interp,
+            stream_block=_stream_block(stream_block, g, log_w.shape[0]),
+            **_loss_kw(cfg))
     return hedge_rounds_ref(
         log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
         zeta.astype(jnp.int32), h_r.astype(jnp.int32),
-        beta.astype(jnp.float32), **kw)
+        beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
+                                             "stream_block"))
+def fleet_hedge_decide(
+    cfg: HIConfig,
+    log_w: jnp.ndarray,      # (S, G, G)
+    f: jnp.ndarray,          # (S,) confidences in [0, 1]
+    psi: jnp.ndarray,        # (S,) uniforms
+    zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws
+    use_kernel: bool = True,
+    interpret: bool = None,
+    stream_block: int = None,    # None → autotune cache default
+):
+    """Serving phase 1 for the fleet: quantize + region masses + decisions.
+
+    Returns (i_f, offload, explored, local_pred, q, p) — everything
+    `core.policy.FleetDecision` needs except the caller-held ψ. No weight
+    write: feedback waits for the (delayed, possibly capacity-dropped)
+    remote labels in `fleet_hedge_feedback`.
+    """
+    g = cfg.grid
+    i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
+    if use_kernel:
+        interp = _interpret_default() if interpret is None else interpret
+        out = hedge_decide_pallas(
+            log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+            zeta.astype(jnp.int32), interpret=interp,
+            stream_block=_stream_block(stream_block, g, log_w.shape[0]))
+    else:
+        out = hedge_decide_ref(
+            log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+            zeta.astype(jnp.int32))
+    return (i_f,) + tuple(out)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
+                                             "stream_block"))
+def fleet_hedge_feedback(
+    cfg: HIConfig,
+    log_w: jnp.ndarray,      # (S, G, G)
+    i_f: jnp.ndarray,        # (S,) decision-time quantized confidence
+    sent: jnp.ndarray,       # (S,) offloads that reached the RDL
+    explored: jnp.ndarray,   # (S,) exploration flag, already ∧ sent
+    h_r: jnp.ndarray,        # (S,) remote labels
+    beta: jnp.ndarray,       # (S,) decision-time offload costs
+    use_kernel: bool = True,
+    interpret: bool = None,
+    eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
+    decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
+    stream_block: int = None,    # None → autotune cache default
+):
+    """Serving phase 2 for the fleet: the Eq.-10 weight update only.
+
+    The cheap (S,) loss/prediction accounting lives in
+    `core.policy.fleet_feedback`, which routes its (S, G, G) weight traffic
+    here when `use_kernel` resolves true.
+    """
+    g = cfg.grid
+    eta, decay = _sched(cfg, eta, decay)
+    if use_kernel:
+        interp = _interpret_default() if interpret is None else interpret
+        return hedge_feedback_pallas(
+            log_w.astype(jnp.float32), i_f.astype(jnp.int32),
+            sent.astype(jnp.int32), explored.astype(jnp.int32),
+            h_r.astype(jnp.int32), beta.astype(jnp.float32), eta, decay,
+            interpret=interp,
+            stream_block=_stream_block(stream_block, g, log_w.shape[0]),
+            **_loss_kw(cfg))
+    return hedge_feedback_ref(
+        log_w.astype(jnp.float32), i_f.astype(jnp.int32),
+        sent.astype(jnp.int32), explored.astype(jnp.int32),
+        h_r.astype(jnp.int32), beta.astype(jnp.float32), eta, decay,
+        **_loss_kw(cfg))

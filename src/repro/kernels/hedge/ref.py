@@ -1,5 +1,11 @@
-"""Pure-jnp oracle for the fused hedge step (mirrors repro.core.policy with
-externally supplied randomness)."""
+"""Pure-jnp oracles for the fused hedge kernels (mirrors repro.core.policy
+with externally supplied randomness).
+
+Every oracle accepts the (η, decay) schedule as a scalar OR a per-stream
+(S,) vector, exactly like the Pallas kernels — broadcasting a scalar is
+elementwise identical to the static-scalar math, so the fixed paper
+schedule stays bit-for-bit reproducible through either form.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,45 +14,81 @@ import jax.numpy as jnp
 NEG = -1e30
 
 
-def hedge_step_ref(
-    log_w: jnp.ndarray, i_f: jnp.ndarray, psi: jnp.ndarray, zeta: jnp.ndarray,
-    h_r: jnp.ndarray, beta: jnp.ndarray,
-    *, eta: float, eps: float, delta_fp: float, delta_fn: float,
-    decay: float = 1.0,
-):
-    s, g, _ = log_w.shape
+def _sched_col(val, s: int) -> jnp.ndarray:
+    """Schedule value as an (S, 1, 1) float32 column for (S, G, G) updates."""
+    return jnp.broadcast_to(
+        jnp.asarray(val, jnp.float32), (s,))[:, None, None]
+
+
+def _regions(i_f: jnp.ndarray, g: int):
     l_idx = jnp.arange(g)[None, :, None]
     u_idx = jnp.arange(g)[None, None, :]
     valid = l_idx <= u_idx
     i_b = i_f[:, None, None]
     r2 = valid & (l_idx <= i_b) & (i_b < u_idx)
     r3 = valid & (u_idx <= i_b)
+    return valid, r2, r3
 
-    def logsum(mask):
-        masked = jnp.where(mask, log_w, NEG)
-        m = jnp.maximum(jnp.max(masked, axis=(-2, -1), keepdims=True), NEG)
-        ssum = jnp.sum(jnp.where(mask, jnp.exp(masked - m), 0.0), axis=(-2, -1))
-        return m[..., 0, 0] + jnp.log(jnp.maximum(ssum, 1e-38))
 
-    log_tot = logsum(valid)
-    q = jnp.exp(logsum(r2) - log_tot)
-    p = jnp.exp(logsum(r3) - log_tot)
+def _logsum(log_w, mask):
+    masked = jnp.where(mask, log_w, NEG)
+    m = jnp.maximum(jnp.max(masked, axis=(-2, -1), keepdims=True), NEG)
+    ssum = jnp.sum(jnp.where(mask, jnp.exp(masked - m), 0.0), axis=(-2, -1))
+    return m[..., 0, 0] + jnp.log(jnp.maximum(ssum, 1e-38))
+
+
+def hedge_decide_ref(
+    log_w: jnp.ndarray, i_f: jnp.ndarray, psi: jnp.ndarray, zeta: jnp.ndarray,
+):
+    """Oracle for the decide-only kernel: region masses + decisions, no
+    weight write. Returns (offload, explored, local_pred, q, p)."""
+    g = log_w.shape[1]
+    valid, r2, r3 = _regions(i_f, g)
+    log_tot = _logsum(log_w, valid)
+    q = jnp.exp(_logsum(log_w, r2) - log_tot)
+    p = jnp.exp(_logsum(log_w, r3) - log_tot)
     in_r2 = psi <= q
     offload = in_r2 | (zeta != 0)
     explored = (zeta != 0) & ~in_r2
     local_pred = (psi <= q + p).astype(jnp.int32)
+    return (offload.astype(jnp.int32), explored.astype(jnp.int32), local_pred,
+            q.astype(jnp.float32), p.astype(jnp.float32))
 
+
+def hedge_feedback_ref(
+    log_w: jnp.ndarray, i_f: jnp.ndarray, sent: jnp.ndarray,
+    explored: jnp.ndarray, h_r: jnp.ndarray, beta: jnp.ndarray,
+    eta, decay,
+    *, eps: float, delta_fp: float, delta_fn: float,
+):
+    """Oracle for the feedback-only kernel: the Eq.-10 weight update under a
+    `sent` mask and per-stream (η, decay). Returns the renormalized
+    log-weights (NEG sentinel on invalid cells)."""
+    s, g, _ = log_w.shape
+    valid, r2, r3 = _regions(i_f, g)
+    sent_b = (sent != 0)[:, None, None]
+    explored_b = (explored != 0)[:, None, None]
     phi = jnp.where(r3,
                     jnp.where(h_r[:, None, None] == 0, delta_fp, 0.0),
                     jnp.where(h_r[:, None, None] == 1, delta_fn, 0.0))
-    lt = jnp.where(offload[:, None, None] & r2, beta[:, None, None], 0.0)
-    lt = lt + jnp.where(explored[:, None, None] & valid & ~r2, phi / eps, 0.0)
-    new = decay * log_w - eta * lt
+    lt = jnp.where(sent_b & r2, beta[:, None, None], 0.0)
+    lt = lt + jnp.where(explored_b & valid & ~r2, phi / eps, 0.0)
+    new = _sched_col(decay, s) * log_w - _sched_col(eta, s) * lt
     new_max = jnp.max(jnp.where(valid, new, NEG), axis=(-2, -1), keepdims=True)
-    new = jnp.where(valid, new - new_max, NEG)
-    return (new.astype(jnp.float32), offload.astype(jnp.int32),
-            explored.astype(jnp.int32), local_pred,
-            q.astype(jnp.float32), p.astype(jnp.float32))
+    return jnp.where(valid, new - new_max, NEG).astype(jnp.float32)
+
+
+def hedge_step_ref(
+    log_w: jnp.ndarray, i_f: jnp.ndarray, psi: jnp.ndarray, zeta: jnp.ndarray,
+    h_r: jnp.ndarray, beta: jnp.ndarray,
+    *, eta, eps: float, delta_fp: float, delta_fn: float,
+    decay=1.0,
+):
+    off, exp_, local_pred, q, p = hedge_decide_ref(log_w, i_f, psi, zeta)
+    new = hedge_feedback_ref(
+        log_w, i_f, off, exp_, h_r, beta, eta, decay,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+    return new, off, exp_, local_pred, q, p
 
 
 def hedge_rounds_ref(
@@ -56,10 +98,11 @@ def hedge_rounds_ref(
     zeta: jnp.ndarray,       # (S, TB)
     h_r: jnp.ndarray,        # (S, TB)
     beta: jnp.ndarray,       # (S, TB)
-    *, eta: float, eps: float, delta_fp: float, delta_fn: float,
-    decay: float = 1.0,
+    *, eta, eps: float, delta_fp: float, delta_fn: float,
+    decay=1.0,
 ):
-    """Oracle for the time-blocked kernel: scan `hedge_step_ref` over TB rounds."""
+    """Oracle for the time-blocked kernel: scan `hedge_step_ref` over TB
+    rounds with the (per-stream) schedule held fixed across the block."""
 
     def body(lw, xs):
         new, off, exp_, lp, q, p = hedge_step_ref(

@@ -28,8 +28,14 @@ sustained overload cannot starve a fixed set of streams.
 
 Engines (`HIServerConfig.engine`): "fused" (default, kernel-backed),
 "reference" (paper-shaped vmapped `h2t2_step`), "sharded" (fleet sharded
-over a device mesh). All consume identical per-stream keys, so the serving
-decisions do not depend on the engine choice.
+over a device mesh), "adaptive" (detect → adapt → restart). All consume
+identical per-stream keys, so the serving decisions do not depend on the
+engine choice. On every engine but "reference", `serve_slot`'s two phases
+run the split-phase Pallas kernels (`hedge_decide_pallas` /
+`hedge_feedback_pallas`) — kernel on TPU, jnp oracle elsewhere,
+`interpret=True` forcing the kernel on CPU — and `run_source` additionally
+drives the multi-round kernel in `time_block`-slot chains wherever the
+double-buffered feedback permits (see `rounds_eligible`).
 
 Source-driven serving: `run_source` serves a whole `ScenarioSource` horizon
 without ever materializing the (S, T) trace — each slot block is emitted on
@@ -52,7 +58,9 @@ from repro.core import FleetDecision, HIConfig
 from repro.core.policy import (
     H2T2State,
     classification_cost,
+    draw_psi_zeta,
     effective_local_pred,
+    fleet_rounds_fused,
     source_slot_keys,
 )
 from repro.data.scenarios import ScenarioSource
@@ -69,15 +77,25 @@ class HIServerConfig:
     n_streams: int = 8
     hi: HIConfig = HIConfig()
     engine: str = "fused"              # PolicyEngine registry name
-    interpret: Optional[bool] = None   # kernel interpret override (fused/sharded)
+    interpret: Optional[bool] = None   # kernel interpret override
+    use_kernel: Optional[bool] = None  # kernel routing override (None = auto)
     # RDL batch capacity per slot; None → n_streams (padded, never drops).
     offload_capacity: Optional[int] = None
+    # Multi-round serving: `run_source` drives the multi-round hedge kernel
+    # in `time_block`-slot chains wherever the double-buffered feedback
+    # cannot diverge from the monolithic H2T2 chain (see `run_source`).
+    # None/1 → the slot-by-slot decide/compact/feedback scan.
+    time_block: Optional[int] = None
 
     def __post_init__(self):
         if self.offload_capacity is not None and self.offload_capacity < 1:
             raise ValueError(
                 f"offload_capacity must be ≥ 1 (got {self.offload_capacity}); "
                 "use None for the n_streams default")
+        if self.time_block is not None and self.time_block < 1:
+            raise ValueError(
+                f"time_block must be ≥ 1 (got {self.time_block}); use None "
+                "for slot-by-slot serving")
 
     @property
     def capacity(self) -> int:
@@ -157,8 +175,10 @@ class HIServer:
         self.cfg = cfg
         self.ldl = ldl
         self.rdl = rdl
-        self.engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret)
+        self.engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret,
+                                 use_kernel=cfg.use_kernel)
         self._serve_block = None    # jitted source-serving scan, built lazily
+        self._serve_rounds = None   # jitted multi-round block fn, built lazily
 
     def init_state(self) -> HIServerState:
         zero = jnp.zeros((), jnp.float32)
@@ -288,6 +308,134 @@ class HIServer:
         self._serve_block = serve_block
         return serve_block
 
+    # ----------------------- multi-round serving fast path --------------------
+
+    def rounds_eligible(self, source: ScenarioSource) -> bool:
+        """True when `run_source` may serve whole `time_block`-slot chains
+        through the multi-round hedge kernel instead of the slot-by-slot
+        decide/compact/feedback scan.
+
+        The chain is valid exactly when the double-buffered serving flow
+        cannot diverge from the monolithic H2T2 chain: decide at slot t sees
+        feedback through t-1 either way, so the two agree as long as (1) no
+        offload can be capacity-dropped (`sent` ≡ the offload decision:
+        capacity ≥ n_streams), (2) the engine's slot semantics ARE the
+        monolithic chain with a block-constant schedule
+        (`monolithic_rounds` — fused yes; adaptive updates its detector and
+        schedule every slot, sharded splits streams, so both serve
+        slot-by-slot), and (3) the source block divides into time blocks.
+        """
+        tb = self.cfg.time_block or 0
+        return (tb > 1
+                and getattr(self.engine, "monolithic_rounds", False)
+                and self.cfg.capacity >= self.cfg.n_streams
+                and source.block % tb == 0)
+
+    def _serve_rounds_fn(self):
+        """The jitted multi-round serving block: chains of `time_block` slots
+        through `fleet_rounds_fused` (the multi-round Pallas kernel on the
+        kernel path), with counters accumulated in the slot path's exact
+        addition order so the two paths' summaries match bit-for-bit."""
+        if self._serve_rounds is not None:
+            return self._serve_rounds
+        hi, tb = self.cfg.hi, self.cfg.time_block
+        eng = self.engine
+        uk, interp = eng._kernel_opts()
+
+        @jax.jit
+        def serve_rounds_block(pol, t0, acc, key, batch):
+            s, block = batch.fs.shape
+            n_chunks = block // tb
+            blocked = lambda a: jnp.swapaxes(
+                a.reshape(s, n_chunks, tb), 0, 1)
+            xs = tuple(blocked(a)
+                       for a in (batch.fs, batch.hrs, batch.ys, batch.betas))
+
+            def chunk(carry, xs_):
+                st, t, acc = carry
+                f, hr, y, beta = xs_                          # (S, tb) each
+                ts = t + jnp.arange(tb, dtype=jnp.int32)
+                keys = jax.vmap(
+                    lambda ti: source_slot_keys(key, ti, s))(ts)
+                psi, zeta = jax.vmap(
+                    lambda k: draw_psi_zeta(k, hi.eps))(keys)  # (tb, S)
+                tp = lambda a: jnp.swapaxes(a, 0, 1)
+                st, out = fleet_rounds_fused(
+                    hi, st, f, tp(psi), tp(zeta), hr, beta,
+                    use_kernel=uk, interpret=interp)
+                # Serving accounting: β where offloaded (nothing can be
+                # dropped on this path), remote label as the prediction.
+                obs = jnp.where(out.offload, beta, 0.0)
+                phi_true = classification_cost(hi, out.pred, y)
+                slot_obs = jnp.sum(obs, axis=0)               # (tb,)
+                slot_true = jnp.sum(obs + phi_true, axis=0)
+                (loss_acc, true_acc), _ = jax.lax.scan(
+                    lambda a, x: ((a[0] + x[0], a[1] + x[1]), None),
+                    (acc.loss, acc.true_loss), (slot_obs, slot_true))
+                offl = out.offload.astype(jnp.int32)
+                acc = _ServeCounters(
+                    loss=loss_acc, true_loss=true_acc,
+                    offloads=acc.offloads + jnp.sum(offl),
+                    dropped=acc.dropped,
+                    rdl_evals=acc.rdl_evals + jnp.sum(offl),
+                    rdl_batches=acc.rdl_batches + jnp.sum(
+                        jnp.any(out.offload, axis=0).astype(jnp.int32)),
+                    correct=acc.correct + jnp.sum(
+                        (out.pred == y).astype(jnp.int32)))
+                return (st, t + tb, acc), None
+
+            (pol, t, acc), _ = jax.lax.scan(chunk, (pol, t0, acc), xs)
+            return pol, t, acc
+
+        self._serve_rounds = serve_rounds_block
+        return serve_rounds_block
+
+    def _run_source_rounds(
+        self, source: ScenarioSource, key: jax.Array,
+    ) -> Tuple[HIServerState, Dict[str, float]]:
+        """`run_source` served as multi-round kernel chains (see
+        `rounds_eligible` for when this is exact). The final slot's feedback
+        is applied inside the last chain, which is precisely the slot path's
+        end-of-run flush."""
+        serve_rounds = self._serve_rounds_fn()
+        izero = jnp.zeros((), jnp.int32)
+        fzero = jnp.zeros((), jnp.float32)
+        pol = self.engine.init(self.cfg.n_streams)
+        t, acc, sst = izero, _ServeCounters(fzero, fzero, *([izero] * 5)), \
+            source.init_state()
+        for blk in range(source.n_blocks):
+            sst, batch = source.emit(sst, source.key, blk)
+            pol, t, acc = serve_rounds(pol, t, acc, key, batch)
+        state = HIServerState(
+            policy=pol, t=t,
+            total_loss=acc.loss,
+            total_offloads=acc.offloads.astype(jnp.float32),
+            total_dropped=acc.dropped.astype(jnp.float32),
+            rdl_evals=acc.rdl_evals, rdl_batches=acc.rdl_batches,
+            pending=None)
+        return state, self._source_summary(acc, source.horizon)
+
+    def _source_summary(self, acc: _ServeCounters, horizon: int
+                        ) -> Dict[str, float]:
+        """The `run_source` summary dict, shared by both serving paths."""
+        n = horizon * self.cfg.n_streams
+        rdl_evals = int(acc.rdl_evals)
+        rdl_rows = int(acc.rdl_batches) * self.cfg.capacity
+        return {
+            "avg_offload_cost": float(acc.loss) / n,
+            "offload_rate": float(acc.offloads) / n,
+            "drop_rate": float(acc.dropped) / n,
+            "rdl_evals": float(rdl_evals),
+            "rdl_eval_rate": rdl_evals / n,
+            "rdl_savings": 1.0 - rdl_evals / n,
+            "rdl_batches": float(acc.rdl_batches),
+            "rdl_compute_rows": float(rdl_rows),
+            "rdl_row_savings": 1.0 - rdl_rows / n,
+            # Simulation-grade fields a real server could not observe:
+            "avg_true_cost": float(acc.true_loss) / n,
+            "accuracy": float(acc.correct) / n,
+        }
+
     def run_source(
         self,
         source: ScenarioSource,
@@ -304,6 +452,13 @@ class HIServer:
         hrs = the labels the RDL would return); `ys` feed the ground-truth
         summary fields (`avg_true_cost`, `accuracy`) that a real server
         could not observe.
+
+        With `HIServerConfig.time_block > 1` and a configuration where the
+        double-buffered flow cannot diverge from the monolithic H2T2 chain
+        (`rounds_eligible`), whole `time_block`-slot chains are served
+        through the multi-round hedge kernel instead — same decisions, same
+        counters, same summary; ineligible configurations silently keep the
+        slot-by-slot scan.
         """
         cfg = self.cfg
         s, cap = cfg.n_streams, cfg.capacity
@@ -314,6 +469,8 @@ class HIServer:
             raise ValueError(
                 f"source has {source.n_streams} streams but the server is "
                 f"configured for {s}")
+        if self.rounds_eligible(source):
+            return self._run_source_rounds(source, key)
         eng = self.engine
         izero = jnp.zeros((), jnp.int32)
         fzero = jnp.zeros((), jnp.float32)
@@ -353,23 +510,7 @@ class HIServer:
             total_dropped=acc.dropped.astype(jnp.float32),
             rdl_evals=acc.rdl_evals, rdl_batches=acc.rdl_batches,
             pending=None)
-        n = source.horizon * s
-        rdl_evals = int(acc.rdl_evals)
-        rdl_rows = int(acc.rdl_batches) * cap
-        return state, {
-            "avg_offload_cost": float(acc.loss) / n,
-            "offload_rate": float(acc.offloads) / n,
-            "drop_rate": float(acc.dropped) / n,
-            "rdl_evals": float(rdl_evals),
-            "rdl_eval_rate": rdl_evals / n,
-            "rdl_savings": 1.0 - rdl_evals / n,
-            "rdl_batches": float(acc.rdl_batches),
-            "rdl_compute_rows": float(rdl_rows),
-            "rdl_row_savings": 1.0 - rdl_rows / n,
-            # Simulation-grade fields a real server could not observe:
-            "avg_true_cost": float(acc.true_loss) / n,
-            "accuracy": float(acc.correct) / n,
-        }
+        return state, self._source_summary(acc, source.horizon)
 
     def run(
         self,

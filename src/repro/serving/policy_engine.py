@@ -13,7 +13,13 @@ simulation, the benchmarks, and the `HIServer` all speak one interface:
                                      trace residency (any horizon)
   decide(state, fs, keys) /        → the two-phase serving flow: decide
   feedback(state, decision, …)       offloads first, apply (possibly
-                                     delayed) RDL feedback later
+                                     delayed) RDL feedback later. Both
+                                     phases route through the split-phase
+                                     Pallas kernels (hedge_decide_pallas /
+                                     hedge_feedback_pallas) on every engine
+                                     except "reference" — kernel on TPU,
+                                     jnp oracle elsewhere, interpret=True
+                                     forcing the kernel on CPU
 
 `keys` is always (S, 2) — one PRNGKey per stream — consumed through
 `draw_psi_zeta`, so every engine makes bit-for-bit identical decisions for
@@ -103,10 +109,13 @@ class PolicyEngine:
     """Base class: shared init/decide/feedback; subclasses supply step/run.
 
     `decide`/`feedback` exist so a server can split a round around a remote
-    call; the base implementations are the jitted jnp reference math, and
-    engines may override them (the sharded engine runs both through its
-    device mesh). The kernel engines accelerate the fused `step`/`run`
-    paths where the whole round happens in one launch.
+    call. The base implementations route through the split-phase Pallas
+    kernels (`hedge_decide_pallas` / `hedge_feedback_pallas`) under the
+    same auto-select as the fused step — kernel on TPU, jnp elsewhere,
+    `interpret=True` forcing the kernel on CPU — so the serving hot path
+    runs at kernel speed wherever the fused simulation path does.
+    Subclasses may override (the reference engine pins the vmapped jnp
+    math; the sharded engine runs both phases through its device mesh).
     """
 
     name = "abstract"
@@ -115,19 +124,27 @@ class PolicyEngine:
                  interpret: Optional[bool] = None,
                  use_kernel: Optional[bool] = None):
         # `interpret`/`use_kernel` are accepted uniformly so the registry can
-        # construct any engine from one opts dict; the reference engine
-        # ignores them.
+        # construct any engine from one opts dict.
         self.hi = hi_cfg
         self.interpret = interpret
         self.use_kernel = use_kernel
+        uk, interp = self._kernel_opts()
+
         def decide(st, fs, keys):
             psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            return fleet_decide(hi_cfg, st, fs, psi, zeta)
+            return fleet_decide(hi_cfg, st, fs, psi, zeta,
+                                use_kernel=uk, interpret=interp)
 
         self._decide = jax.jit(decide)
         self._feedback = jax.jit(
             lambda st, dec, hrs, betas, sent:
-                fleet_feedback(hi_cfg, st, dec, hrs, betas, sent))
+                fleet_feedback(hi_cfg, st, dec, hrs, betas, sent,
+                               use_kernel=uk, interpret=interp))
+
+    def _kernel_opts(self):
+        """(use_kernel, interpret) this engine's decide/feedback split and
+        fused steps resolve against (`core.policy._resolve_use_kernel`)."""
+        return self.use_kernel, self.interpret
 
     def init(self, n_streams: int) -> H2T2State:
         """Fresh fleet state: every leaf batched over (n_streams,)."""
@@ -187,7 +204,15 @@ class PolicyEngine:
 
 @register_engine("reference")
 class ReferenceEngine(PolicyEngine):
-    """Vmapped per-stream `h2t2_step` — the paper-shaped jnp path."""
+    """Vmapped per-stream `h2t2_step` — the paper-shaped jnp path.
+
+    Every phase (step, run, and the serving decide/feedback split) stays on
+    the jnp math regardless of backend; `use_kernel`/`interpret` are
+    accepted for registry uniformity and ignored.
+    """
+
+    def _kernel_opts(self):
+        return False, None
 
     def __init__(self, hi_cfg: HIConfig,
                  interpret: Optional[bool] = None,
@@ -210,13 +235,23 @@ class FusedEngine(PolicyEngine):
 
     `time_block > 1` makes `run` drive the multi-round kernel
     (`fleet_hedge_rounds`), which keeps the expert grids in VMEM for
-    `time_block` rounds per launch; the horizon must divide evenly.
+    `time_block` rounds per launch; the horizon must divide evenly. The
+    default (`time_block=None`) consults the autotune cache
+    (`kernels.hedge.autotune`) per run: a cached (G, S, platform) winner
+    that divides the horizon is applied, otherwise single-round — any
+    geometry produces identical results. `monolithic_rounds` advertises
+    that this engine's slot semantics are exactly the monolithic H2T2
+    chain, so `HIServer.run_source` may drive whole slot blocks through
+    the multi-round kernel when its double-buffered feedback cannot
+    diverge from it (fixed schedule, no capacity drops).
     """
+
+    monolithic_rounds = True
 
     def __init__(self, hi_cfg: HIConfig,
                  interpret: Optional[bool] = None,
                  use_kernel: Optional[bool] = None,
-                 time_block: int = 1):
+                 time_block: Optional[int] = None):
         super().__init__(hi_cfg, interpret, use_kernel)
         self.time_block = time_block
 
@@ -227,6 +262,20 @@ class FusedEngine(PolicyEngine):
 
         self._step = jax.jit(step)
 
+    def _resolve_time_block(self, s: int, t: int) -> int:
+        """Explicit time_block, else the autotuned winner when it divides
+        the horizon, else single-round."""
+        if self.time_block is not None:
+            return self.time_block
+        from repro.kernels.hedge import autotune
+
+        rec = autotune.lookup(self.hi.grid, s)
+        if rec:
+            tb = int(rec.get("time_block", 1) or 1)
+            if tb >= 1 and t % tb == 0:
+                return tb
+        return 1
+
     def step(self, state, fs, betas, hrs, keys):
         return self._step(state, fs, betas, hrs, keys)
 
@@ -234,7 +283,7 @@ class FusedEngine(PolicyEngine):
         return run_fleet_fused(self.hi, fs, hrs, betas, key,
                                use_kernel=self.use_kernel,
                                interpret=self.interpret,
-                               time_block=self.time_block,
+                               time_block=self._resolve_time_block(*fs.shape),
                                stream_keys=stream_keys)
 
 
@@ -305,10 +354,14 @@ class ShardedEngine(PolicyEngine):
 
         self._run = jax.jit(run)
 
-        # The serving split runs through the mesh too, so HIServer's
-        # decide/feedback phases scale with the fleet like step/run do.
+        # The serving split runs through the mesh too — each device runs the
+        # decide/feedback *kernels* on its stream shard (same auto-select as
+        # everywhere) — so HIServer's phases scale with the fleet like
+        # step/run do.
         sharded_decide = shard_map(
-            lambda st, fs, psi, zeta: fleet_decide(hi_cfg, st, fs, psi, zeta),
+            lambda st, fs, psi, zeta: fleet_decide(
+                hi_cfg, st, fs, psi, zeta,
+                use_kernel=use_kernel, interpret=interpret),
             mesh=self.mesh, in_specs=(spec, spec, spec, spec),
             out_specs=spec, check_rep=False)
 
@@ -322,7 +375,8 @@ class ShardedEngine(PolicyEngine):
 
         sharded_feedback = shard_map(
             lambda st, dec, hrs, betas, sent: fleet_feedback(
-                hi_cfg, st, dec, hrs, betas, sent),
+                hi_cfg, st, dec, hrs, betas, sent,
+                use_kernel=use_kernel, interpret=interpret),
             mesh=self.mesh, in_specs=(spec, spec, spec, spec, spec),
             out_specs=(spec, spec), check_rep=False)
 
@@ -422,14 +476,18 @@ class AdaptiveEngine(PolicyEngine):
         self.restart = bool(restart)
         scfg = self.shift_cfg
         do_restart = scfg.enabled and self.restart
+        uk, interp = self._kernel_opts()
 
         def feedback(state, decision, hrs, betas, sent):
             if scfg.enabled:
                 eta, decay = adapt_schedule(hi_cfg, scfg, state.shift)
             else:
                 eta = decay = None
+            # The per-stream (η, decay) arrays feed the feedback kernel as
+            # (S,) VMEM vectors — the adaptive schedule runs at kernel speed.
             policy, out = fleet_feedback(hi_cfg, state.policy, decision, hrs,
-                                         betas, sent, eta=eta, decay=decay)
+                                         betas, sent, eta=eta, decay=decay,
+                                         use_kernel=uk, interpret=interp)
             if scfg.signal == "confidence":
                 x = decision.i_f.astype(hi_cfg.dtype) / hi_cfg.grid
             else:
@@ -443,13 +501,15 @@ class AdaptiveEngine(PolicyEngine):
 
         def decide(state, fs, keys):
             psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            return fleet_decide(hi_cfg, state.policy, fs, psi, zeta)
+            return fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
+                                use_kernel=uk, interpret=interp)
 
         self._decide = jax.jit(decide)
 
         def step(state, fs, betas, hrs, keys):
             psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            decision = fleet_decide(hi_cfg, state.policy, fs, psi, zeta)
+            decision = fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
+                                    use_kernel=uk, interpret=interp)
             return feedback(state, decision, hrs, betas, decision.offload)
 
         self._step = jax.jit(step)

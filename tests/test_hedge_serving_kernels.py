@@ -1,0 +1,548 @@
+"""Serving-hot-path kernel coverage: the decide/feedback split kernels,
+per-stream (η, decay) schedule vectors, stream-axis zero-padding for
+non-divisible fleet sizes, the (SB × TB) autotune cache, and the HIServer
+multi-round serving fast path.
+
+The load-bearing bar: with `interpret=True` the Pallas kernels and the jnp
+paths must make BIT-identical decisions (offload/explore/predict and every
+integer counter, asserted with array_equal throughout), and their weight
+states must agree to float32-ulp level. The weights themselves are compared
+with tight allclose rather than array_equal because the update
+`decay·w − η·l̃` may or may not be FMA-fused depending on whether the
+schedule is a compile-time constant or a traced (S,) vector — XLA's choice,
+≈1-2 ulp, the same caveat `AdaptiveEngine` documents. On this platform the
+serving-level parities (serve_slot, run_source fast path, adaptive engine)
+are in fact bit-identical end to end.
+"""
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HIConfig,
+    draw_fleet_randomness,
+    draw_psi_zeta,
+    fleet_decide,
+    fleet_feedback,
+    fleet_init,
+    run_fleet_fused,
+)
+from repro.kernels.hedge import autotune
+from repro.kernels.hedge.ops import (
+    fleet_hedge_decide,
+    fleet_hedge_feedback,
+    fleet_hedge_rounds,
+    fleet_hedge_step,
+)
+from repro.serving import HIServer, HIServerConfig, available_engines, get_engine
+
+from conftest import fleet_trace as _fleet_trace
+
+
+def _rand_logw(key, s, g):
+    l = jnp.arange(g)[:, None]
+    u = jnp.arange(g)[None, :]
+    lw = jax.random.normal(key, (s, g, g))
+    return jnp.where(l <= u, lw - jnp.max(lw), -jnp.inf).astype(jnp.float32)
+
+
+def _slot_inputs(key, s, eps=0.1):
+    ks = jax.random.split(key, 4)
+    fs = jax.random.uniform(ks[0], (s,))
+    hrs = jax.random.bernoulli(ks[1], 0.5, (s,)).astype(jnp.int32)
+    betas = jax.random.uniform(ks[2], (s,), maxval=0.6)
+    psi, zeta = draw_psi_zeta(jax.random.split(ks[3], s), eps)
+    return fs, hrs, betas, psi, zeta
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for name, x, y in zip(a._fields, a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (msg, name)
+
+
+def _assert_logw_close(a, b, msg="", atol=2e-5):
+    """Weight grids equal to ulp level (see module docstring), -inf aligned."""
+    a, b = np.asarray(a), np.asarray(b)
+    valid = np.isfinite(a)
+    assert np.array_equal(valid, np.isfinite(b)), msg
+    np.testing.assert_allclose(b[valid], a[valid], atol=atol, err_msg=str(msg))
+
+
+# ----------------------- decide/feedback split kernels ------------------------
+
+
+def _assert_decisions_equal(a, b, msg=""):
+    """FleetDecision parity: every decision bit-identical, region masses to
+    float tolerance (reduction fusion may differ across graph contexts)."""
+    for name in ("i_f", "offload", "explored", "local_pred"):
+        assert np.array_equal(np.asarray(getattr(a, name)),
+                              np.asarray(getattr(b, name))), (msg, name)
+    for name in ("q", "p", "psi"):
+        np.testing.assert_allclose(np.asarray(getattr(b, name)),
+                                   np.asarray(getattr(a, name)), atol=1e-6,
+                                   err_msg=f"{msg} {name}")
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5])          # G ∈ {8, 16, 32}
+def test_decide_kernel_matches_jnp(bits):
+    """The decide kernel (interpret) makes BIT-identical decisions to the
+    vmapped jnp `fleet_decide` (on this platform the q/p masses match
+    bit-for-bit too; the assert allows reduction-fusion ulps)."""
+    cfg = HIConfig(bits=bits, eps=0.1, eta=1.0)
+    s = 9                                           # not a stream_block multiple
+    state = fleet_init(cfg, s)._replace(
+        log_w=_rand_logw(jax.random.PRNGKey(bits), s, cfg.grid))
+    fs, _, _, psi, zeta = _slot_inputs(jax.random.PRNGKey(7 + bits), s)
+    ref = fleet_decide(cfg, state, fs, psi, zeta, use_kernel=False)
+    ker = fleet_decide(cfg, state, fs, psi, zeta, use_kernel=True,
+                       interpret=True)
+    _assert_decisions_equal(ref, ker)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 5])
+def test_feedback_kernel_per_stream_schedule_golden(bits):
+    """Feedback kernel vs the jnp `fleet_feedback` under a per-stream
+    (η, decay) schedule AND a capacity-dropping `sent` mask: states and
+    outputs bit-identical."""
+    cfg = HIConfig(bits=bits, eps=0.07, eta=0.9, decay=0.95)
+    s = 8
+    ks = jax.random.split(jax.random.PRNGKey(40 + bits), 3)
+    state = fleet_init(cfg, s)._replace(log_w=_rand_logw(ks[0], s, cfg.grid))
+    fs, hrs, betas, psi, zeta = _slot_inputs(ks[1], s)
+    dec = fleet_decide(cfg, state, fs, psi, zeta, use_kernel=False)
+    # Drop every other offload, as a capacity-limited server would.
+    sent = dec.offload & (jnp.arange(s) % 2 == 0)
+    eta = jax.random.uniform(ks[2], (s,), minval=0.3, maxval=2.0)
+    decay = jnp.linspace(0.9, 1.0, s)
+    st_ref, out_ref = fleet_feedback(cfg, state, dec, hrs, betas, sent=sent,
+                                     eta=eta, decay=decay, use_kernel=False)
+    st_ker, out_ker = fleet_feedback(cfg, state, dec, hrs, betas, sent=sent,
+                                     eta=eta, decay=decay, use_kernel=True,
+                                     interpret=True)
+    _assert_trees_equal(out_ref, out_ker)
+    assert np.array_equal(np.asarray(st_ref.t), np.asarray(st_ker.t))
+    assert np.array_equal(np.asarray(st_ref.n_offloads),
+                          np.asarray(st_ker.n_offloads))
+    assert np.array_equal(np.asarray(st_ref.n_explores),
+                          np.asarray(st_ker.n_explores))
+    _assert_logw_close(st_ref.log_w, st_ker.log_w)
+
+
+def test_schedule_scalar_broadcast_identity():
+    """Broadcasting the HIConfig scalars into the kernels' (S,) schedule
+    vectors reproduces the fixed-schedule results: every decision, q/p
+    mass, and derived output bit-for-bit; the weight grid to ulp level
+    (the broadcast is elementwise-identical math, but a traced vector
+    operand can change XLA's FMA fusion of decay·w − η·l̃ — the
+    compile-time-constant caveat `AdaptiveEngine` documents)."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=0.8, decay=0.97)
+    s = 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    logw = _rand_logw(ks[0], s, cfg.grid)
+    fs, hrs, betas, psi, zeta = _slot_inputs(ks[1], s)
+    zeta = zeta.astype(jnp.int32)
+    vec = lambda v: jnp.full((s,), v, jnp.float32)
+    for uk in (True, False):
+        default = fleet_hedge_step(cfg, logw, fs, psi, zeta, hrs, betas,
+                                   use_kernel=uk, interpret=True)
+        explicit = fleet_hedge_step(cfg, logw, fs, psi, zeta, hrs, betas,
+                                    use_kernel=uk, interpret=True,
+                                    eta=vec(cfg.eta), decay=vec(cfg.decay))
+        _assert_logw_close(default[0], explicit[0], msg=uk)
+        for a, b in zip(default[1:], explicit[1:]):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), uk
+
+
+def test_split_kernels_compose_to_monolithic_kernel():
+    """decide-kernel + feedback-kernel (sent = the raw offload decision)
+    reproduces the monolithic step kernel bit-for-bit."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0, decay=0.98)
+    s = 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    logw = _rand_logw(ks[0], s, cfg.grid)
+    fs, hrs, betas, psi, zeta = _slot_inputs(ks[1], s)
+    zeta = zeta.astype(jnp.int32)
+    new_lw, off, exp_, lp, q, p = fleet_hedge_step(
+        cfg, logw, fs, psi, zeta, hrs, betas, use_kernel=True, interpret=True)
+    i_f, off2, exp2, lp2, q2, p2 = fleet_hedge_decide(
+        cfg, logw, fs, psi, zeta, use_kernel=True, interpret=True)
+    lw2 = fleet_hedge_feedback(
+        cfg, logw, i_f, off2, exp2, hrs, betas, use_kernel=True,
+        interpret=True)
+    for a, b in zip((off, exp_, lp), (off2, exp2, lp2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip((q, p), (q2, p2)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=1e-6)
+    _assert_logw_close(new_lw, lw2)
+
+
+def test_engine_split_equals_step_with_kernels_all_engines():
+    """Every registered engine's decide+feedback composition equals its own
+    step with the split kernels forced (interpret mode) — state included.
+    Under CI's 8-fake-device matrix job this also covers the kernels inside
+    the sharded engine's shard_map."""
+    cfg = HIConfig(bits=4, eps=0.1, eta=1.0)
+    s = 6
+    fs, hrs, betas, _, _ = _slot_inputs(jax.random.PRNGKey(9), s)
+    keys = jax.random.split(jax.random.PRNGKey(10), s)
+    for name in available_engines():
+        eng = get_engine(name, cfg, interpret=True)
+        state = eng.init(s)
+        st_step, o_step = eng.step(state, fs, betas, hrs, keys)
+        dec = eng.decide(state, fs, keys)
+        st_df, o_df = eng.feedback(state, dec, hrs, betas)
+        assert np.array_equal(np.asarray(o_step.offload),
+                              np.asarray(o_df.offload)), name
+        assert np.array_equal(np.asarray(o_step.pred),
+                              np.asarray(o_df.pred)), name
+        _assert_logw_close(st_step.log_w, st_df.log_w, msg=name)
+
+
+def test_kernel_vs_jnp_engine_cross_parity():
+    """fused(interpret kernel) and reference(jnp) engines serve bit-identical
+    decide/feedback rounds for the same keys — the serving layer can mix
+    their states freely."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    s = 8
+    ker = get_engine("fused", cfg, interpret=True)
+    ref = get_engine("reference", cfg)
+    st_k, st_r = ker.init(s), ref.init(s)
+    key = jax.random.PRNGKey(2)
+    for t in range(4):
+        key, k1, k2 = jax.random.split(key, 3)
+        fs = jax.random.uniform(k1, (s,))
+        hrs = jax.random.bernoulli(k2, 0.5, (s,)).astype(jnp.int32)
+        betas = jnp.full((s,), 0.3)
+        keys = jax.random.split(jax.random.fold_in(key, t), s)
+        dec_k = ker.decide(st_k, fs, keys)
+        dec_r = ref.decide(st_r, fs, keys)
+        _assert_decisions_equal(dec_r, dec_k, msg=t)
+        sent = dec_k.offload & (jnp.arange(s) < s - 1)   # drop the last stream
+        st_k, o_k = ker.feedback(st_k, dec_k, hrs, betas, sent=sent)
+        st_r, o_r = ref.feedback(st_r, dec_r, hrs, betas, sent=sent)
+        assert np.array_equal(np.asarray(o_k.pred), np.asarray(o_r.pred))
+        _assert_logw_close(st_r.log_w, st_k.log_w, msg=t)
+
+
+# -------------------- stream-axis zero-padding (satellite) --------------------
+
+
+@pytest.mark.parametrize("s", [1, 3, 5, 7, 13])
+def test_stream_padding_any_fleet_size(s):
+    """Prime/odd fleet sizes run at full stream_block via zero-padding (not
+    the old SB=1 divisor fallback) and still match the jnp oracle exactly —
+    single-round, multi-round, and the split kernels."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0, decay=0.96)
+    g = cfg.grid
+    ks = jax.random.split(jax.random.PRNGKey(s), 2)
+    logw = _rand_logw(ks[0], s, g)
+    fs, hrs, betas, psi, zeta = _slot_inputs(ks[1], s)
+    zeta = zeta.astype(jnp.int32)
+    def check(kernel_out, ref_out):
+        new_k, *rest_k = kernel_out
+        new_r, *rest_r = ref_out
+        _assert_logw_close(new_r, new_k, msg=s)
+        for a, b in zip(rest_k, rest_r):
+            if np.asarray(a).dtype == np.int32:
+                assert np.array_equal(np.asarray(a), np.asarray(b)), s
+            else:                                        # q/p region masses
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-6)
+            assert np.asarray(a).shape[0] == s           # padding sliced off
+
+    check(fleet_hedge_step(cfg, logw, fs, psi, zeta, hrs, betas,
+                           use_kernel=True, interpret=True, stream_block=8),
+          fleet_hedge_step(cfg, logw, fs, psi, zeta, hrs, betas,
+                           use_kernel=False))
+
+    tb = 4
+    tile = lambda a: jnp.tile(a[:, None], (1, tb))
+    check(fleet_hedge_rounds(cfg, logw, tile(fs), tile(psi), tile(zeta),
+                             tile(hrs), tile(betas), use_kernel=True,
+                             interpret=True, stream_block=8),
+          fleet_hedge_rounds(cfg, logw, tile(fs), tile(psi), tile(zeta),
+                             tile(hrs), tile(betas), use_kernel=False))
+
+
+def test_block_streams_geometry():
+    """The launch geometry never exceeds S, pads to an SB multiple, and no
+    longer falls back to SB=1 on primes."""
+    from repro.kernels.hedge.kernel import _block_streams
+
+    assert _block_streams(16, 8) == (8, 16, 0)
+    assert _block_streams(13, 8) == (8, 16, 3)           # prime: pad, not SB=1
+    assert _block_streams(5, 8) == (5, 5, 0)             # SB capped at S
+    assert _block_streams(3, 8) == (3, 3, 0)
+    assert _block_streams(96, 8) == (8, 96, 0)
+
+
+# ---------------------- per-stream schedules, fleet paths ---------------------
+
+
+def test_run_fleet_fused_vector_schedule_matches_feedback_chain():
+    """`run_fleet_fused(eta=…, decay=…)` (both kernel time_block paths) ==
+    a decide/feedback chain with the same per-stream schedule."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0)
+    s, t = 6, 32
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(0), s, t)
+    key = jax.random.PRNGKey(4)
+    eta = jnp.linspace(0.5, 1.5, s)
+    decay = jnp.linspace(0.92, 1.0, s)
+
+    state = fleet_init(cfg, s)
+    psis, zetas = draw_fleet_randomness(cfg, key, s, t)
+    chain = []
+    for ti in range(t):
+        dec = fleet_decide(cfg, state, fs[:, ti], psis[:, ti], zetas[:, ti],
+                           use_kernel=False)
+        state, out = fleet_feedback(cfg, state, dec, hrs[:, ti], betas[:, ti],
+                                    eta=eta, decay=decay, use_kernel=False)
+        chain.append(out.offload)
+    chain = jnp.stack(chain, axis=1)
+
+    for tb in (1, 8):
+        st, out = run_fleet_fused(cfg, fs, hrs, betas, key, use_kernel=True,
+                                  interpret=True, time_block=tb,
+                                  eta=eta, decay=decay)
+        assert np.array_equal(np.asarray(out.offload), np.asarray(chain)), tb
+        _assert_logw_close(state.log_w, st.log_w, msg=tb, atol=1e-4)
+
+
+def test_adaptive_engine_kernel_bit_parity_across_shifts():
+    """The adaptive engine with kernels forced (interpret) is bit-identical
+    to its jnp path over the pinned drift scenario — through detector
+    alarms, per-stream schedule boosts, and weight restarts."""
+    from repro.data.scenarios import get_scenario
+
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    key = jax.random.PRNGKey(11)
+    mk = lambda: get_scenario(
+        "piecewise", n_streams=4, horizon=2000, block=500,
+        key=jax.random.PRNGKey(0), beta=0.3,
+        segments=((0, "breakhis"), (1000, "xract")))
+    st_j, out_j = get_engine("adaptive", cfg).run_source(mk(), key)
+    st_k, out_k = get_engine("adaptive", cfg,
+                             interpret=True).run_source(mk(), key)
+    for name in ("offloads", "explores", "correct"):
+        assert np.array_equal(np.asarray(getattr(out_j, name)),
+                              np.asarray(getattr(out_k, name))), name
+    for name in ("loss", "true_loss"):
+        np.testing.assert_allclose(np.asarray(getattr(out_k, name)),
+                                   np.asarray(getattr(out_j, name)),
+                                   atol=1e-3, err_msg=name)
+    assert int(jnp.sum(st_j.shift.n_alarms)) > 0         # shifts were detected
+    assert np.array_equal(np.asarray(st_j.shift.n_alarms),
+                          np.asarray(st_k.shift.n_alarms))
+    _assert_logw_close(st_j.policy.log_w, st_k.policy.log_w, atol=1e-4)
+
+
+# ------------------------- HIServer serving fast path -------------------------
+
+
+def _stationary_source(s=4, horizon=512, block=64):
+    from repro.data.scenarios import get_scenario
+
+    return get_scenario("stationary", n_streams=s, horizon=horizon,
+                        block=block, key=jax.random.PRNGKey(0), beta=0.3)
+
+
+def test_hiserver_serve_slot_runs_kernels_bit_identical():
+    """`serve_slot` with the kernel-backed fused engine (interpret) ==
+    the reference jnp engine, slot for slot — results and state."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0)
+    s = 5
+    mk = lambda engine, interpret=None: HIServer(
+        HIServerConfig(n_streams=s, hi=cfg, engine=engine,
+                       interpret=interpret, offload_capacity=3),
+        ldl=lambda tok: jax.nn.sigmoid(jnp.mean(tok, axis=-1)),
+        rdl=lambda tok: (jnp.mean(tok, axis=-1) > 0).astype(jnp.int32))
+    srv_k, srv_r = mk("fused", interpret=True), mk("reference")
+    st_k, st_r = srv_k.init_state(), srv_r.init_state()
+    key = jax.random.PRNGKey(0)
+    for t in range(6):
+        key, k1, k2 = jax.random.split(key, 3)
+        tokens = jax.random.normal(k1, (s, 8))
+        betas = jnp.full((s,), 0.3)
+        st_k, res_k = srv_k.serve_slot(st_k, tokens, betas, k2)
+        st_r, res_r = srv_r.serve_slot(st_r, tokens, betas, k2)
+        _assert_trees_equal(res_k, res_r, msg=t)
+    _assert_logw_close(st_r.policy.log_w, st_k.policy.log_w)
+
+
+def test_hiserver_rounds_fast_path_matches_slot_path():
+    """`run_source` through the multi-round kernel (time_block) produces the
+    slot path's summaries, counters, and final weights bit-for-bit."""
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    s = 4
+    dummy = lambda x: x
+    slot = HIServer(HIServerConfig(n_streams=s, hi=cfg, engine="fused",
+                                   interpret=True), dummy, dummy)
+    fast = HIServer(HIServerConfig(n_streams=s, hi=cfg, engine="fused",
+                                   interpret=True, time_block=8),
+                    dummy, dummy)
+    assert not slot.rounds_eligible(_stationary_source(s))
+    assert fast.rounds_eligible(_stationary_source(s))
+    key = jax.random.PRNGKey(11)
+    st1, sum1 = slot.run_source(_stationary_source(s), key)
+    st2, sum2 = fast.run_source(_stationary_source(s), key)
+    # Bit-identical summaries on this platform; the assert allows summation
+    # fusion ulps on the two float fields (everything else is count-derived).
+    assert set(sum1) == set(sum2)
+    for k in sum1:
+        assert math.isclose(sum1[k], sum2[k], rel_tol=1e-6, abs_tol=1e-9), k
+    for k in ("offload_rate", "rdl_evals", "rdl_batches", "drop_rate",
+              "accuracy"):
+        assert sum1[k] == sum2[k], k
+    assert int(st1.t) == int(st2.t) == 512
+    _assert_logw_close(st1.policy.log_w, st2.policy.log_w)
+    assert np.array_equal(np.asarray(st1.policy.n_offloads),
+                          np.asarray(st2.policy.n_offloads))
+    assert np.array_equal(np.asarray(st1.policy.n_explores),
+                          np.asarray(st2.policy.n_explores))
+
+
+def test_hiserver_rounds_eligibility_gates():
+    """The fast path declines exactly the configurations whose double-
+    buffered feedback could diverge from the monolithic chain."""
+    cfg = HIConfig(bits=3)
+    dummy = lambda x: x
+    src = _stationary_source(4)
+    mk = lambda **kw: HIServer(
+        HIServerConfig(n_streams=4, hi=cfg, **kw), dummy, dummy)
+    assert mk(engine="fused", time_block=8).rounds_eligible(src)
+    # Capacity drops possible → sent ≠ offload → slot path.
+    assert not mk(engine="fused", time_block=8,
+                  offload_capacity=2).rounds_eligible(src)
+    # Per-slot detector/schedule updates → slot path.
+    assert not mk(engine="adaptive", time_block=8).rounds_eligible(src)
+    # Block must divide into time blocks.
+    assert not mk(engine="fused", time_block=7).rounds_eligible(src)
+    with pytest.raises(ValueError, match="time_block"):
+        HIServerConfig(n_streams=4, hi=cfg, time_block=0)
+
+
+# ------------------------------ autotune cache --------------------------------
+
+
+def test_autotune_sweep_persists_and_lookup(tmp_path, monkeypatch):
+    path = str(tmp_path / "hedge_autotune.json")
+    monkeypatch.setenv("REPRO_HEDGE_AUTOTUNE_CACHE", path)
+    entries = autotune.sweep(grids=(8,), streams=(4,), stream_blocks=(1, 4),
+                             time_blocks=(1, 2), reps=1)
+    assert set(entries) == {f"{jax.default_backend()}/G8/S4"}
+    rec = autotune.lookup(8, 4)
+    assert rec is not None and os.path.exists(path)
+    assert rec["stream_block"] in (1, 4) and rec["time_block"] in (1, 2)
+    assert set(rec["measured"]) == {"sb1_tb1", "sb1_tb2", "sb4_tb1", "sb4_tb2"}
+    # Unknown shapes fall back to the static defaults.
+    assert autotune.best_blocks(8, 999) == (
+        autotune.DEFAULT_STREAM_BLOCK, autotune.DEFAULT_TIME_BLOCK)
+    # A rewrite is picked up (mtime invalidation, no process restart).
+    entries[f"{jax.default_backend()}/G8/S4"]["stream_block"] = 2
+    autotune.write_cache(entries, path)
+    assert autotune.best_stream_block(8, 4) == 2
+    # Other platforms' entries survive a merge.
+    autotune.write_cache({"tpu/G8/S4": {"stream_block": 16, "time_block": 32,
+                                        "us_per_round": 1.0}}, path)
+    assert autotune.best_blocks(8, 4, platform="tpu") == (16, 32)
+    assert autotune.best_stream_block(8, 4) == 2
+    # Partial entries (hand-edited caches) degrade field-by-field, not crash.
+    autotune.write_cache({"tpu/G8/S2": {"stream_block": 16}}, path)
+    assert autotune.best_blocks(8, 2, platform="tpu") == (
+        16, autotune.DEFAULT_TIME_BLOCK)
+
+
+def test_ops_defaults_consult_autotune_cache(tmp_path, monkeypatch):
+    """`ops` resolves stream_block=None through the cache at trace time, and
+    the chosen geometry never changes results (pad + slice)."""
+    from repro.kernels.hedge.ops import _stream_block
+
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_HEDGE_AUTOTUNE_CACHE", path)
+    assert _stream_block(None, 8, 5) == autotune.DEFAULT_STREAM_BLOCK
+    assert _stream_block(3, 8, 5) == 3                   # explicit wins
+    autotune.write_cache(
+        {f"{jax.default_backend()}/G8/S5": {
+            "stream_block": 3, "time_block": 4, "us_per_round": 1.0}}, path)
+    assert _stream_block(None, 8, 5) == 3
+
+    cfg = HIConfig(bits=3, eps=0.1)
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    logw = _rand_logw(ks[0], 5, cfg.grid)
+    fs, hrs, betas, psi, zeta = _slot_inputs(ks[1], 5)
+    zeta = zeta.astype(jnp.int32)
+    for sb in (None, 1, 2, 8):                           # geometry-invariant
+        out = fleet_hedge_step(cfg, logw, fs, psi, zeta, hrs, betas,
+                               use_kernel=True, interpret=True,
+                               stream_block=sb)
+        ref = fleet_hedge_step(cfg, logw, fs, psi, zeta, hrs, betas,
+                               use_kernel=False)
+        for a, b in zip(out, ref):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), sb
+
+
+def test_fused_engine_default_time_block_consults_cache(tmp_path, monkeypatch):
+    """FusedEngine(time_block=None) applies the cached TB winner when it
+    divides the horizon, single-round otherwise; an explicit value wins."""
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_HEDGE_AUTOTUNE_CACHE", path)
+    cfg = HIConfig(bits=3)
+    eng = get_engine("fused", cfg)
+    assert eng._resolve_time_block(s=4, t=96) == 1       # no cache → 1
+    autotune.write_cache(
+        {f"{jax.default_backend()}/G8/S4": {
+            "stream_block": 4, "time_block": 8, "us_per_round": 1.0}}, path)
+    assert eng._resolve_time_block(s=4, t=96) == 8       # winner divides 96
+    assert eng._resolve_time_block(s=4, t=97) == 1       # 97 % 8 → fallback
+    assert eng._resolve_time_block(s=5, t=96) == 1       # no S=5 entry
+    assert get_engine("fused", cfg,
+                      time_block=2)._resolve_time_block(s=4, t=96) == 2
+
+
+# ------------------------------- multi-device ---------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_split_kernels_under_8_fake_devices_subprocess():
+    """Force 8 host devices in a clean interpreter: the sharded engine's
+    decide/feedback split with kernels forced (interpret inside shard_map)
+    still equals its own step, with S=11 not dividing the device count."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core import HIConfig
+from repro.serving import get_engine
+cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+s = 11
+eng = get_engine("sharded", cfg, interpret=True)
+state = eng.init(s)
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+fs = jax.random.uniform(ks[0], (s,))
+hrs = jax.random.bernoulli(ks[1], 0.5, (s,)).astype(jnp.int32)
+betas = jnp.full((s,), 0.3)
+keys = jax.random.split(ks[2], s)
+st_step, o_step = eng.step(state, fs, betas, hrs, keys)
+dec = eng.decide(state, fs, keys)
+st_df, o_df = eng.feedback(state, dec, hrs, betas)
+assert np.array_equal(np.asarray(o_step.offload), np.asarray(o_df.offload))
+lw_s, lw_d = np.asarray(st_step.log_w), np.asarray(st_df.log_w)
+valid = np.isfinite(lw_s)
+assert np.array_equal(lw_s[valid], lw_d[valid])
+print("OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
