@@ -1,0 +1,87 @@
+"""BEYOND-PAPER: closed-loop request-plane benchmark — offered-load sweep.
+
+Each row serves one seeded open-loop traffic trace through the FULL async
+plane (ingress admission → session slot lease → deadline micro-batch →
+fleet decide → rotating compaction → simulated link transfer → live-β
+estimation → delayed feedback) on the virtual clock, so the sweep is
+deterministic and wall-clock time measures only host+device compute.
+
+Offered load is expressed relative to the plane's nominal service
+capacity S/max_wait (every stream slot served once per flush deadline):
+x0.25/x0.5 sit well under capacity (deny rate ≈ 0), x1 is at it, x2 is
+sustained overload where queue-depth admission bounds p99 latency by
+shedding to local-only fallbacks. A final row drives bursty MMPP arrivals
+at nominal x1 to exercise admission under load spikes.
+
+Reported per row: mean observed serving cost (β on actual offloads),
+offload/deny/drop rates, and p50/p95/p99 request latency (ms, virtual
+time). Latency percentiles are environment-shaped; the regression gate
+treats `p50_*`/`p95_*`/`p99_*` as informational (see check_regression.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from repro.data.traffic import TrafficProcess
+from repro.serving.request_plane import (
+    AdmissionConfig,
+    RequestPlaneConfig,
+    serve_traffic,
+)
+
+N_STREAMS = 8
+MAX_WAIT = 0.02           # s — micro-batch flush deadline
+LOADS = (0.25, 0.5, 1.0, 2.0)
+
+
+def _plane_cfg(engine: str) -> RequestPlaneConfig:
+    return RequestPlaneConfig(
+        n_streams=N_STREAMS,
+        engine=engine,
+        max_wait=MAX_WAIT,
+        offload_capacity=N_STREAMS // 2,
+        admission=AdmissionConfig(max_queue=4 * N_STREAMS),
+    )
+
+
+def _serve_row(name: str, cfg: RequestPlaneConfig,
+               traffic: TrafficProcess) -> str:
+    arrivals = traffic.materialize()
+    t0 = time.perf_counter()
+    _, _, summary = serve_traffic(cfg, arrivals, jax.random.PRNGKey(11))
+    us = (time.perf_counter() - t0) * 1e6 / traffic.n_arrivals
+    return (f"{name},{us:.0f},"
+            f"served_cost={summary['avg_offload_cost']:.4f},"
+            f"true_cost={summary['avg_true_cost']:.4f},"
+            f"offload_rate={summary['offload_rate']:.3f},"
+            f"deny_rate={summary['deny_rate']:.3f},"
+            f"drop_rate={summary['drop_rate']:.3f},"
+            f"p50_latency_ms={summary['p50_latency_ms']:.2f},"
+            f"p95_latency_ms={summary['p95_latency_ms']:.2f},"
+            f"p99_latency_ms={summary['p99_latency_ms']:.2f}")
+
+
+def run(quick: bool = False, engine: str = "fused") -> List[str]:
+    rows = []
+    n_arrivals = 512 if quick else 4096
+    service_rate = N_STREAMS / MAX_WAIT      # nominal plane capacity, req/s
+    cfg = _plane_cfg(engine)
+    for x in LOADS:
+        traffic = TrafficProcess(
+            process="poisson", rate=x * service_rate,
+            n_arrivals=n_arrivals, n_sessions=N_STREAMS,
+            key=jax.random.PRNGKey(5))
+        rows.append(_serve_row(f"request_plane_poisson_x{x:g}", cfg, traffic))
+    traffic = TrafficProcess(
+        process="mmpp", rate=service_rate, burst_rate=4.0 * service_rate,
+        n_arrivals=n_arrivals, n_sessions=N_STREAMS,
+        key=jax.random.PRNGKey(5))
+    rows.append(_serve_row("request_plane_mmpp_x1", cfg, traffic))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -28,7 +28,7 @@ def run(quick: bool = False, engine: str = "fused",
         scenario: str = "") -> List[str]:
     rows = []
     names = [n for n in scenario.split(",") if n] or sorted(
-        available_scenarios())
+        available_scenarios(synthetic_only=True))
     horizon = 2048 if quick else 16_384
     block = 256 if quick else 1024
     n_streams = 8

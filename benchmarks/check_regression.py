@@ -8,8 +8,12 @@ the baseline must be reproduced by the current run within a relative
 tolerance (default ±10%, with a small absolute floor so near-zero metrics
 don't demand infinite precision). Timing is machine-dependent and never
 compared — neither `us_per_call` nor derived metrics named like timings
-(`us_*`/`*_us`, `wall_s`, `*speedup*`; see `is_timing_metric`). Benchmarks
-present in the current run but
+(`us_*`/`*_us`, `wall_s`, `*speedup*`; see `is_timing_metric`). Latency
+percentiles (`p50_*`/`p95_*`/`p99_*`; see `is_latency_metric`) are likewise
+informational: the request-plane rows report them in simulated link time,
+which is configuration-shaped rather than behavioral. Rates with a zero
+baseline (e.g. `deny_rate` below capacity) are still gated, via the
+absolute floor. Benchmarks present in the current run but
 missing from the baseline are reported informationally — commit a refreshed
 baseline (`--update`) to start tracking them.
 
@@ -52,6 +56,18 @@ def is_timing_metric(key: str) -> bool:
     )
 
 
+def is_latency_metric(key: str) -> bool:
+    """Streaming latency percentiles, never gated.
+
+    The request-plane benchmark exports `p50_*`/`p95_*`/`p99_*` quantiles of
+    simulated request latency; they shift with any retuning of the link or
+    deadline configuration without implying a behavioral regression, so the
+    gate tracks them informationally and gates the cost/rate metrics
+    alongside them instead.
+    """
+    return key.startswith(("p50_", "p95_", "p99_"))
+
+
 def compare(
     current: Dict,
     baseline: Dict,
@@ -76,7 +92,8 @@ def compare(
             failures.append(f"{name}: current run errored")
             continue
         for key, bval in sorted(brec.get("metrics", {}).items()):
-            if key in SKIP_METRICS or is_timing_metric(key):
+            if (key in SKIP_METRICS or is_timing_metric(key)
+                    or is_latency_metric(key)):
                 continue
             if not isinstance(bval, (int, float)) or isinstance(bval, bool):
                 continue

@@ -14,6 +14,9 @@ configuration, matching the paper's artifacts:
     regret  Theorem-2 empirical regret growth + slope
     kernels attention/SSD oracle microbenchmarks
     drift   BEYOND-PAPER: discounted-hedge adaptation under mid-stream shift
+    request_plane BEYOND-PAPER: async request plane offered-load sweep
+              (ingress → micro-batch → decide → compact → feedback with
+              live-β estimation, virtual-clock deterministic)
     multiclass BEYOND-PAPER: online K-class HI via learned risk threshold (paper §6)
     scenarios BEYOND-PAPER: cost/regret across the ScenarioSource registry
               (chunked engine runs; --scenario restricts the sweep)
@@ -44,6 +47,7 @@ from benchmarks import (
     bench_fig10,
     bench_kernels,
     bench_regret,
+    bench_request_plane,
     bench_scenarios,
 )
 
@@ -59,6 +63,7 @@ MODULES = {
     "multiclass": bench_multiclass,
     "scenarios": bench_scenarios,
     "adaptive": bench_adaptive,
+    "request_plane": bench_request_plane,
 }
 
 

@@ -33,6 +33,9 @@ Registered scenarios:
                    are drawn from the RDL's own confusion spec while the
                    true labels stay in `ys` for simulation-grade accounting.
   "hetero_fleet" — per-stream dataset/model specs stacked into one fleet.
+  "replay"       — playback of an explicit recorded (S, T) trace, e.g. the
+                   request plane's per-round log, so online serving runs
+                   can be replayed through the offline drivers exactly.
 """
 from __future__ import annotations
 
@@ -78,8 +81,12 @@ def register_scenario(name: str):
     return deco
 
 
-def available_scenarios() -> Tuple[str, ...]:
-    return tuple(_SCENARIOS)
+def available_scenarios(synthetic_only: bool = False) -> Tuple[str, ...]:
+    """Registered scenario names; `synthetic_only=True` keeps only sources
+    constructible from (n_streams, horizon, key) alone — generic sweeps use
+    this to skip data-backed sources like `replay`."""
+    return tuple(n for n, cls in _SCENARIOS.items()
+                 if not synthetic_only or cls.synthetic)
 
 
 def get_scenario(name: str, **opts) -> "ScenarioSource":
@@ -137,6 +144,10 @@ class ScenarioSource:
 
     name = "abstract"
     BETA_MODES = ("fixed", "uniform")
+    #: True when the source can be built from (n_streams, horizon, key)
+    #: alone — what generic sweeps (bench_scenarios) require. Data-backed
+    #: sources (replay) set this False and need explicit arrays.
+    synthetic = True
 
     def __init__(self, n_streams: int = 1, horizon: int = 10_000,
                  block: Optional[int] = None, key: Optional[jax.Array] = None,
@@ -307,6 +318,42 @@ class NoisyRDLSource(ScenarioSource):
         flip = jnp.where(y == 1, u < self.rdl_fn, u < self.rdl_fp)
         hr = jnp.where(flip, 1 - y, y).astype(jnp.int32)
         return f, hr, y, self._draw_betas(kt, t)
+
+
+@register_scenario("replay")
+class ReplaySource(ScenarioSource):
+    """Playback of an explicit recorded trace.
+
+    Wraps given (S, T) arrays as a chunked source so a trace captured
+    elsewhere — the request plane's per-round record, a saved materialized
+    batch, real measurements — runs through every source-driven driver
+    (`HIServer.run_source`, `engine.run_source`) unchanged. Emission is a
+    `dynamic_slice` of the held arrays: trivially chunk-invariant, and the
+    `key` only matters to the *driver*'s policy draws, not the data.
+    """
+
+    synthetic = False
+
+    def __init__(self, fs, hrs, ys, betas, block: Optional[int] = None,
+                 key: Optional[jax.Array] = None):
+        fs = jnp.asarray(fs, jnp.float32)
+        hrs = jnp.asarray(hrs, jnp.int32)
+        ys = jnp.asarray(ys, jnp.int32)
+        betas = jnp.asarray(betas, jnp.float32)
+        if fs.ndim != 2 or not all(
+                a.shape == fs.shape for a in (hrs, ys, betas)):
+            raise ValueError(
+                "replay arrays must share one (n_streams, horizon) shape; "
+                f"got fs={fs.shape}, hrs={hrs.shape}, ys={ys.shape}, "
+                f"betas={betas.shape}")
+        super().__init__(n_streams=fs.shape[0], horizon=fs.shape[1],
+                         block=block, key=key)
+        self.trace = SlotBatch(fs=fs, hrs=hrs, ys=ys, betas=betas)
+
+    def emit(self, state, key, slot):
+        cut = lambda a: jax.lax.dynamic_slice_in_dim(
+            a, slot * self.block, self.block, axis=1)
+        return state, SlotBatch(*(cut(a) for a in self.trace))
 
 
 @register_scenario("beta_process")

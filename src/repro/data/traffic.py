@@ -1,0 +1,183 @@
+"""Seeded open-loop traffic: arrival processes for the request plane.
+
+Where `scenarios.py` generates *slot-synchronous* workloads ((S, block)
+per emit), this module generates *asynchronous* ones: a single timeline of
+per-request arrivals — interarrival gap, session id, LDL confidence, remote
+label, ground truth, payload size — that the request-plane ingress replays
+on the virtual clock (`serving.request_plane.serve_traffic`).
+
+Two processes:
+
+  "poisson" — memoryless arrivals at `rate` req/s, the open-loop baseline.
+  "mmpp"    — Markov-modulated Poisson: a two-state chain (calm at `rate`,
+              bursty at `burst_rate`, stepped once per arrival with
+              p_burst/p_calm) — the arrival-side analogue of the
+              `beta_process` bursty regime, for testing admission under
+              load spikes.
+
+Chunk-invariance contract (the `ScenarioSource` bit-identity contract,
+restated for arrivals): every draw for absolute arrival i comes from
+`fold_in(domain-separated key, i)` with a purpose tag per draw, and the
+only carried state (the MMPP regime) threads through `emit`. The trace is
+bit-identical for ANY chunk size, and `materialize()` is exactly the
+concatenation of the chunks — so a load sweep is reproducible no matter
+how the driver batches generation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.scenarios import SpecLike, _as_params, _trunc_normal
+
+# Purpose tags for the per-arrival key (one per draw; disjoint streams).
+_A_GAP, _A_SESSION, _A_Y, _A_F1, _A_F0, _A_RDL, _A_PAYLOAD, _A_REGIME = \
+    range(8)
+# Domain separator: traffic draws stay disjoint from scenario draws and the
+# policy's `source_slot_keys` tree even under one shared base key.
+_T_DOMAIN = 0xA77A1F
+
+PROCESSES = ("poisson", "mmpp")
+
+
+class ArrivalBatch(NamedTuple):
+    """One emitted chunk of the arrival timeline; every leaf is (chunk,)."""
+
+    gaps: jnp.ndarray      # interarrival seconds (float32)
+    sessions: jnp.ndarray  # session ids in [0, n_sessions) (int32)
+    fs: jnp.ndarray        # LDL confidences in (0, 1) (float32)
+    hrs: jnp.ndarray       # labels the remote model would return (int32)
+    ys: jnp.ndarray        # ground truth (int32)
+    payloads: jnp.ndarray  # request payload bytes (float32)
+
+
+class TrafficProcess:
+    """Seed-threaded arrival-process generator (chunked, chunk-invariant).
+
+    Confidences/labels come from the same calibrated Table 2/3 `spec`
+    machinery the scenarios use; `rdl_fn`/`rdl_fp` optionally decouple the
+    remote label from ground truth (the `noisy_rdl` mismatch, per-request).
+    Payloads jitter uniformly within ±`payload_jitter` of `payload_bytes`.
+    """
+
+    def __init__(self, process: str = "poisson", rate: float = 100.0,
+                 n_arrivals: int = 1024, n_sessions: int = 16,
+                 chunk: Optional[int] = None,
+                 key: Optional[jax.Array] = None,
+                 spec: SpecLike = "synthetic",
+                 burst_rate: Optional[float] = None,
+                 p_burst: float = 0.05, p_calm: float = 0.2,
+                 payload_bytes: float = 4096.0, payload_jitter: float = 0.5,
+                 rdl_fn: float = 0.0, rdl_fp: float = 0.0):
+        chunk = n_arrivals if chunk is None else chunk
+        if process not in PROCESSES:
+            raise ValueError(f"unknown process {process!r}; expected one of "
+                             f"{PROCESSES}")
+        if rate <= 0:
+            raise ValueError(f"rate must be positive (got {rate})")
+        if n_arrivals < 1 or chunk < 1 or n_arrivals % chunk:
+            raise ValueError(
+                f"n_arrivals {n_arrivals} must be a positive multiple of "
+                f"the chunk size {chunk}")
+        if n_sessions < 1:
+            raise ValueError(f"n_sessions must be ≥ 1 (got {n_sessions})")
+        if not 0.0 <= payload_jitter <= 1.0:
+            raise ValueError(
+                f"payload_jitter must lie in [0, 1] (got {payload_jitter})")
+        if not (0.0 <= rdl_fn < 1.0 and 0.0 <= rdl_fp < 1.0):
+            raise ValueError(
+                f"RDL error rates must lie in [0, 1): fn={rdl_fn}, fp={rdl_fp}")
+        self.process = process
+        self.rate = float(rate)
+        self.burst_rate = float(4.0 * rate if burst_rate is None
+                                else burst_rate)
+        if self.burst_rate <= 0:
+            raise ValueError(
+                f"burst_rate must be positive (got {self.burst_rate})")
+        self.p_burst, self.p_calm = float(p_burst), float(p_calm)
+        self.n_arrivals = int(n_arrivals)
+        self.chunk = int(chunk)
+        self.n_sessions = int(n_sessions)
+        self.key = jax.random.PRNGKey(0) if key is None else key
+        self.params = _as_params(spec)
+        self.payload_bytes = float(payload_bytes)
+        self.payload_jitter = float(payload_jitter)
+        self.rdl_fn, self.rdl_fp = float(rdl_fn), float(rdl_fp)
+
+    @property
+    def n_chunks(self) -> int:
+        return self.n_arrivals // self.chunk
+
+    def init_state(self):
+        """Generator carry; the MMPP regime (0 calm / 1 burst), else ()."""
+        if self.process == "mmpp":
+            return jnp.zeros((), jnp.int32)
+        return ()
+
+    def _request(self, ki: jax.Array):
+        """Everything about one arrival except its timing."""
+        p = self.params
+        session = jax.random.randint(
+            jax.random.fold_in(ki, _A_SESSION), (), 0, self.n_sessions,
+            jnp.int32)
+        y = jax.random.bernoulli(
+            jax.random.fold_in(ki, _A_Y), p["p1"], ()).astype(jnp.int32)
+        f1 = _trunc_normal(jax.random.fold_in(ki, _A_F1),
+                           p["mu1"], p["sigma1"], ())
+        f0 = _trunc_normal(jax.random.fold_in(ki, _A_F0),
+                           p["mu0"], p["sigma0"], ())
+        f = jnp.where(y == 1, f1, f0).astype(jnp.float32)
+        u = jax.random.uniform(jax.random.fold_in(ki, _A_RDL), ())
+        flip = jnp.where(y == 1, u < self.rdl_fn, u < self.rdl_fp)
+        hr = jnp.where(flip, 1 - y, y).astype(jnp.int32)
+        uj = jax.random.uniform(jax.random.fold_in(ki, _A_PAYLOAD), (),
+                                minval=-1.0, maxval=1.0)
+        payload = (self.payload_bytes
+                   * (1.0 + self.payload_jitter * uj)).astype(jnp.float32)
+        return session, f, hr, y, payload
+
+    def _gap(self, ki: jax.Array, rate) -> jnp.ndarray:
+        u = jax.random.uniform(jax.random.fold_in(ki, _A_GAP), (),
+                               minval=1e-12, maxval=1.0)
+        return (-jnp.log(u) / rate).astype(jnp.float32)
+
+    def emit(self, state, key: jax.Array, chunk_idx) -> Tuple[object,
+                                                              ArrivalBatch]:
+        """Emit chunk `chunk_idx` of the timeline; leaves (chunk,)."""
+        key = jax.random.fold_in(key, _T_DOMAIN)
+        idx = (chunk_idx * self.chunk
+               + jnp.arange(self.chunk, dtype=jnp.int32))
+        if self.process == "poisson":
+            def one(i):
+                ki = jax.random.fold_in(key, i)
+                return (self._gap(ki, self.rate),) + self._request(ki)
+
+            gap, session, f, hr, y, payload = jax.vmap(one)(idx)
+            return state, ArrivalBatch(gap, session, f, hr, y, payload)
+
+        def one(regime, i):
+            ki = jax.random.fold_in(key, i)
+            u = jax.random.uniform(jax.random.fold_in(ki, _A_REGIME), ())
+            regime = jnp.where(regime == 1,
+                               (u >= self.p_calm).astype(jnp.int32),
+                               (u < self.p_burst).astype(jnp.int32))
+            rate = jnp.where(regime == 1, self.burst_rate, self.rate)
+            return regime, (self._gap(ki, rate),) + self._request(ki)
+
+        state, (gap, session, f, hr, y, payload) = jax.lax.scan(
+            one, state, idx)
+        return state, ArrivalBatch(gap, session, f, hr, y, payload)
+
+    def materialize(self, key: Optional[jax.Array] = None) -> ArrivalBatch:
+        """All chunks concatenated into one (n_arrivals,) ArrivalBatch."""
+        key = self.key if key is None else key
+
+        def step(st, c):
+            return self.emit(st, key, c)
+
+        _, batches = jax.lax.scan(step, self.init_state(),
+                                  jnp.arange(self.n_chunks))
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape(self.n_arrivals), batches)

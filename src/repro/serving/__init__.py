@@ -12,6 +12,11 @@ and applies slot t's RDL results as feedback at slot t+1 (double-buffered).
 Both the engines and the servers also consume `ScenarioSource`s directly
 (`engine.run_source`, `HIServer.run_source`): the workload is pulled one
 slot block at a time, so a fleet horizon never materializes on the host.
+
+`request_plane/` is the asynchronous front half: per-session ingress with
+admission control, deadline micro-batching into the same decide/compact/
+feedback flow, and live β from measured link transfers — see
+`repro.serving.request_plane`.
 """
 from repro.serving.batching import OffloadBatch, compact_offloads, scatter_results
 from repro.serving.engine import Engine, EngineConfig, classifier_fn
@@ -21,6 +26,7 @@ from repro.serving.hi_server import (
     HIServerState,
     PendingFeedback,
     SlotResult,
+    rotated_compact,
 )
 from repro.serving.policy_engine import (
     AdaptiveEngine,
@@ -40,5 +46,5 @@ __all__ = [
     "HIServerState", "OffloadBatch", "PendingFeedback", "PolicyEngine",
     "ReferenceEngine", "ShardedEngine", "SlotResult", "available_engines",
     "classifier_fn", "compact_offloads", "get_engine", "register_engine",
-    "scatter_results",
+    "rotated_compact", "scatter_results",
 ]

@@ -123,8 +123,8 @@ class HIServerState(NamedTuple):
     pending: Optional[PendingFeedback]   # None until the first slot completes
 
 
-def _rotated_compact(payload: jnp.ndarray, offload: jnp.ndarray,
-                     capacity: int, t) -> "OffloadBatch":
+def rotated_compact(payload: jnp.ndarray, offload: jnp.ndarray,
+                    capacity: int, t) -> "OffloadBatch":
     """Compact offloaded rows into one RDL batch, rotating the drop priority.
 
     Compaction keeps the first `capacity` offloads in order, which would
@@ -132,7 +132,8 @@ def _rotated_compact(payload: jnp.ndarray, offload: jnp.ndarray,
     drops are possible, rotate the start index by the slot count `t` so they
     share the pain. At full capacity rotation cannot change the outcome, so
     skip its gathers on the hot path. Shared by the token-serving
-    `serve_slot` and the source-serving scan so both drop identically.
+    `serve_slot`, the source-serving scan, and the request plane's
+    micro-batcher so all three drop identically.
     """
     s = payload.shape[0]
     if capacity >= s:
@@ -141,6 +142,17 @@ def _rotated_compact(payload: jnp.ndarray, offload: jnp.ndarray,
     batch = compact_offloads(payload[rot], offload[rot], capacity)
     return batch._replace(src=jnp.where(
         batch.valid, rot[batch.src], -1).astype(jnp.int32))
+
+
+def _looks_like_prng_key(x) -> bool:
+    """Whether `x` is plausibly a JAX PRNG key (typed key array, or the raw
+    uint32 (2,) representation) rather than, say, a (T, S) beta matrix."""
+    dtype = getattr(x, "dtype", None)
+    if dtype is None:
+        return False
+    if jnp.issubdtype(dtype, jax.dtypes.prng_key):
+        return True
+    return dtype == jnp.uint32 and getattr(x, "shape", None) == (2,)
 
 
 class _ServeCounters(NamedTuple):
@@ -215,7 +227,7 @@ class HIServer:
         decision = self.engine.decide(policy, fs, keys)
         # Phase 2: compact ONLY the offloaded samples into one RDL batch
         # (rotating the drop priority when capacity can overflow).
-        batch = _rotated_compact(tokens, decision.offload, cap, state.t)
+        batch = rotated_compact(tokens, decision.offload, cap, state.t)
         n_valid = int(jnp.sum(batch.valid))
         if n_valid:
             labels = self.rdl(batch.tokens).astype(jnp.int32)     # (C,)
@@ -274,7 +286,7 @@ class HIServer:
             # Phase 2: offload-only RDL batch over the remote labels; the
             # per-slot payload is the (S, 1) label column, so compaction,
             # capacity, and rotation behave exactly as with real tokens.
-            batch = _rotated_compact(hr[:, None], dec.offload, cap, t)
+            batch = rotated_compact(hr[:, None], dec.offload, cap, t)
             labels = batch.tokens[:, 0]            # the RDL lookup
             hrs_back = scatter_results(labels, batch, s, fill=0)
             sent = scatter_results(
@@ -518,13 +530,31 @@ class HIServer:
         betas: jnp.ndarray = None,   # (T, S)
         key: jax.Array = None,
     ) -> Tuple[HIServerState, Dict[str, float]]:
+        """Serve end to end in either of two explicit forms:
+
+          run(source, key)             — ScenarioSource-driven (key may be
+                                         positional or keyword)
+          run(tokens, betas, key)      — array-driven replay
+
+        The source form verifies that a positional second argument actually
+        looks like a PRNG key instead of silently reinterpreting whatever
+        landed in the `betas` slot.
+        """
         if isinstance(token_stream, ScenarioSource):
-            if key is None and betas is not None:
-                betas, key = None, betas  # the run(source, key) positional form
             if betas is not None:
-                raise TypeError(
-                    "HIServer.run(source, ...) takes no betas — the source "
-                    "generates them")
+                if key is not None:
+                    raise TypeError(
+                        "HIServer.run(source, ...) takes no betas — the "
+                        "source generates them (got both a second "
+                        "positional argument and key=)")
+                if not _looks_like_prng_key(betas):
+                    raise TypeError(
+                        "HIServer.run(source, key) expected a PRNG key as "
+                        "the second argument, got "
+                        f"{type(betas).__name__} with shape "
+                        f"{getattr(betas, 'shape', None)} — the source "
+                        "generates its own betas")
+                key = betas
             return self.run_source(token_stream, key)
         if betas is None or key is None:
             raise TypeError("HIServer.run(token_stream, betas, key) needs "

@@ -1,0 +1,44 @@
+"""Async request plane: the served front half of the system.
+
+Concurrent per-session requests enter through `RequestPlane.submit`
+(admission → slot lease), coalesce in the `MicroBatcher` into fleet-wide
+`decide` rounds, route offloads through the same rotating compaction and
+delayed feedback as `HIServer`, and price every offload with a live β from
+`NetworkEstimator` over measured link transfers — replacing the
+generator-supplied β of trace replay end to end. Everything runs on
+`VirtualTimeLoop` simulated time under test and benchmark, so a fixed seed
+produces the identical summary.
+"""
+from repro.serving.request_plane.admission import (   # noqa: F401
+    REASON_NO_SLOT,
+    REASON_QUEUE_FULL,
+    REASON_RATE_LIMITED,
+    AdmissionConfig,
+    AdmissionController,
+)
+from repro.serving.request_plane.ingress import (     # noqa: F401
+    RequestPlane,
+    RequestPlaneConfig,
+    SessionTable,
+    VirtualTimeLoop,
+    run_virtual,
+    serve_traffic,
+)
+from repro.serving.request_plane.metrics import (     # noqa: F401
+    Counter,
+    Gauge,
+    Metrics,
+    P2Quantile,
+    Quantiles,
+)
+from repro.serving.request_plane.microbatch import (  # noqa: F401
+    MicroBatcher,
+    PlaneResult,
+    Request,
+)
+from repro.serving.request_plane.netem import (       # noqa: F401
+    EstimatorConfig,
+    LinkConfig,
+    NetworkEstimator,
+    SimulatedLink,
+)

@@ -1,0 +1,100 @@
+"""Admission control: token-bucket rate limiting + queue-depth shedding.
+
+The compactor's rotating drop (`serving.hi_server.rotated_compact`) already
+bounds the *RDL batch*; admission bounds the *queue in front of the
+batcher*, which is what actually blows up tail latency under sustained
+overload — an admitted request waits O(queue/throughput) micro-batch rounds
+before it is even decided. Denial is graceful degradation, never an error:
+the ingress answers a denied request immediately with a local-only fallback
+prediction (`RequestPlane`), so callers always get a classification.
+
+Every denial increments a per-reason counter (`denied_{reason}`) plus the
+`denied_total` aggregate, so the overload invariant is checkable exactly:
+
+    requests_total == admitted_total + denied_total
+    fallback_total == denied_total + capacity_dropped
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.request_plane.metrics import Metrics
+
+#: Denial reasons (the `denied_{reason}` counter suffixes).
+REASON_QUEUE_FULL = "queue_full"
+REASON_RATE_LIMITED = "rate_limited"
+REASON_NO_SLOT = "no_slot"
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Token bucket (`rate` tokens/s, `burst` capacity) + queue-depth cap.
+
+    `rate=None` disables rate limiting; `max_queue=None` disables depth
+    shedding (`enabled=False` disables both). The depth cap is the one that
+    bounds p99 at saturation: with `max_queue=Q` and per-round service of S
+    requests, an admitted request waits at most ~⌈Q/S⌉ + 1 micro-batch
+    deadlines before its decide round.
+    """
+
+    rate: Optional[float] = None   # sustained requests/s; None → unlimited
+    burst: float = 32.0            # bucket capacity (peak admissions)
+    max_queue: Optional[int] = None  # batcher queue-depth cap; None → unbounded
+    enabled: bool = True
+
+    def __post_init__(self):
+        if self.rate is not None and self.rate <= 0:
+            raise ValueError(f"rate must be positive (got {self.rate})")
+        if self.burst <= 0:
+            raise ValueError(f"burst must be positive (got {self.burst})")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be ≥ 1 (got {self.max_queue}); use None "
+                "for unbounded")
+
+
+class AdmissionController:
+    """Clock-driven admission decisions with per-reason accounting.
+
+    `admit(now, queue_depth)` returns None to admit or a denial-reason
+    string; the caller owns the clock (the event loop's time — virtual
+    under test), so the controller itself never reads wall time.
+    """
+
+    def __init__(self, cfg: AdmissionConfig, metrics: Metrics):
+        self.cfg = cfg
+        self.metrics = metrics
+        self._tokens = float(cfg.burst)
+        self._last = None  # type: Optional[float]
+
+    def _refill(self, now: float) -> None:
+        if self.cfg.rate is None:
+            return
+        if self._last is not None and now > self._last:
+            self._tokens = min(self.cfg.burst,
+                               self._tokens + (now - self._last) * self.cfg.rate)
+        self._last = now
+
+    def admit(self, now: float, queue_depth: int) -> Optional[str]:
+        """None = cleared to proceed (consumes a token); otherwise the
+        denial reason. The ingress owns `admitted_total` — it increments it
+        only once the slot lease also succeeds, so a later `no_slot` denial
+        is never double-counted as admitted."""
+        if not self.cfg.enabled:
+            return None
+        self._refill(now)
+        if (self.cfg.max_queue is not None
+                and queue_depth >= self.cfg.max_queue):
+            return self.deny(REASON_QUEUE_FULL)
+        if self.cfg.rate is not None:
+            if self._tokens < 1.0:
+                return self.deny(REASON_RATE_LIMITED)
+            self._tokens -= 1.0
+        return None
+
+    def deny(self, reason: str) -> str:
+        """Record a denial (also used by the ingress for `no_slot`)."""
+        self.metrics.counter(f"denied_{reason}").inc()
+        self.metrics.counter("denied_total").inc()
+        return reason

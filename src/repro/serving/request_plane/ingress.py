@@ -1,0 +1,328 @@
+"""Session ingress on a virtual clock: requests in, predictions out.
+
+Three layers, composed by `RequestPlane`:
+
+  `VirtualTimeLoop` — an asyncio event loop whose clock is a number we
+      advance, not the wall. When no callback is ready it jumps straight to
+      the next timer, so a multi-hour traffic trace with thousands of
+      `asyncio.sleep`s runs in milliseconds AND deterministically: the same
+      seed yields the identical interleaving, hence the identical summary.
+      (The tier-1 suite runs entirely on this loop — no wall-clock sleeps.)
+  `SessionTable` — maps user sessions onto the fleet's fixed S stream
+      slots: free-list lease, LRU reclaim of idle sessions, pin counts so a
+      slot with requests in flight is never reassigned under them.
+  `RequestPlane` — per-request flow: admission (deny → immediate local
+      fallback prediction, never an error) → slot lease → micro-batcher
+      enqueue → await the decide/offload future → release.
+
+`serve_traffic` is the open-loop driver the benchmark and tests share: it
+replays a seeded `ArrivalBatch` (`repro.data.traffic`) against a plane on
+the virtual clock.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import heapq
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.types import HIConfig
+from repro.serving.policy_engine import get_engine
+from repro.serving.request_plane.admission import (
+    REASON_NO_SLOT,
+    AdmissionConfig,
+    AdmissionController,
+)
+from repro.serving.request_plane.metrics import Metrics
+from repro.serving.request_plane.microbatch import (
+    MicroBatcher,
+    PlaneResult,
+    Request,
+    account_outcome,
+)
+from repro.serving.request_plane.netem import (
+    EstimatorConfig,
+    LinkConfig,
+    NetworkEstimator,
+    SimulatedLink,
+)
+
+
+class VirtualTimeLoop(asyncio.SelectorEventLoop):
+    """Event loop on simulated time.
+
+    `time()` reads a virtual clock that only moves when the loop would
+    otherwise block: with no ready callbacks, `_run_once` advances the
+    clock to the earliest scheduled timer, which then fires with a zero
+    selector timeout. Callback ordering is untouched asyncio semantics, so
+    code under test runs unmodified — `asyncio.sleep`, `loop.call_at`, and
+    `loop.time()` all behave, just without the waiting.
+
+    If the loop would block forever (nothing ready, nothing scheduled, not
+    stopping) it raises instead: on a virtual clock that state is a
+    deadlock, and a loud failure beats a hung test.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._vt_now = 0.0
+
+    def time(self) -> float:
+        return self._vt_now
+
+    def _run_once(self):
+        # Drop cancelled timers from the heap head first (mirroring the
+        # base loop's bookkeeping) so we never advance to a dead deadline.
+        while self._scheduled and self._scheduled[0]._cancelled:
+            self._timer_cancelled_count -= 1
+            handle = heapq.heappop(self._scheduled)
+            handle._scheduled = False
+        if not self._ready:
+            if self._scheduled:
+                when = self._scheduled[0]._when
+                if when > self._vt_now:
+                    self._vt_now = when
+            elif not self._stopping:
+                raise RuntimeError(
+                    "VirtualTimeLoop has nothing ready and nothing "
+                    "scheduled — a real loop would block forever here "
+                    "(await on a future nothing will complete?)")
+        super()._run_once()
+
+
+def run_virtual(main) -> object:
+    """`asyncio.run` on a fresh `VirtualTimeLoop`. The whole awaited tree
+    executes in simulated time; returns the coroutine's result."""
+    loop = VirtualTimeLoop()
+    try:
+        asyncio.set_event_loop(loop)
+        return loop.run_until_complete(main)
+    finally:
+        try:
+            loop.run_until_complete(loop.shutdown_asyncgens())
+        finally:
+            asyncio.set_event_loop(None)
+            loop.close()
+
+
+class SessionTable:
+    """Session → stream-slot leases with LRU reclaim.
+
+    The fleet has a fixed S; sessions come and go. A session keeps its slot
+    across requests (the H2T2 weights on that slot ARE its learned state);
+    when all slots are held, the least-recently-used session with no
+    requests in flight is evicted. A fully pinned table refuses the lease
+    (`None`) — admission turns that into a `no_slot` denial rather than
+    corrupting an active stream.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n_slots = int(n_slots)
+        self._slots: "OrderedDict[int, int]" = OrderedDict()  # session → slot
+        self._free: List[int] = list(range(self.n_slots - 1, -1, -1))
+        self._pins = [0] * self.n_slots
+        self.evictions = 0
+
+    def lease(self, session: int) -> Optional[Tuple[int, bool]]:
+        """Pin a slot for one request of `session`.
+
+        Returns (slot, evicted_other_session), or None when every slot is
+        pinned by in-flight requests. Callers must `release(slot)` exactly
+        once when the request completes.
+        """
+        evicted = False
+        if session in self._slots:
+            self._slots.move_to_end(session)
+            slot = self._slots[session]
+        elif self._free:
+            slot = self._free.pop()
+            self._slots[session] = slot
+        else:
+            victim = next((sess for sess, sl in self._slots.items()
+                           if self._pins[sl] == 0), None)
+            if victim is None:
+                return None
+            slot = self._slots.pop(victim)
+            self._slots[session] = slot
+            self.evictions += 1
+            evicted = True
+        self._pins[slot] += 1
+        return slot, evicted
+
+    def release(self, slot: int) -> None:
+        self._pins[slot] -= 1
+        assert self._pins[slot] >= 0, "unbalanced SessionTable.release"
+
+    def slot_of(self, session: int) -> Optional[int]:
+        return self._slots.get(session)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestPlaneConfig:
+    """Everything the plane needs; mirrors `HIServerConfig` where shared."""
+
+    n_streams: int = 8
+    hi: HIConfig = dataclasses.field(default_factory=HIConfig)
+    engine: str = "fused"
+    use_kernel: Optional[bool] = None
+    interpret: Optional[bool] = None
+    offload_capacity: Optional[int] = None   # RDL batch rows; None → S
+    max_batch: Optional[int] = None          # flush at this many streams; None → S
+    max_wait: float = 0.05                   # s; flush deadline after first queue
+    default_payload_bytes: float = 4096.0
+    admission: AdmissionConfig = dataclasses.field(
+        default_factory=AdmissionConfig)
+    link: LinkConfig = dataclasses.field(default_factory=LinkConfig)
+    estimator: EstimatorConfig = dataclasses.field(
+        default_factory=EstimatorConfig)
+    restart_on_reclaim: bool = False   # wipe a slot's weights on session reclaim
+    record_rounds: bool = False        # keep per-round arrays (replay parity)
+
+    def __post_init__(self):
+        if self.n_streams < 1:
+            raise ValueError(f"n_streams must be ≥ 1 (got {self.n_streams})")
+        if not (1 <= self.batch_limit <= self.n_streams):
+            raise ValueError(
+                f"max_batch must lie in [1, n_streams] "
+                f"(got {self.max_batch} with n_streams={self.n_streams})")
+        if self.capacity < 1:
+            raise ValueError(
+                f"offload_capacity must be ≥ 1 (got {self.offload_capacity})")
+        if self.max_wait <= 0:
+            raise ValueError(f"max_wait must be positive (got {self.max_wait})")
+
+    @property
+    def capacity(self) -> int:
+        return (self.n_streams if self.offload_capacity is None
+                else self.offload_capacity)
+
+    @property
+    def batch_limit(self) -> int:
+        return self.n_streams if self.max_batch is None else self.max_batch
+
+
+class RequestPlane:
+    """The served system: ingress → micro-batch → decide → compact →
+    transfer → (delayed) feedback, with admission in front and live β from
+    the network estimator closing the loop."""
+
+    def __init__(self, cfg: RequestPlaneConfig, key: Optional[jax.Array] = None):
+        self.cfg = cfg
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        self.metrics = Metrics()
+        self.admission = AdmissionController(cfg.admission, self.metrics)
+        self.sessions = SessionTable(cfg.n_streams)
+        self.link = SimulatedLink(cfg.link)
+        self.estimator = NetworkEstimator(cfg.estimator, cfg.n_streams)
+        engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret,
+                            use_kernel=cfg.use_kernel)
+        self.batcher = MicroBatcher(
+            hi=cfg.hi, engine=engine, n_streams=cfg.n_streams,
+            capacity=cfg.capacity, max_batch=cfg.batch_limit,
+            max_wait=cfg.max_wait, link=self.link, estimator=self.estimator,
+            metrics=self.metrics, key=key,
+            record_rounds=cfg.record_rounds)
+
+    async def submit(self, session: int, f: float, hr: int, y: int = -1,
+                     payload_bytes: Optional[float] = None) -> PlaneResult:
+        """Classify one request for `session`. Always resolves to a
+        `PlaneResult` — denied or capacity-dropped requests degrade to the
+        local-only prediction instead of erroring."""
+        loop = asyncio.get_running_loop()
+        now = loop.time()
+        self.metrics.counter("requests_total").inc()
+        reason = self.admission.admit(now, self.batcher.queue_depth)
+        lease = None
+        if reason is None:
+            lease = self.sessions.lease(session)
+            if lease is None:
+                reason = self.admission.deny(REASON_NO_SLOT)
+                # The rate token is spent; under a full-pinned table that
+                # is the conservative direction (sheds harder, not softer).
+        if reason is not None:
+            pred = 1 if f >= 0.5 else 0
+            self.metrics.counter("fallback_total").inc()
+            account_outcome(self.metrics, self.cfg.hi, pred, y, 0.0)
+            return PlaneResult(pred=pred, denied=True, reason=reason)
+        slot, evicted = lease
+        self.metrics.counter("admitted_total").inc()
+        if evicted:
+            self.metrics.counter("slot_reclaims").inc()
+            if self.cfg.restart_on_reclaim:
+                self.batcher.restart_stream(slot)
+        req = Request(
+            session=int(session), stream=slot, f=float(f), hr=int(hr),
+            y=int(y),
+            payload_bytes=float(self.cfg.default_payload_bytes
+                                if payload_bytes is None else payload_bytes),
+            t_arrival=now)
+        try:
+            return await self.batcher.enqueue(req)
+        finally:
+            self.sessions.release(slot)
+
+    async def drain(self) -> None:
+        """Finish every queued request, transfer, and feedback round."""
+        await self.batcher.drain()
+
+    def summary(self) -> Dict[str, float]:
+        """The metrics snapshot plus the derived rates the benchmark rows
+        and acceptance checks consume. Deterministic for a fixed seed."""
+        snap = self.metrics.snapshot()
+        n = max(snap.get("requests_total", 0.0), 1.0)
+        labeled = max(snap.get("labeled_total", 0.0), 1.0)
+        snap["deny_rate"] = snap.get("denied_total", 0.0) / n
+        snap["offload_rate"] = snap.get("completed_remote", 0.0) / n
+        snap["drop_rate"] = snap.get("capacity_dropped", 0.0) / n
+        snap["avg_offload_cost"] = snap.get("observed_cost", 0.0) / n
+        snap["avg_true_cost"] = snap.get("true_cost", 0.0) / labeled
+        snap["accuracy"] = snap.get("correct_total", 0.0) / labeled
+        snap["session_evictions"] = float(self.sessions.evictions)
+        return snap
+
+
+async def _drive(plane: RequestPlane, arrivals) -> List[PlaneResult]:
+    """Open-loop replay: submit each arrival at its virtual timestamp
+    without waiting for earlier completions (they overlap, as in a real
+    front-end)."""
+    loop = asyncio.get_running_loop()
+    gaps = np.asarray(arrivals.gaps, np.float64)
+    sessions = np.asarray(arrivals.sessions)
+    fs = np.asarray(arrivals.fs, np.float64)
+    hrs = np.asarray(arrivals.hrs)
+    ys = np.asarray(arrivals.ys)
+    payloads = np.asarray(arrivals.payloads, np.float64)
+    times = np.cumsum(gaps)
+    t0 = loop.time()
+    tasks = []
+    for i in range(times.shape[0]):
+        dt = t0 + times[i] - loop.time()
+        if dt > 0:
+            await asyncio.sleep(dt)
+        tasks.append(loop.create_task(plane.submit(
+            session=int(sessions[i]), f=float(fs[i]), hr=int(hrs[i]),
+            y=int(ys[i]), payload_bytes=float(payloads[i]))))
+    results = await asyncio.gather(*tasks)
+    await plane.drain()
+    return list(results)
+
+
+def serve_traffic(
+    cfg: RequestPlaneConfig,
+    arrivals,                       # ArrivalBatch (repro.data.traffic)
+    key: Optional[jax.Array] = None,
+) -> Tuple[RequestPlane, List[PlaneResult], Dict[str, float]]:
+    """Serve one seeded traffic trace end to end on the virtual clock.
+
+    Returns (plane, per-request results in arrival order, summary). Fully
+    deterministic: the trace is seed-threaded, the link is seeded, and the
+    loop is virtual — the same inputs produce the identical summary dict.
+    """
+    plane = RequestPlane(cfg, key)
+    results = run_virtual(_drive(plane, arrivals))
+    return plane, results, plane.summary()

@@ -1,0 +1,198 @@
+"""Lightweight metrics for the request plane: counters, gauges, and
+streaming latency quantiles.
+
+The registry is deliberately tiny and dependency-free — the request plane
+runs inside an asyncio event loop where a heavyweight metrics client would
+dominate the micro-batch cadence. Quantiles use the P² (piecewise-parabolic)
+streaming estimator [Jain & Chlamtac 1985]: O(1) memory per tracked
+quantile, fully deterministic (no sampling), which keeps the virtual-clock
+contract that the same seed produces the identical exported summary.
+
+Everything exports through `Metrics.snapshot()` as one flat name → float
+dict, the shape the server summary and the benchmark rows consume.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Dict, List, Tuple
+
+
+class Counter:
+    """Monotone accumulator (counts or cost sums)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+
+class Gauge:
+    """Last-write-wins instantaneous value (queue depth, β estimate)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+
+class P2Quantile:
+    """Streaming quantile via the P² algorithm: five markers whose heights
+    track (min, q/2, q, (1+q)/2, max) with parabolic height adjustment.
+
+    Exact for the first five observations (sorted buffer); afterwards O(1)
+    per observation. Deterministic — repeated runs over the same sample
+    sequence produce bit-identical estimates.
+    """
+
+    __slots__ = ("q", "_heights", "_pos", "_count", "_init")
+
+    def __init__(self, q: float):
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must lie in (0, 1), got {q}")
+        self.q = q
+        self._init: List[float] = []
+        self._heights: List[float] = []
+        self._pos: List[float] = []
+        self._count = 0
+
+    def observe(self, x: float) -> None:
+        self._count += 1
+        if len(self._init) < 5:
+            bisect.insort(self._init, float(x))
+            if len(self._init) == 5:
+                self._heights = list(self._init)
+                self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+            return
+        h, n = self._heights, self._pos
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and h[k + 1] <= x:
+                k += 1
+        for i in range(k + 1, 5):
+            n[i] += 1.0
+        # Desired positions for count N: 1 + (N-1)·(0, q/2, q, (1+q)/2, 1).
+        q = self.q
+        total = float(self._count)
+        desired = (1.0,
+                   1.0 + (total - 1.0) * q / 2.0,
+                   1.0 + (total - 1.0) * q,
+                   1.0 + (total - 1.0) * (1.0 + q) / 2.0,
+                   total)
+        for i in (1, 2, 3):
+            d = desired[i] - n[i]
+            if ((d >= 1.0 and n[i + 1] - n[i] > 1.0)
+                    or (d <= -1.0 and n[i - 1] - n[i] < -1.0)):
+                step = 1.0 if d > 0 else -1.0
+                cand = self._parabolic(i, step)
+                if not h[i - 1] < cand < h[i + 1]:
+                    cand = self._linear(i, step)
+                h[i] = cand
+                n[i] += step
+
+    def _parabolic(self, i: int, d: float) -> float:
+        h, n = self._heights, self._pos
+        return h[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, d: float) -> float:
+        h, n = self._heights, self._pos
+        j = i + int(d)
+        return h[i] + d * (h[j] - h[i]) / (n[j] - n[i])
+
+    def value(self) -> float:
+        """Current estimate (exact below five samples; 0.0 when empty)."""
+        if not self._count:
+            return 0.0
+        if len(self._init) < 5:
+            # Exact interpolated percentile of the sorted prefix.
+            xs = self._init
+            rank = self.q * (len(xs) - 1)
+            lo = int(rank)
+            hi = min(lo + 1, len(xs) - 1)
+            return xs[lo] + (rank - lo) * (xs[hi] - xs[lo])
+        return self._heights[2]
+
+
+class Quantiles:
+    """A set of P² estimators over one observation stream, plus count/sum
+    so the snapshot can report a mean next to the percentiles."""
+
+    def __init__(self, qs: Tuple[float, ...] = (0.5, 0.95, 0.99)):
+        self.qs = tuple(qs)
+        self._est = {q: P2Quantile(q) for q in self.qs}
+        self.count = 0
+        self.total = 0.0
+
+    def observe(self, x: float) -> None:
+        self.count += 1
+        self.total += x
+        for est in self._est.values():
+            est.observe(x)
+
+    def value(self, q: float) -> float:
+        return self._est[q].value()
+
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+class Metrics:
+    """Name-keyed registry. `counter`/`gauge`/`quantiles` create on first
+    use, so instrumentation sites never pre-declare."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._quantiles: Dict[str, Quantiles] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def quantiles(self, name: str,
+                  qs: Tuple[float, ...] = (0.5, 0.95, 0.99)) -> Quantiles:
+        s = self._quantiles.get(name)
+        if s is None:
+            s = self._quantiles[name] = Quantiles(qs)
+        return s
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flatten everything into one name → float dict.
+
+        Quantile streams export `p{XX}_{name}` per tracked quantile plus
+        `{name}_mean`/`{name}_count` — the `p50_*`/`p95_*`/`p99_*` prefixes
+        are what `benchmarks/check_regression.py` recognizes as
+        latency-style metrics.
+        """
+        out: Dict[str, float] = {}
+        for name, c in sorted(self._counters.items()):
+            out[name] = c.value
+        for name, g in sorted(self._gauges.items()):
+            out[name] = g.value
+        for name, s in sorted(self._quantiles.items()):
+            for q in s.qs:
+                out[f"p{int(round(q * 100)):02d}_{name}"] = s.value(q)
+            out[f"{name}_mean"] = s.mean()
+            out[f"{name}_count"] = float(s.count)
+        return out

@@ -1,0 +1,361 @@
+"""Deadline-based micro-batching: concurrent requests → one fleet decide.
+
+Per flush the batcher replays `HIServer.serve_slot`'s two-phase flow at
+request granularity:
+
+  0. apply every *arrived* pending feedback batch, oldest first (the
+     double buffer generalized: a batch's remote results update the expert
+     weights at the first flush after its last transfer lands, so decide
+     rounds never block on the network),
+  1. take at most one queued request per stream slot and run ONE device
+     `engine.decide` over the whole fleet (inactive slots ride along with
+     masked-off decisions — the same (ψ, ζ) key tree as a `ScenarioSource`
+     replay via `source_slot_keys`, which is what makes the low-load plane
+     bit-compatible with `HIServer.run_source`),
+  2. compact only the offloaded requests at `capacity` with the rotating
+     drop priority (`rotated_compact`), send each survivor over the link
+     (measured transfer → `NetworkEstimator.observe` → next round's β),
+     and complete every request's future: remote label where sent, the
+     conditional local fallback where capacity-dropped, the local decision
+     otherwise.
+
+A flush fires when `max_batch` distinct streams have work OR `max_wait`
+elapses after the first queued request — whichever comes first. Streams
+not in the batch are frozen exactly: their (η, decay) are masked to
+(0, 1), so a partial round leaves their expert weights bit-identical.
+
+The batcher is event-loop native but does all device work synchronously
+inside the flush callback; only link transfers are awaited.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import (
+    H2T2State,
+    effective_local_pred,
+    fleet_feedback,
+    fleet_restart,
+    source_slot_keys,
+)
+from repro.core.types import HIConfig
+from repro.serving.batching import scatter_results
+from repro.serving.hi_server import rotated_compact
+from repro.serving.policy_engine import PolicyEngine
+from repro.serving.request_plane.metrics import Metrics
+from repro.serving.request_plane.netem import NetworkEstimator, SimulatedLink
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight classification request, leased onto stream `stream`."""
+
+    session: int
+    stream: int
+    f: float                 # LDL confidence (the edge model ran upstream)
+    hr: int                  # label the remote model would return
+    y: int = -1              # ground truth for accounting; -1 = unknown
+    payload_bytes: float = 0.0
+    t_arrival: float = 0.0
+    future: Optional[asyncio.Future] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneResult:
+    """What a request's future resolves to — always a prediction, never an
+    error (denials and capacity drops degrade to local-only predictions)."""
+
+    pred: int
+    offloaded: bool = False
+    dropped: bool = False    # offload decision shed by RDL capacity
+    denied: bool = False     # shed by admission before reaching the batcher
+    reason: Optional[str] = None
+    latency: float = 0.0     # seconds from arrival to completion
+
+
+class _FeedbackEntry:
+    """One flush's delayed feedback, waiting for its transfers to land."""
+
+    __slots__ = ("decision", "hrs", "sent", "betas", "eta", "decay",
+                 "outstanding")
+
+    def __init__(self, decision, hrs, sent, betas, eta, decay,
+                 outstanding: int):
+        self.decision = decision
+        self.hrs = hrs
+        self.sent = sent
+        self.betas = betas
+        self.eta = eta
+        self.decay = decay
+        self.outstanding = outstanding
+
+
+def account_outcome(metrics: Metrics, hi: HIConfig, pred: int, y: int,
+                    beta: float) -> None:
+    """Shared cost accounting for every completed request (served, dropped,
+    or admission-denied): observed cost is β where actually offloaded;
+    ground-truth cost adds φ(pred, y) when a label is known."""
+    metrics.counter("observed_cost").inc(beta)
+    if y >= 0:
+        phi = (hi.delta_fp if (pred == 1 and y == 0) else
+               hi.delta_fn if (pred == 0 and y == 1) else 0.0)
+        metrics.counter("true_cost").inc(beta + phi)
+        metrics.counter("labeled_total").inc()
+        if pred == y:
+            metrics.counter("correct_total").inc()
+
+
+class MicroBatcher:
+    """Coalesces per-stream request queues into fleet decide rounds."""
+
+    def __init__(
+        self,
+        hi: HIConfig,
+        engine: PolicyEngine,
+        n_streams: int,
+        capacity: int,
+        max_batch: int,
+        max_wait: float,
+        link: SimulatedLink,
+        estimator: NetworkEstimator,
+        metrics: Metrics,
+        key: jax.Array,
+        record_rounds: bool = False,
+    ):
+        self.hi = hi
+        self.engine = engine
+        self.n_streams = int(n_streams)
+        self.capacity = int(capacity)
+        self.max_batch = int(max_batch)
+        self.max_wait = float(max_wait)
+        self.link = link
+        self.estimator = estimator
+        self.metrics = metrics
+        self.key = key
+        self.state = engine.init(n_streams)
+        if not isinstance(self.state, H2T2State):
+            raise ValueError(
+                f"the request plane drives fixed-schedule engines whose "
+                f"state is a plain H2T2State; engine {engine.name!r} "
+                f"carries {type(self.state).__name__} (partial-round "
+                "masking cannot freeze its extra state)")
+        uk, interp = engine._kernel_opts()
+        s, cap = self.n_streams, self.capacity
+
+        # Partial-round feedback: per-stream (η, decay) masked to (0, 1)
+        # off-batch, so inactive streams' weights are untouched (decay 1 and
+        # zero pseudo-loss make the update the identity, and the log-weight
+        # renormalization subtracts an already-zero max).
+        self._feedback_fn = jax.jit(
+            lambda st, dec, hrs, betas, sent, eta, decay: fleet_feedback(
+                hi, st, dec, hrs, betas, sent, eta=eta, decay=decay,
+                use_kernel=uk, interpret=interp))
+
+        def route(hrs, offload, t):
+            # The per-request payload is the (S, 1) remote-label column, so
+            # compaction, capacity, and drop rotation behave exactly as in
+            # `HIServer.run_source`.
+            batch = rotated_compact(hrs[:, None], offload, cap, t)
+            hrs_back = scatter_results(batch.tokens[:, 0], batch, s, fill=0)
+            sent = scatter_results(
+                batch.valid.astype(jnp.int32), batch, s,
+                fill=0).astype(bool)
+            return hrs_back, sent
+
+        self._route = jax.jit(route)
+        self._restart = jax.jit(
+            lambda st, mask: fleet_restart(hi, st, mask))
+
+        self._queues: List[Deque[Request]] = [deque() for _ in range(s)]
+        self._n_queued = 0
+        self._n_active = 0           # streams with at least one queued request
+        self._pending: Deque[_FeedbackEntry] = deque()
+        self._inflight = 0           # outstanding link transfers
+        self._round = 0
+        self._timer = None
+        self.stream_sent = np.zeros((s,), np.int64)   # remote serves per slot
+        self.record: Optional[List[Dict[str, np.ndarray]]] = (
+            [] if record_rounds else None)
+
+    # ------------------------------- ingress side -------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests queued ahead of the next flushes (admission's signal)."""
+        return self._n_queued
+
+    def enqueue(self, req: Request) -> asyncio.Future:
+        """Queue a request on its stream slot; returns its result future."""
+        loop = asyncio.get_running_loop()
+        req.future = loop.create_future()
+        q = self._queues[req.stream]
+        if not q:
+            self._n_active += 1
+        q.append(req)
+        self._n_queued += 1
+        self.metrics.gauge("queue_depth").set(self._n_queued)
+        if self._n_active >= self.max_batch:
+            self._flush()
+        elif self._timer is None:
+            self._timer = loop.call_at(loop.time() + self.max_wait,
+                                       self._timer_fire)
+        return req.future
+
+    def restart_stream(self, slot: int) -> None:
+        """Wipe one stream's expert weights (session-reclaim hygiene)."""
+        mask = jnp.zeros((self.n_streams,), bool).at[slot].set(True)
+        self.state = self._restart(self.state, mask)
+
+    # ------------------------------- flush flow ---------------------------------
+
+    def _timer_fire(self):
+        self._timer = None
+        self._flush()
+
+    def _apply_ready_feedback(self) -> None:
+        """Fold every fully-arrived pending batch into the weights, in
+        flush order (a stalled older batch holds newer ones back, so
+        updates are never applied out of order)."""
+        while self._pending and self._pending[0].outstanding == 0:
+            e = self._pending.popleft()
+            self.state, _ = self._feedback_fn(
+                self.state, e.decision, e.hrs, e.betas, e.sent, e.eta,
+                e.decay)
+            self.metrics.counter("feedback_rounds").inc()
+
+    def _flush(self) -> None:
+        loop = asyncio.get_running_loop()
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        self._apply_ready_feedback()
+        if self._n_active == 0:
+            return
+        s = self.n_streams
+        t = self._round
+        self._round += 1
+
+        active = np.zeros((s,), bool)
+        fs = np.full((s,), 0.5, np.float32)     # inert filler off-batch
+        hrs = np.zeros((s,), np.int32)
+        ys = np.full((s,), -1, np.int32)
+        payloads = np.zeros((s,), np.float32)
+        reqs: Dict[int, Request] = {}
+        for slot in range(s):
+            q = self._queues[slot]
+            if not q:
+                continue
+            r = q.popleft()
+            self._n_queued -= 1
+            active[slot] = True
+            fs[slot] = r.f
+            hrs[slot] = r.hr
+            ys[slot] = r.y
+            payloads[slot] = r.payload_bytes
+            reqs[slot] = r
+        self._n_active = sum(1 for q in self._queues if q)
+        self.metrics.gauge("queue_depth").set(self._n_queued)
+
+        # Live β: the estimator prices each stream's offload *now*; this
+        # snapshot is both what feedback charges and what the summary
+        # accounts, replacing any generator-supplied β end to end.
+        betas = self.estimator.beta_vector(payloads)
+        keys = source_slot_keys(self.key, t, s)
+        decision = self.engine.decide(self.state, jnp.asarray(fs), keys)
+        active_j = jnp.asarray(active)
+        decision = decision._replace(
+            offload=decision.offload & active_j,
+            explored=decision.explored & active_j)
+        hrs_back, sent = self._route(jnp.asarray(hrs), decision.offload, t)
+        sent_np = np.asarray(sent)
+        off_np = np.asarray(decision.offload)
+        local_pred = np.asarray(effective_local_pred(decision, sent))
+
+        n_sent = int(sent_np.sum())
+        n_drop = int((off_np & ~sent_np).sum())
+        self.metrics.counter("rounds_total").inc()
+        self.metrics.counter("batched_requests").inc(len(reqs))
+        self.metrics.counter("capacity_dropped").inc(n_drop)
+        self.metrics.counter("fallback_total").inc(n_drop)
+
+        eta = np.where(active, np.float32(self.hi.eta), np.float32(0.0))
+        decay = np.where(active, np.float32(self.hi.decay), np.float32(1.0))
+        entry = _FeedbackEntry(
+            decision=decision, hrs=hrs_back, sent=sent,
+            betas=jnp.asarray(betas), eta=jnp.asarray(eta),
+            decay=jnp.asarray(decay), outstanding=n_sent)
+        self._pending.append(entry)
+
+        if self.record is not None:
+            self.record.append({"fs": fs, "hrs": hrs, "ys": ys,
+                                "betas": betas.copy(), "active": active})
+
+        for slot, r in reqs.items():
+            if sent_np[slot]:
+                self.stream_sent[slot] += 1
+                loop.create_task(
+                    self._transfer(entry, r, float(betas[slot])))
+            else:
+                dropped = bool(off_np[slot])
+                self._complete(r, int(local_pred[slot]), offloaded=False,
+                               dropped=dropped, beta=0.0)
+
+        # Leftover queued requests wait for the next flush: immediately
+        # when a full batch is already waiting, else on a fresh deadline.
+        if self._n_active >= self.max_batch:
+            loop.call_soon(self._flush)
+        elif self._n_active > 0:
+            self._timer = loop.call_at(loop.time() + self.max_wait,
+                                       self._timer_fire)
+
+    async def _transfer(self, entry: _FeedbackEntry, req: Request,
+                        beta: float) -> None:
+        """One offload: ship the payload, measure, feed the estimator."""
+        loop = asyncio.get_running_loop()
+        self._inflight += 1
+        try:
+            t0 = loop.time()
+            await self.link.send(req.stream, req.payload_bytes)
+            measured = loop.time() - t0
+            self.estimator.observe(req.stream, measured, req.payload_bytes)
+            self.metrics.counter("completed_remote").inc()
+            self._complete(req, int(req.hr), offloaded=True, dropped=False,
+                           beta=beta)
+        finally:
+            self._inflight -= 1
+            entry.outstanding -= 1
+
+    def _complete(self, req: Request, pred: int, offloaded: bool,
+                  dropped: bool, beta: float) -> None:
+        loop = asyncio.get_running_loop()
+        latency = loop.time() - req.t_arrival
+        self.metrics.quantiles("latency_ms").observe(latency * 1e3)
+        if not offloaded and not dropped:
+            self.metrics.counter("completed_local").inc()
+        account_outcome(self.metrics, self.hi, pred, req.y, beta)
+        if not req.future.done():
+            req.future.set_result(PlaneResult(
+                pred=pred, offloaded=offloaded, dropped=dropped,
+                latency=latency))
+
+    # ------------------------------- lifecycle ----------------------------------
+
+    @property
+    def idle(self) -> bool:
+        return not (self._n_queued or self._inflight
+                    or any(e.outstanding for e in self._pending))
+
+    async def drain(self) -> None:
+        """Wait (in loop time) until every request has completed and every
+        transfer has landed, then apply all remaining feedback — the
+        request-plane analogue of `HIServer.flush`."""
+        while not self.idle:
+            await asyncio.sleep(self.max_wait)
+        self._apply_ready_feedback()

@@ -1,0 +1,211 @@
+"""Live network estimation: measured transfer times → the per-stream β vector.
+
+Everywhere else in this repo the offloading cost β is *synthesized* by a
+`ScenarioSource`; a deployed edge system has to measure it. This module
+closes that loop with two pieces:
+
+  `SimulatedLink`   — the pluggable transport backend: per-stream RTT with
+                      jitter, payload/bandwidth serialization, and two-state
+                      Markov congestion episodes (the `beta_process`
+                      "bursty" dynamics, but happening *to* the transport
+                      instead of being handed to the policy). A real
+                      deployment swaps in an aiohttp-probe backend with the
+                      same `send(stream, payload_bytes)` coroutine.
+  `NetworkEstimator`— rolling per-stream estimation over whatever the link
+                      reports: EWMA of the de-payloaded RTT plus a windowed
+                      percentile (the SNIPPETS.md `offloadagent.py` recipe:
+                      rolling RTT window + a transmit-cost model), converted
+                      into the β each stream would pay to offload right now
+                      (`beta_vector`, consumed by the micro-batcher every
+                      decide round).
+
+β conversion: a predicted transfer of `latency_ref` seconds costs β = 1
+(the paper's normalized β ≤ 1); everything scales linearly and clips to
+[beta_floor, beta_cap]. The estimator is pure host-side state — tiny S-sized
+arrays every flush — so it adds nothing to the device hot path.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import random
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkConfig:
+    """Simulated transport: rtt = base ± jitter (+ congestion), then the
+    payload serializes at `bandwidth` bytes/s.
+
+    Congestion is a per-stream two-state Markov chain stepped once per send
+    (p_up to enter, p_down to leave, `congested_extra` seconds while in it)
+    — the transport-side analogue of the `beta_process` bursty regime. All
+    randomness comes from one seeded PRNG per stream, so a virtual-clock
+    run is exactly reproducible.
+    """
+
+    base_rtt: float = 0.02         # s, uncongested round trip
+    jitter: float = 0.004          # s, uniform ±jitter per send
+    bandwidth: float = 1.0e6       # bytes/s serialization rate
+    congested_extra: float = 0.08  # s added while the stream is congested
+    p_up: float = 0.02             # P(uncongested → congested) per send
+    p_down: float = 0.2            # P(congested → uncongested) per send
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.base_rtt < 0 or self.jitter < 0 or self.congested_extra < 0:
+            raise ValueError("link delays must be non-negative")
+        if self.bandwidth <= 0:
+            raise ValueError(f"bandwidth must be positive (got {self.bandwidth})")
+        if not (0 <= self.p_up <= 1 and 0 <= self.p_down <= 1):
+            raise ValueError("transition probabilities must lie in [0, 1]")
+
+
+class SimulatedLink:
+    """Deterministic simulated transport with per-stream congestion state."""
+
+    def __init__(self, cfg: LinkConfig):
+        self.cfg = cfg
+        self._rngs: Dict[int, random.Random] = {}
+        self._congested: Dict[int, bool] = {}
+
+    def _rng(self, stream: int) -> random.Random:
+        rng = self._rngs.get(stream)
+        if rng is None:
+            # Disjoint deterministic streams: one PRNG per stream slot.
+            rng = self._rngs[stream] = random.Random(
+                self.cfg.seed * 1_000_003 + stream)
+        return rng
+
+    def transfer_time(self, stream: int, payload_bytes: float) -> float:
+        """Sample this send's transfer time (steps the congestion chain)."""
+        cfg = self.cfg
+        rng = self._rng(stream)
+        congested = self._congested.get(stream, False)
+        u = rng.random()
+        congested = (u >= cfg.p_down) if congested else (u < cfg.p_up)
+        self._congested[stream] = congested
+        rtt = cfg.base_rtt + rng.uniform(-cfg.jitter, cfg.jitter)
+        if congested:
+            rtt += cfg.congested_extra
+        return max(rtt, 0.0) + payload_bytes / cfg.bandwidth
+
+    async def send(self, stream: int, payload_bytes: float) -> float:
+        """Transfer `payload_bytes` on `stream`: sleeps the sampled transfer
+        time on the running loop's clock and returns it (the "measurement").
+        Under `VirtualTimeLoop` the sleep is instantaneous wall-clock."""
+        dt = self.transfer_time(stream, payload_bytes)
+        await asyncio.sleep(dt)
+        return dt
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorConfig:
+    """Rolling-estimate + β-conversion knobs.
+
+    `bw_hint` is the payload normalizer used to strip the serialization
+    term out of a measured transfer (measured − payload/bw_hint ≈ RTT) and
+    to add it back when predicting a future transfer. `beta_source`
+    selects the predictor: "ewma" (the mean path) or "p95" (the windowed
+    percentile — a pessimistic β that prices tail congestion in).
+    """
+
+    alpha: float = 0.25            # EWMA weight on the newest sample
+    window: int = 64               # rolling window for the percentile
+    bw_hint: float = 1.0e6         # bytes/s payload normalizer
+    latency_ref: float = 0.25      # transfer seconds that cost β = 1
+    beta_floor: float = 0.01
+    beta_cap: float = 1.0
+    prior_rtt: float = 0.05        # per-stream estimate before any sample
+    beta_source: str = "ewma"      # "ewma" | "p95"
+
+    def __post_init__(self):
+        if not 0 < self.alpha <= 1:
+            raise ValueError(f"alpha must lie in (0, 1] (got {self.alpha})")
+        if self.window < 1:
+            raise ValueError(f"window must be ≥ 1 (got {self.window})")
+        if self.latency_ref <= 0:
+            raise ValueError("latency_ref must be positive")
+        if not 0 <= self.beta_floor <= self.beta_cap:
+            raise ValueError(
+                f"need 0 ≤ beta_floor ≤ beta_cap, got "
+                f"({self.beta_floor}, {self.beta_cap})")
+        if self.beta_source not in ("ewma", "p95"):
+            raise ValueError(
+                f"unknown beta_source {self.beta_source!r}; "
+                "expected 'ewma' or 'p95'")
+
+
+class NetworkEstimator:
+    """Per-stream rolling RTT estimation and the live β vector.
+
+    `observe(stream, seconds, payload_bytes)` folds one measured transfer
+    in; `beta_vector(payloads)` prices an offload *now* for every stream.
+    Streams with no samples yet sit at `prior_rtt` so cold-start β is
+    defined (and conservative rather than free).
+    """
+
+    def __init__(self, cfg: EstimatorConfig, n_streams: int):
+        self.cfg = cfg
+        self.n_streams = int(n_streams)
+        self._rtt = np.full((n_streams,), cfg.prior_rtt, np.float64)
+        self._seen = np.zeros((n_streams,), bool)
+        self._windows: List[Deque[float]] = [
+            deque(maxlen=cfg.window) for _ in range(n_streams)]
+        self.n_samples = 0
+
+    def observe(self, stream: int, seconds: float,
+                payload_bytes: float) -> None:
+        """Fold one measured transfer into stream `stream`'s estimate."""
+        cfg = self.cfg
+        rtt = max(seconds - payload_bytes / cfg.bw_hint, 0.0)
+        if self._seen[stream]:
+            self._rtt[stream] += cfg.alpha * (rtt - self._rtt[stream])
+        else:
+            self._rtt[stream] = rtt          # first sample replaces the prior
+            self._seen[stream] = True
+        self._windows[stream].append(rtt)
+        self.n_samples += 1
+
+    def rtt_estimate(self, stream: int) -> float:
+        return float(self._rtt[stream])
+
+    def rtt_percentile(self, q: float,
+                       stream: Optional[int] = None) -> float:
+        """Windowed RTT percentile — one stream's window, or all pooled.
+        Falls back to the EWMA estimate when no samples are windowed."""
+        if stream is None:
+            pooled = [x for w in self._windows for x in w]
+        else:
+            pooled = list(self._windows[stream])
+        if not pooled:
+            return float(np.mean(self._rtt))
+        return float(np.percentile(np.asarray(pooled), q * 100.0))
+
+    def _predict(self, payloads: np.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.beta_source == "p95":
+            rtt = np.asarray([
+                self.rtt_percentile(0.95, s) if self._windows[s]
+                else self._rtt[s]
+                for s in range(self.n_streams)])
+        else:
+            rtt = self._rtt
+        return rtt + payloads / cfg.bw_hint
+
+    def beta_vector(self, payloads=None) -> np.ndarray:
+        """(S,) float32 — the β each stream would pay to offload now.
+
+        `payloads` is scalar or (S,) expected payload bytes (0 prices the
+        bare RTT). This is the vector the micro-batcher snapshots every
+        decide round and charges at feedback time.
+        """
+        payloads = np.broadcast_to(
+            np.asarray(0.0 if payloads is None else payloads, np.float64),
+            (self.n_streams,))
+        beta = self._predict(payloads) / self.cfg.latency_ref
+        return np.clip(beta, self.cfg.beta_floor,
+                       self.cfg.beta_cap).astype(np.float32)

@@ -115,6 +115,24 @@ def test_compare_skips_strings_and_timing():
     assert compare(cur, base) == []
 
 
+def test_compare_skips_latency_percentiles():
+    """p50/p95/p99 latency metrics are environment-shaped, never gated —
+    while behavioral rates in the same row still gate (via the absolute
+    floor when the baseline sits at zero, e.g. deny_rate below capacity)."""
+    base = _report(
+        rp={"p50_latency_ms": 20.0, "p99_latency_ms": 90.0, "deny_rate": 0.0}
+    )
+    cur = _report(
+        rp={"p50_latency_ms": 55.0, "p99_latency_ms": 400.0, "deny_rate": 0.0}
+    )
+    assert compare(cur, base) == []
+    bad = _report(
+        rp={"p50_latency_ms": 20.0, "p99_latency_ms": 90.0, "deny_rate": 0.5}
+    )
+    failures = compare(bad, base)
+    assert len(failures) == 1 and "deny_rate" in failures[0]
+
+
 def test_compare_flags_errored_run():
     base = _report(bench={"cost": 1.0})
     cur = {"meta": {}, "benchmarks": {"bench": {"error": True, "metrics": {}}}}
@@ -144,13 +162,16 @@ def test_committed_baseline_is_valid_and_covers_gated_modules():
         baseline = json.load(fh)
     benches = baseline["benchmarks"]
     assert len(benches) >= 10
-    # The gated CI subset: drift, scenarios, and all three adaptive arms.
+    # The gated CI subset: drift, scenarios, the three adaptive arms, and
+    # the request-plane load sweep.
     for required in (
         "drift_h2t2_paper",
         "scenario_stationary",
         "adaptive_drift_ood_fixed",
         "adaptive_drift_ood_adaptive",
         "adaptive_drift_ood_oracle",
+        "request_plane_poisson_x1",
+        "request_plane_mmpp_x1",
     ):
         assert required in benches, required
         metrics = benches[required]["metrics"]

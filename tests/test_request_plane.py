@@ -1,0 +1,446 @@
+"""Async request plane: virtual clock, micro-batching, admission, live β,
+and parity with the offline serving path.
+
+No pytest-asyncio: every coroutine runs synchronously through
+`run_virtual`, on simulated time — the suite performs no wall-clock sleeps.
+"""
+
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HIConfig
+from repro.data import ReplaySource
+from repro.data.traffic import ArrivalBatch, TrafficProcess
+from repro.serving import HIServer, HIServerConfig
+from repro.serving.request_plane import (
+    AdmissionConfig,
+    AdmissionController,
+    EstimatorConfig,
+    LinkConfig,
+    Metrics,
+    NetworkEstimator,
+    P2Quantile,
+    RequestPlane,
+    RequestPlaneConfig,
+    SessionTable,
+    SimulatedLink,
+    run_virtual,
+    serve_traffic,
+)
+
+K = jax.random.PRNGKey
+
+
+# ------------------------------ virtual clock --------------------------------
+
+
+def test_virtual_clock_advances_without_wall_time():
+    async def main():
+        loop = asyncio.get_running_loop()
+        t0 = loop.time()
+        await asyncio.sleep(1800.0)            # half an hour of virtual time
+        await asyncio.gather(asyncio.sleep(5.0), asyncio.sleep(9.0))
+        return loop.time() - t0
+
+    wall0 = time.monotonic()
+    elapsed = run_virtual(main())
+    assert time.monotonic() - wall0 < 5.0      # no real sleeping happened
+    assert elapsed == pytest.approx(1809.0)
+
+
+def test_virtual_clock_interleaving_is_deterministic():
+    async def main():
+        log = []
+
+        async def worker(name, delay, repeats):
+            for i in range(repeats):
+                await asyncio.sleep(delay)
+                log.append((name, i, asyncio.get_running_loop().time()))
+
+        await asyncio.gather(worker("a", 0.3, 7), worker("b", 0.7, 3),
+                             worker("c", 0.21, 10))
+        return log
+
+    assert run_virtual(main()) == run_virtual(main())
+
+
+def test_virtual_clock_deadlock_raises_instead_of_hanging():
+    async def main():
+        await asyncio.get_running_loop().create_future()   # never resolves
+
+    with pytest.raises(RuntimeError, match="nothing ready"):
+        run_virtual(main())
+
+
+# ------------------------------ metrics --------------------------------------
+
+
+def test_p2_quantile_exact_for_small_samples():
+    est = P2Quantile(0.5)
+    for x in (5.0, 1.0, 9.0):
+        est.observe(x)
+    assert est.value() == 5.0                   # exact median of {1, 5, 9}
+
+
+def test_p2_quantile_tracks_numpy_percentiles():
+    rng = np.random.default_rng(7)
+    xs = rng.normal(10.0, 2.0, 5000)
+    for q in (0.5, 0.95, 0.99):
+        est = P2Quantile(q)
+        for x in xs:
+            est.observe(float(x))
+        assert est.value() == pytest.approx(
+            np.percentile(xs, q * 100.0), abs=0.25)
+
+
+def test_metrics_snapshot_shape():
+    m = Metrics()
+    m.counter("served").inc(3)
+    m.gauge("depth").set(7)
+    for x in (1.0, 2.0, 3.0):
+        m.quantiles("latency_ms").observe(x)
+    snap = m.snapshot()
+    assert snap["served"] == 3.0 and snap["depth"] == 7.0
+    assert {"p50_latency_ms", "p95_latency_ms", "p99_latency_ms",
+            "latency_ms_mean", "latency_ms_count"} <= set(snap)
+    assert snap["p50_latency_ms"] == 2.0 and snap["latency_ms_count"] == 3.0
+
+
+# ------------------------------ admission ------------------------------------
+
+
+def test_token_bucket_denies_then_refills():
+    m = Metrics()
+    ctl = AdmissionController(AdmissionConfig(rate=1.0, burst=2.0), m)
+    assert ctl.admit(0.0, 0) is None
+    assert ctl.admit(0.0, 0) is None
+    assert ctl.admit(0.0, 0) == "rate_limited"          # bucket empty
+    assert ctl.admit(1.5, 0) is None                    # 1.5 tokens refilled
+    assert ctl.admit(100.0, 0) is None                  # refill caps at burst
+    assert ctl.admit(100.0, 0) is None
+    assert ctl.admit(100.0, 0) == "rate_limited"
+    snap = m.snapshot()
+    assert snap["denied_rate_limited"] == 2.0 == snap["denied_total"]
+
+
+def test_queue_depth_cap_and_disabled_mode():
+    m = Metrics()
+    ctl = AdmissionController(AdmissionConfig(max_queue=4), m)
+    assert ctl.admit(0.0, 3) is None
+    assert ctl.admit(0.0, 4) == "queue_full"
+    off = AdmissionController(AdmissionConfig(enabled=False, max_queue=1), m)
+    assert off.admit(0.0, 10 ** 6) is None
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError):
+        AdmissionConfig(rate=-1.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(burst=0.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_queue=0)
+
+
+# ------------------------------ session table --------------------------------
+
+
+def test_session_table_lease_lru_and_pins():
+    tab = SessionTable(2)
+    s0, ev0 = tab.lease(100)
+    s1, ev1 = tab.lease(200)
+    assert {s0, s1} == {0, 1} and not ev0 and not ev1
+    # Both pinned: a third session cannot lease.
+    assert tab.lease(300) is None
+    tab.release(s0)
+    tab.release(s1)
+    # Same session re-leases its own slot (no eviction).
+    again, ev = tab.lease(100)
+    assert again == s0 and not ev
+    tab.release(again)
+    # 100 was just used, so 200 is now the LRU victim.
+    s3, ev = tab.lease(300)
+    assert ev and s3 == s1 and tab.slot_of(200) is None
+    assert tab.slot_of(100) == s0 and tab.evictions == 1
+
+
+# ------------------------------ netem ----------------------------------------
+
+
+def test_simulated_link_is_seeded_and_nonnegative():
+    cfg = LinkConfig(base_rtt=0.02, jitter=0.01, seed=5)
+    a_link, b_link = SimulatedLink(cfg), SimulatedLink(cfg)
+    a = [a_link.transfer_time(0, 1000.0) for _ in range(20)]
+    b = [b_link.transfer_time(0, 1000.0) for _ in range(20)]
+    assert a == b and all(dt >= 1000.0 / cfg.bandwidth for dt in a)
+    # Distinct streams draw from disjoint PRNGs.
+    assert b_link.transfer_time(1, 1000.0) != a[0]
+
+
+def test_estimator_converges_and_prices_beta():
+    cfg = EstimatorConfig(alpha=0.5, window=8, bw_hint=1.0e6,
+                          latency_ref=0.1, prior_rtt=0.05)
+    est = NetworkEstimator(cfg, 2)
+    # Cold start: β from the prior RTT, not zero.
+    assert est.beta_vector()[0] == pytest.approx(0.5)
+    for _ in range(12):
+        est.observe(0, 0.02 + 0.001, 1000.0)   # payload term stripped
+    assert est.rtt_estimate(0) == pytest.approx(0.02, abs=1e-6)
+    beta = est.beta_vector()
+    assert beta[0] == pytest.approx(0.2, abs=1e-4)
+    assert beta[1] == pytest.approx(0.5)       # untouched stream keeps prior
+    assert beta.dtype == np.float32
+    # Payload adds the serialization term: 0.02 + 0.01 s → β 0.3.
+    assert est.beta_vector(10_000.0)[0] == pytest.approx(0.3, abs=1e-4)
+
+
+def test_estimator_percentile_source_prices_tail():
+    cfg = EstimatorConfig(alpha=0.2, window=16, latency_ref=0.1,
+                          beta_source="p95")
+    est = NetworkEstimator(cfg, 1)
+    for _ in range(15):
+        est.observe(0, 0.01, 0.0)
+    est.observe(0, 0.09, 0.0)                  # one congestion spike
+    # p95 of [0.01×15, 0.09] interpolates to 0.03 — far above the 0.01 mode.
+    assert est.rtt_percentile(0.95, 0) == pytest.approx(0.03)
+    assert est.beta_vector()[0] > NetworkEstimator(
+        EstimatorConfig(latency_ref=0.1), 1).cfg.beta_floor
+    with pytest.raises(ValueError):
+        EstimatorConfig(beta_source="median")
+    with pytest.raises(ValueError):
+        EstimatorConfig(beta_floor=0.5, beta_cap=0.1)
+
+
+# ------------------------------ the plane ------------------------------------
+
+
+def _traffic(rate, n, key=3, process="poisson", **kw):
+    return TrafficProcess(process=process, rate=rate, n_arrivals=n,
+                          n_sessions=8, key=K(key), **kw).materialize()
+
+
+def test_same_seed_identical_summary():
+    cfg = RequestPlaneConfig(n_streams=8, max_wait=0.02, offload_capacity=4,
+                             admission=AdmissionConfig(max_queue=16))
+    arr = _traffic(300.0, 200, process="mmpp")
+    s1 = serve_traffic(cfg, arr, K(7))[2]
+    s2 = serve_traffic(cfg, arr, K(7))[2]
+    assert s1 == s2
+
+
+def test_flush_on_max_batch_is_immediate():
+    cfg = RequestPlaneConfig(n_streams=4, max_wait=10.0)
+
+    async def main():
+        plane = RequestPlane(cfg, K(0))
+        results = await asyncio.gather(*[
+            asyncio.ensure_future(plane.submit(i, 0.6, 1, y=1))
+            for i in range(4)])
+        await plane.drain()
+        return plane, results
+
+    plane, results = run_virtual(main())
+    summary = plane.summary()
+    # All four streams queued → one full flush, no 10 s deadline waited.
+    assert summary["rounds_total"] == 1.0
+    assert summary["requests_total"] == 4.0 == summary["admitted_total"]
+    for r in results:
+        assert r.pred in (0, 1) and not r.denied
+        if not r.offloaded:
+            assert r.latency == 0.0            # decided at the arrival instant
+        else:
+            assert 0.0 < r.latency < 10.0      # link time only
+
+
+def test_flush_on_deadline_when_batch_incomplete():
+    cfg = RequestPlaneConfig(n_streams=4, max_wait=0.25)
+
+    async def main():
+        plane = RequestPlane(cfg, K(0))
+        r = await plane.submit(0, 0.9, 1, y=1)
+        await plane.drain()
+        return plane, r
+
+    plane, r = run_virtual(main())
+    assert plane.summary()["rounds_total"] == 1.0
+    assert r.latency >= 0.25                   # waited out the deadline
+
+
+def test_denials_degrade_to_fallback_predictions():
+    cfg = RequestPlaneConfig(
+        n_streams=8, max_wait=0.02,
+        admission=AdmissionConfig(rate=10.0, burst=2.0))
+    arr = _traffic(2000.0, 150)
+    plane, results, summary = serve_traffic(cfg, arr, K(1))
+    assert summary["denied_total"] > 0
+    fs = np.asarray(arr.fs)
+    for f, r in zip(fs, results):
+        assert r.pred in (0, 1)                # never an error
+        if r.denied:
+            assert r.reason in ("rate_limited", "queue_full", "no_slot")
+            assert r.pred == int(f >= 0.5)     # the local-only fallback
+    assert summary["requests_total"] == \
+        summary["admitted_total"] + summary["denied_total"]
+    assert summary["fallback_total"] == \
+        summary["denied_total"] + summary["capacity_dropped"]
+
+
+def test_no_slot_denial_while_stream_pinned():
+    cfg = RequestPlaneConfig(
+        n_streams=1, hi=HIConfig(eps=1.0),      # ε=1 → every decide offloads
+        max_wait=0.01,
+        link=LinkConfig(base_rtt=0.5, jitter=0.0, congested_extra=0.0))
+
+    async def main():
+        plane = RequestPlane(cfg, K(0))
+        first = asyncio.ensure_future(plane.submit(0, 0.5, 1, y=1))
+        await asyncio.sleep(0.05)              # first is mid-transfer (0.5 s)
+        second = await plane.submit(1, 0.9, 1, y=1)
+        r1 = await first
+        await plane.drain()
+        return plane, r1, second
+
+    plane, r1, r2 = run_virtual(main())
+    assert r1.offloaded and r1.latency >= 0.5
+    assert r2.denied and r2.reason == "no_slot" and r2.pred == 1
+    assert plane.summary()["denied_no_slot"] == 1.0
+
+
+def test_session_eviction_reclaims_lru_slot():
+    cfg = RequestPlaneConfig(n_streams=2, max_batch=1, max_wait=0.01,
+                             restart_on_reclaim=True)
+
+    async def main():
+        plane = RequestPlane(cfg, K(0))
+        for session in (10, 11, 12, 13, 10):   # 4 sessions on 2 slots
+            await plane.submit(session, 0.7, 1, y=1)
+        await plane.drain()
+        return plane
+
+    plane = run_virtual(main())
+    summary = plane.summary()
+    assert summary["session_evictions"] >= 2.0
+    assert summary["slot_reclaims"] == summary["session_evictions"]
+
+
+# --------------------- parity with the offline serving path -------------------
+
+
+def _lockstep_arrivals(s, rounds, period):
+    """One request per stream per round, rounds `period` seconds apart —
+    the synchronous slot structure of the offline server, as traffic."""
+    n = s * rounds
+    gaps = np.zeros((n,), np.float32)
+    gaps[::s] = period
+    gaps[0] = 0.0
+    rng = np.random.default_rng(11)
+    ys = rng.integers(0, 2, n).astype(np.int32)
+    fs = np.where(ys == 1, rng.uniform(0.55, 0.95, n),
+                  rng.uniform(0.05, 0.45, n)).astype(np.float32)
+    return ArrivalBatch(
+        gaps=gaps, sessions=np.tile(np.arange(s, dtype=np.int32), rounds),
+        fs=fs, hrs=ys, ys=ys, payloads=np.full((n,), 4096.0, np.float32))
+
+
+def test_low_load_parity_with_hi_server_replay():
+    """At low load (full rounds, no drops, transfers done before the next
+    round) the plane's decide/compact/feedback flow is op-for-op the
+    offline `HIServer.run_source` — replaying the plane's recorded rounds
+    with the same policy key must reproduce its offloads and cost."""
+    s, rounds = 4, 24
+    hi = HIConfig(eps=0.3)
+    cfg = RequestPlaneConfig(n_streams=s, hi=hi, max_wait=0.2,
+                             record_rounds=True)
+    plane, results, summary = serve_traffic(
+        cfg, _lockstep_arrivals(s, rounds, period=1.0), K(7))
+    rec = plane.batcher.record
+    assert len(rec) == rounds
+    assert all(bool(np.all(r["active"])) for r in rec)
+    assert summary["drop_rate"] == 0.0 and summary["deny_rate"] == 0.0
+
+    stack = lambda name: np.stack([r[name] for r in rec], axis=1)  # (S, T)
+    src = ReplaySource(fs=stack("fs"), hrs=stack("hrs"), ys=stack("ys"),
+                       betas=stack("betas"))
+    server = HIServer(HIServerConfig(n_streams=s, hi=hi), ldl=None, rdl=None)
+    _, replay = server.run_source(src, K(7))
+
+    assert summary["offload_rate"] == replay["offload_rate"]
+    assert summary["avg_offload_cost"] == pytest.approx(
+        replay["avg_offload_cost"], abs=1e-5)
+    assert summary["avg_true_cost"] == pytest.approx(
+        replay["avg_true_cost"], abs=1e-5)
+    assert summary["accuracy"] == replay["accuracy"]
+
+
+def test_replay_source_round_trips_and_validates():
+    trace = ReplaySource(fs=np.full((2, 8), 0.5, np.float32),
+                         hrs=np.zeros((2, 8), np.int32),
+                         ys=np.zeros((2, 8), np.int32),
+                         betas=np.full((2, 8), 0.3, np.float32),
+                         block=4)
+    out = trace.materialize()
+    assert out.fs.shape == (2, 8)
+    assert bool(jnp.all(out.betas == 0.3))
+    with pytest.raises(ValueError, match="share one"):
+        ReplaySource(fs=np.zeros((2, 8)), hrs=np.zeros((2, 4)),
+                     ys=np.zeros((2, 8)), betas=np.zeros((2, 8)))
+
+
+# ------------------------------ sustained overload ----------------------------
+
+
+def test_sustained_overload_fairness_and_exact_accounting():
+    """Queue saturated for many rounds: admission + rotating drops shed
+    load, yet no stream is starved of remote service, every future
+    resolves, and the shed accounting balances exactly."""
+    s = 6
+    cfg = RequestPlaneConfig(
+        n_streams=s, hi=HIConfig(eps=0.5), max_wait=0.02,
+        offload_capacity=2,
+        admission=AdmissionConfig(max_queue=2 * s))
+    n = 600
+    arr = TrafficProcess(process="poisson", rate=1200.0, n_arrivals=n,
+                         n_sessions=s, key=K(9)).materialize()
+    plane, results, summary = serve_traffic(cfg, arr, K(2))
+
+    assert len(results) == n and all(r.pred in (0, 1) for r in results)
+    assert summary["denied_total"] > 0 and summary["capacity_dropped"] > 0
+    # Exact shed accounting: every request is admitted or denied, every
+    # fallback is a denial or a capacity drop, every admitted request
+    # completes exactly once (and had its latency observed).
+    assert summary["requests_total"] == \
+        summary["admitted_total"] + summary["denied_total"]
+    assert summary["fallback_total"] == \
+        summary["denied_total"] + summary["capacity_dropped"]
+    assert summary["admitted_total"] == summary["latency_ms_count"]
+    assert summary["admitted_total"] == (summary["completed_local"]
+                                         + summary["completed_remote"]
+                                         + summary["capacity_dropped"])
+    # Rotating compaction shares the RDL: no stream starves.
+    assert plane.batcher.stream_sent.min() >= 1
+    # Queue-depth admission bounds tail latency at saturation.
+    assert summary["p99_latency_ms"] < 500.0
+
+
+# ------------------------------ config ----------------------------------------
+
+
+def test_plane_config_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        RequestPlaneConfig(n_streams=4, max_batch=5)
+    with pytest.raises(ValueError, match="max_wait"):
+        RequestPlaneConfig(max_wait=0.0)
+    with pytest.raises(ValueError, match="offload_capacity"):
+        RequestPlaneConfig(offload_capacity=0)
+    with pytest.raises(ValueError, match="adaptive|H2T2State"):
+        run_virtual(_submit_once(RequestPlaneConfig(engine="adaptive")))
+
+
+async def _submit_once(cfg):
+    plane = RequestPlane(cfg, K(0))
+    await plane.submit(0, 0.5, 1)
+    await plane.drain()

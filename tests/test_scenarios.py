@@ -63,6 +63,19 @@ def test_registry_exposes_at_least_five_scenarios():
     assert src.n_blocks == 2
 
 
+def test_synthetic_only_excludes_data_backed_sources():
+    """Generic sweeps (bench_scenarios) construct every name from
+    (n_streams, horizon, key) alone — replay needs arrays and must be
+    filtered out, while every synthetic source must actually construct."""
+    synthetic = available_scenarios(synthetic_only=True)
+    assert "replay" in available_scenarios()
+    assert "replay" not in synthetic
+    for name in synthetic:
+        src = get_scenario(name, n_streams=2, horizon=32, block=16,
+                           key=jax.random.PRNGKey(0))
+        assert src.n_blocks == 2
+
+
 def test_get_scenario_unknown_raises():
     with pytest.raises(ValueError, match="scenario"):
         get_scenario("warp-drive")

@@ -251,3 +251,34 @@ def test_engine_generate(rng):
     out = eng.generate({"tokens": toks}, n_tokens=4)
     assert out.shape == (2, 4)
     assert bool(jnp.all((out >= 0) & (out < cfg.vocab_padded)))
+
+
+def test_run_dispatch_source_forms():
+    """`run(source, key)` works positionally and by keyword; anything that
+    is not a PRNG key in the positional slot raises instead of being
+    silently reinterpreted."""
+    import pytest
+
+    from repro.data import get_scenario
+
+    n_streams = 2
+    server, _ = _tiny_server(n_streams)
+    src = get_scenario("stationary", n_streams=n_streams, horizon=8,
+                       block=4, key=jax.random.PRNGKey(3))
+    k = jax.random.PRNGKey(9)
+    _, by_kw = server.run(src, key=k)
+    _, by_pos = server.run(src, k)
+    assert by_kw == by_pos
+    with pytest.raises(TypeError, match="expected a PRNG key"):
+        server.run(src, jnp.zeros((8, n_streams)))   # a beta matrix
+    with pytest.raises(TypeError, match="takes no betas"):
+        server.run(src, jnp.zeros((8, n_streams)), key=k)
+
+
+def test_run_array_form_requires_betas_and_key():
+    import pytest
+
+    server, _ = _tiny_server(2)
+    tokens = jnp.zeros((2, 2, 8), jnp.int32)
+    with pytest.raises(TypeError, match="needs betas and key"):
+        server.run(tokens, jnp.zeros((2, 2)))

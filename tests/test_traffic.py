@@ -1,0 +1,114 @@
+"""Seeded arrival-process generation (`repro.data.traffic`): the
+ScenarioSource bit-identity contract restated for asynchronous traffic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.traffic import ArrivalBatch, TrafficProcess
+
+
+def _materialized(process, chunk, **kw):
+    tp = TrafficProcess(
+        process=process,
+        rate=200.0,
+        n_arrivals=256,
+        n_sessions=8,
+        chunk=chunk,
+        key=jax.random.PRNGKey(42),
+        **kw,
+    )
+    return tp, tp.materialize()
+
+
+@pytest.mark.parametrize("process", ["poisson", "mmpp"])
+def test_chunk_invariance_bit_identity(process):
+    """The emitted timeline is bit-identical for ANY chunk size — the
+    stateful MMPP regime carry included."""
+    _, whole = _materialized(process, chunk=None)
+    for chunk in (1, 32, 128):
+        _, chunked = _materialized(process, chunk=chunk)
+        for leaf_w, leaf_c in zip(whole, chunked):
+            assert np.array_equal(np.asarray(leaf_w), np.asarray(leaf_c))
+
+
+@pytest.mark.parametrize("process", ["poisson", "mmpp"])
+def test_seed_determinism(process):
+    _, a = _materialized(process, chunk=64)
+    _, b = _materialized(process, chunk=64)
+    for leaf_a, leaf_b in zip(a, b):
+        assert np.array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    other = TrafficProcess(
+        process=process, rate=200.0, n_arrivals=256, key=jax.random.PRNGKey(1)
+    ).materialize()
+    assert not np.array_equal(np.asarray(a.gaps), np.asarray(other.gaps))
+
+
+def test_poisson_rate_and_field_sanity():
+    tp, arr = _materialized("poisson", chunk=None)
+    assert isinstance(arr, ArrivalBatch)
+    gaps = np.asarray(arr.gaps)
+    assert gaps.shape == (256,) and np.all(gaps > 0)
+    # Mean interarrival ≈ 1/rate (CLT slack: ±40% is > 6 sigma at N=256).
+    assert abs(gaps.mean() - 1.0 / tp.rate) < 0.4 / tp.rate
+    sessions = np.asarray(arr.sessions)
+    assert sessions.min() >= 0 and sessions.max() < 8
+    fs = np.asarray(arr.fs)
+    assert np.all((fs > 0.0) & (fs < 1.0))
+    assert set(np.unique(np.asarray(arr.ys))) <= {0, 1}
+    payloads = np.asarray(arr.payloads)
+    assert np.all(payloads >= 4096.0 * 0.5) and np.all(payloads <= 4096.0 * 1.5)
+
+
+def test_mmpp_bursts_raise_arrival_rate():
+    """Burst episodes shorten gaps: the MMPP mean rate must sit strictly
+    between the calm rate and the burst rate."""
+    tp = TrafficProcess(
+        process="mmpp",
+        rate=50.0,
+        burst_rate=500.0,
+        p_burst=0.2,
+        p_calm=0.2,
+        n_arrivals=2048,
+        key=jax.random.PRNGKey(0),
+    )
+    gaps = np.asarray(tp.materialize().gaps)
+    mean_rate = 1.0 / gaps.mean()
+    assert 60.0 < mean_rate < 450.0
+
+
+def test_clean_rdl_labels_match_ground_truth():
+    _, arr = _materialized("poisson", chunk=None)
+    assert np.array_equal(np.asarray(arr.hrs), np.asarray(arr.ys))
+    _, noisy = _materialized("poisson", chunk=None, rdl_fn=0.4, rdl_fp=0.4)
+    assert not np.array_equal(np.asarray(noisy.hrs), np.asarray(noisy.ys))
+    # The flips perturb only hrs: the rest of the timeline is unchanged.
+    assert np.array_equal(np.asarray(arr.ys), np.asarray(noisy.ys))
+    assert np.array_equal(np.asarray(arr.gaps), np.asarray(noisy.gaps))
+
+
+def test_emit_leaves_are_chunk_shaped():
+    tp = TrafficProcess(process="mmpp", rate=100.0, n_arrivals=64, chunk=16)
+    state = tp.init_state()
+    state, batch = tp.emit(state, tp.key, 0)
+    for leaf in batch:
+        assert leaf.shape == (16,)
+    assert state.dtype == jnp.int32
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"process": "weibull"},
+        {"rate": 0.0},
+        {"n_arrivals": 100, "chunk": 32},
+        {"n_sessions": 0},
+        {"payload_jitter": 1.5},
+        {"rdl_fn": 1.0},
+        {"burst_rate": -1.0},
+    ],
+)
+def test_validation(kw):
+    with pytest.raises(ValueError):
+        TrafficProcess(**{"rate": 100.0, "n_arrivals": 64, **kw})
