@@ -5,10 +5,15 @@ The hedge-fleet section times the full H2T2 simulation engine under every
 registered `PolicyEngine` ("reference" vmapped scan, "fused" kernel-backed
 scan — including the time-blocked multi-round variant — and "sharded" when
 more than one device is visible) so the perf trajectory tracks the paths
-serving actually runs. The serving-split section times `engine.decide` /
-`engine.feedback` — the exact two phases `HIServer.serve_slot` runs — per
-engine. All timing metrics use `*_us` keys, which the regression gate never
-compares (`check_regression.py` timing policy).
+serving actually runs, in both randomness modes ("pre_draw" key-tree draws
+and "counter" in-kernel draws). The long-horizon section runs the fused
+engine at T≈10⁶ in both modes and reports `rand_bytes_peak` — the analytic
+peak residency of the (ψ, ζ) randomness: O(S·T) materialized for pre_draw
+vs O(S·time_block) for counter. The serving-split section times
+`engine.decide` / `engine.feedback` — the exact two phases
+`HIServer.serve_slot` runs — per engine. All timing metrics use `*_us`
+keys, which the regression gate never compares (`check_regression.py`
+timing policy); byte metrics are likewise informational.
 
 `run(autotune=True)` (the `benchmarks.run --only kernels --autotune` path)
 additionally sweeps the hedge kernel's (stream_block × time_block) launch
@@ -44,6 +49,9 @@ def _hedge_fleet_rows(quick: bool) -> List[str]:
             "reference": get_engine("reference", cfg),
             "fused": get_engine("fused", cfg),
             "fused_tb8": get_engine("fused", cfg, time_block=8),
+            "fused_counter": get_engine("fused", cfg, randomness="counter"),
+            "fused_tb8_counter": get_engine(
+                "fused", cfg, time_block=8, randomness="counter"),
         }
         if len(jax.devices()) > 1:
             engines["sharded"] = get_engine("sharded", cfg)
@@ -53,6 +61,34 @@ def _hedge_fleet_rows(quick: bool) -> List[str]:
             rows.append(
                 f"hedge_fleet_G{cfg.grid}_S{s}_T{t}_{name},{us:.0f},"
                 f"us_per_round={us / t:.2f};engine={name}")
+    return rows
+
+
+def _long_horizon_rows(quick: bool) -> List[str]:
+    """Randomness residency at serving horizons: pre_draw materializes the
+    full (S, T) (ψ, ζ) tensor up front, counter mode never holds more than
+    the running (S, time_block) working set. `rand_bytes_peak` is that peak
+    analytically (8 bytes per draw: ψ f32 + ζ widened to i32 as the kernel
+    consumes it) — byte metrics are informational in the regression gate,
+    like the `*_us` timings alongside them."""
+    rows = []
+    s, tb = 4, 256
+    t = 51_200 if quick else 1_048_576
+    cfg = HIConfig(bits=4, eps=0.05, eta=1.0)
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    fs = jax.random.uniform(ks[0], (s, t))
+    hrs = jax.random.bernoulli(ks[1], 0.5, (s, t)).astype(jnp.int32)
+    betas = jnp.full((s, t), 0.3)
+    key = jax.random.PRNGKey(1)
+    for mode in ("pre_draw", "counter"):
+        eng = get_engine("fused", cfg, time_block=tb, randomness=mode)
+        fn = jax.jit(lambda k, e=eng: e.run(fs, hrs, betas, k)[1].loss)
+        us = timed(fn, key, reps=1)
+        draws = s * t if mode == "pre_draw" else s * tb
+        rows.append(
+            f"hedge_longhorizon_S{s}_T{t}_{mode},{us:.0f},"
+            f"us_per_round={us / t:.3f};rand_bytes_peak={draws * 8};"
+            f"randomness={mode}")
     return rows
 
 
@@ -97,6 +133,7 @@ def _autotune_rows(quick: bool) -> List[str]:
 
 def run(quick: bool = False, autotune: bool = False) -> List[str]:
     rows = _hedge_fleet_rows(quick)
+    rows += _long_horizon_rows(quick)
     rows += _serving_split_rows(quick)
     if autotune:
         rows += _autotune_rows(quick)

@@ -1,6 +1,13 @@
 # The paper's primary contribution: H2T2 two-threshold hierarchical-inference
 # policy, calibrated-model closed forms, offline optima, and paper baselines.
 from repro.core.types import HIConfig, StreamSpec
+from repro.core.counter import (
+    RANDOMNESS_MODES,
+    CounterRNG,
+    counter_rng,
+    psi_zeta_from_counter,
+    seed_from_key,
+)
 from repro.core.policy import (
     FleetDecision,
     H2T2State,
@@ -9,6 +16,7 @@ from repro.core.policy import (
     adapt_schedule,
     classification_cost,
     draw_fleet_randomness,
+    draw_fleet_slot_randomness,
     draw_psi_zeta,
     effective_local_pred,
     fleet_decide,
@@ -50,17 +58,19 @@ from repro.core import baselines, multiclass, offline, regret
 
 __all__ = [
     "COUNTER_CAP",
+    "CounterRNG", "RANDOMNESS_MODES",
     "HIConfig", "StreamSpec", "FleetDecision", "H2T2State",
     "ShiftConfig", "ShiftState",
     "SourceRunOutput", "StepOutput", "adapt_schedule", "classification_cost",
-    "detect_shifts",
-    "draw_fleet_randomness", "draw_psi_zeta", "effective_local_pred",
+    "counter_rng", "detect_shifts",
+    "draw_fleet_randomness", "draw_fleet_slot_randomness",
+    "draw_psi_zeta", "effective_local_pred",
     "fleet_decide", "fleet_feedback", "fleet_init", "fleet_restart",
     "fleet_rounds_fused", "fleet_step_fused",
     "h2t2_init", "h2t2_step", "local_fallback_pred", "pseudo_loss",
-    "quantize", "region_masks",
+    "psi_zeta_from_counter", "quantize", "region_masks",
     "run_fleet", "run_fleet_fused", "run_fleet_source", "run_stream",
-    "shift_init", "shift_update",
+    "seed_from_key", "shift_init", "shift_update",
     "source_slot_keys", "true_loss_fleet",
     "CalibratedDecision", "calibrated_rule", "chow_rule",
     "multiclass_regions", "multiclass_rule", "optimal_thresholds",

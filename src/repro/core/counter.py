@@ -1,0 +1,158 @@
+"""Counter-based (ψ, ζ) randomness: the golden jnp reference.
+
+The H2T2 round consumes exactly two uniforms per stream per slot — ψ (the
+threshold draw that picks offload / local-predict) and ζ (the bernoulli(ε)
+exploration flag). The pre-draw path materializes them for the whole horizon
+as (S, T) arrays; this module defines the *counter* contract that replaces
+the tensors with a pure function of position:
+
+    (ψ, ζ)[stream, slot] = mix(seed, stream_id, slot)
+
+where `mix` is the canonical 20-round threefry2x32 block cipher applied to
+the (stream_id, slot) counter under the policy key's two uint32 words. The
+draw for a given (seed, stream, slot) is a *value*, not a *state* — so any
+partition of the fleet into stream blocks, any time blocking, and any
+sharding across devices reproduces bit-identical randomness, and nothing is
+ever resident beyond the (SB, TB) worklocal draws of the current launch.
+
+Two implementations exist on purpose:
+
+  * this module — plain jnp, the golden reference (and the XLA fallback
+    path used when the Pallas kernels are off);
+  * `kernels/hedge/kernel.py` — an independent, fully unrolled copy
+    evaluated inside the hedge kernels.
+
+`tests/test_counter_rng.py` pins the two against each other bit-for-bit
+(uint32 equality, interpret mode) and against the published Random123
+known-answer vectors, so a jax/pallas upgrade that changes integer-op
+semantics fails loudly instead of silently forking traces.
+
+Counter mode is a deliberately *different* randomness contract from the
+pre-draw key tree (`jax.random.split` / `fold_in` chains): the two modes
+agree in distribution, not in bits. Pre-draw remains the default and the
+golden path for all paper-parity goldens.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# threefry2x32 constants (Salmon et al., "Parallel random numbers: as easy
+# as 1, 2, 3", SC'11): 20 rounds = 5 four-round groups with alternating
+# rotation schedules, key injection after every group.
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = 0x1BD11BDA
+
+
+def _as_u32(x) -> jnp.ndarray:
+    """Coerce to uint32, wrapping — accepts full-range python ints too."""
+    if isinstance(x, int):
+        x = x & 0xFFFFFFFF
+        return jnp.asarray(x, dtype=jnp.uint32)
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Canonical 20-round threefry2x32: counter (x0, x1) under key (k0, k1).
+
+    All inputs broadcast against each other as uint32; returns two uint32
+    arrays of the broadcast shape. Matches the Random123 known-answer
+    vectors (and jax's internal `threefry_2x32`) bit-for-bit.
+    """
+    k0, k1, x0, x1 = (_as_u32(v) for v in (k0, k1, x0, x1))
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_PARITY))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x0 = x0 + x1
+            x1 = (x1 << r) | (x1 >> (32 - r))
+            x1 = x0 ^ x1
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Map uint32 bits to float32 uniforms in [0, 1).
+
+    Keeps the top 24 bits so the product is exact in a float32 mantissa —
+    the same value is reproducible from the same bits on any backend.
+    """
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def seed_from_key(key) -> jnp.ndarray:
+    """The (2,) uint32 seed words of a jax PRNG key.
+
+    Accepts both raw `jax.random.PRNGKey` uint32 arrays and new-style typed
+    keys; the words double as the threefry key so all counter-mode APIs keep
+    taking the same `key` argument as the pre-draw path.
+    """
+    key = jnp.asarray(key)
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    if key.shape != (2,):
+        raise ValueError(
+            f"counter mode needs a 2-word (threefry) key, got shape "
+            f"{key.shape}")
+    return key.astype(jnp.uint32)
+
+
+def counter_bits(seed: jnp.ndarray, stream_ids, slots):
+    """Raw (b0, b1) uint32 draws for (stream, slot) counters under `seed`."""
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    return threefry2x32(seed[0], seed[1], stream_ids, slots)
+
+
+def psi_zeta_from_counter(seed: jnp.ndarray, stream_ids, slots, eps: float):
+    """The counter contract: (ψ, ζ) for every (stream_id, slot) pair.
+
+    ψ is uniform on [0, 1) from the first output word; ζ is bernoulli(ε)
+    via a float compare on the second (exact for the 24-bit uniforms).
+    Returns (psi float32, zeta bool) of the broadcast shape.
+    """
+    b0, b1 = counter_bits(seed, stream_ids, slots)
+    psi = uniform_from_bits(b0)
+    zeta = uniform_from_bits(b1) < jnp.float32(eps)
+    return psi, zeta
+
+
+class CounterRNG(NamedTuple):
+    """Position of a counter-mode draw: which seed, slot, and stream base.
+
+    A jit-friendly pytree of arrays. `slot` is the time index of the draw
+    (the serving slot / round number); `stream_offset` is the global id of
+    stream row 0 — nonzero only inside sharded per-device bodies, where it
+    restores the fleet-global stream ids that make draws identical to the
+    unsharded run.
+    """
+
+    seed: jnp.ndarray           # (2,) uint32 — threefry key words
+    slot: jnp.ndarray           # () int32
+    stream_offset: jnp.ndarray  # () int32
+
+    def at_slot(self, slot) -> "CounterRNG":
+        return self._replace(slot=jnp.asarray(slot, jnp.int32))
+
+
+def counter_rng(key_or_seed, slot, stream_offset=0) -> CounterRNG:
+    """Build a `CounterRNG` from a PRNG key (or raw seed words) and a slot."""
+    return CounterRNG(
+        seed=seed_from_key(key_or_seed),
+        slot=jnp.asarray(slot, jnp.int32),
+        stream_offset=jnp.asarray(stream_offset, jnp.int32),
+    )
+
+
+RANDOMNESS_MODES = ("pre_draw", "counter")
+
+
+def check_randomness_mode(randomness: str) -> str:
+    if randomness not in RANDOMNESS_MODES:
+        raise ValueError(
+            f"randomness must be one of {RANDOMNESS_MODES}, "
+            f"got {randomness!r}")
+    return randomness

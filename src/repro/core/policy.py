@@ -19,6 +19,12 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.counter import (
+    CounterRNG,
+    check_randomness_mode,
+    psi_zeta_from_counter,
+    seed_from_key,
+)
 from repro.core.types import HIConfig
 
 
@@ -157,9 +163,10 @@ def fleet_decide(
     cfg: HIConfig,
     state: H2T2State,        # leaves batched over (S,)
     fs: jnp.ndarray,         # (S,)
-    psi: jnp.ndarray,        # (S,) pre-drawn uniforms (see draw_psi_zeta)
-    zeta: jnp.ndarray,       # (S,) pre-drawn bernoulli(ε)
+    psi: Optional[jnp.ndarray],   # (S,) pre-drawn uniforms; None w/ rng
+    zeta: Optional[jnp.ndarray],  # (S,) pre-drawn bernoulli(ε); None w/ rng
     *,
+    rng: Optional[CounterRNG] = None,   # counter-mode draw position
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
 ) -> FleetDecision:
@@ -170,12 +177,35 @@ def fleet_decide(
     samples to the remote model and apply `fleet_feedback` once (delayed)
     results arrive.
 
+    Randomness comes in one of two ways: pre-drawn (ψ, ζ) operands (the
+    golden paper path), or a counter-mode `rng` (seed, slot, stream_offset)
+    position with `psi`/`zeta` passed as None — the draws are regenerated
+    in place (in-kernel on the kernel path) and the returned
+    `FleetDecision.psi` carries the regenerated ψ for the capacity-drop
+    fallback.
+
     `use_kernel` routes the region reductions through the Pallas decide
     kernel (`hedge_decide_pallas`); the default auto-selects like
     `fleet_step_fused` (kernel on TPU, vmapped jnp elsewhere,
     `interpret=True` forces the kernel for CPU correctness runs). Both
     paths make identical decisions.
     """
+    if rng is not None:
+        if psi is not None or zeta is not None:
+            raise ValueError("fleet_decide: pass (psi, zeta) OR rng, not both")
+        if _resolve_use_kernel(use_kernel, interpret):
+            from repro.kernels.hedge.ops import fleet_hedge_decide
+
+            i_f, off, exp_, lp, q, p, psi_out = fleet_hedge_decide(
+                cfg, state.log_w, fs, None, None, interpret=interpret,
+                randomness="counter", rng=rng)
+            return FleetDecision(i_f=i_f, offload=off.astype(bool),
+                                 explored=exp_.astype(bool), local_pred=lp,
+                                 q=q, p=p, psi=psi_out)
+        sid = rng.stream_offset + jnp.arange(fs.shape[0], dtype=jnp.int32)
+        psi, zeta = psi_zeta_from_counter(rng.seed, sid, rng.slot, cfg.eps)
+    elif psi is None or zeta is None:
+        raise ValueError("fleet_decide needs (psi, zeta) or a counter rng")
     if _resolve_use_kernel(use_kernel, interpret):
         from repro.kernels.hedge.ops import fleet_hedge_decide
 
@@ -470,13 +500,35 @@ def draw_fleet_randomness(
     n_streams: int,
     horizon: int,
     stream_keys: Optional[jnp.ndarray] = None,
+    *,
+    randomness: str = "pre_draw",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Pre-draw the (ψ, ζ) used by every (stream, round), as (S, T) arrays.
 
-    Reproduces `run_fleet`'s key tree bit-for-bit: key → S stream keys → T
-    round keys each → `draw_psi_zeta`. Pass `stream_keys` (S, 2) to pin
-    per-stream keys directly (e.g. one PRNGKey per seed).
+    `randomness="pre_draw"` (default) reproduces `run_fleet`'s key tree
+    bit-for-bit: key → S stream keys → T round keys each → `draw_psi_zeta`.
+    Pass `stream_keys` (S, 2) to pin per-stream keys directly (e.g. one
+    PRNGKey per seed).
+
+    `randomness="counter"` materializes the counter contract instead —
+    `psi_zeta_from_counter(seed_from_key(key), stream, slot)` over the full
+    (S, T) grid. This is the O(S×T) cross-check for the in-kernel counter
+    path (which never materializes it); `stream_keys` is invalid here
+    because counter draws are position-keyed, not key-tree-keyed.
     """
+    check_randomness_mode(randomness)
+    if randomness == "counter":
+        if stream_keys is not None:
+            raise ValueError(
+                "counter randomness is position-keyed; `stream_keys` only "
+                "applies to pre_draw")
+        if key is None:
+            raise ValueError("draw_fleet_randomness needs `key`")
+        seed = seed_from_key(key)
+        sid = jnp.arange(n_streams, dtype=jnp.int32)
+        slots = jnp.arange(horizon, dtype=jnp.int32)
+        return psi_zeta_from_counter(
+            seed, sid[:, None], slots[None, :], cfg.eps)
     if stream_keys is None:
         if key is None:
             raise ValueError("draw_fleet_randomness needs `key` or `stream_keys`")
@@ -500,6 +552,25 @@ def source_slot_keys(key: jax.Array, t, n_streams: int) -> jnp.ndarray:
     kt = jax.random.fold_in(key, t)
     return jax.vmap(lambda i: jax.random.fold_in(kt, i))(
         jnp.arange(n_streams))
+
+
+def draw_fleet_slot_randomness(
+    cfg: HIConfig, key: jax.Array, n_streams: int, horizon: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize the slot-keyed contract as (S, T) arrays: slot t draws
+    `draw_psi_zeta(source_slot_keys(key, t, S))`.
+
+    This is what every source-driven pre-draw path (`run_fleet_source` and
+    all engines' `run_source`) consumes slot-by-slot; materializing it lets
+    tests pin the "identical randomness" claim against actual runs without
+    replaying a source.
+    """
+
+    def per_slot(t):
+        return draw_psi_zeta(source_slot_keys(key, t, n_streams), cfg.eps)
+
+    psis, zetas = jax.vmap(per_slot)(jnp.arange(horizon))     # (T, S)
+    return psis.T, zetas.T
 
 
 class SourceRunOutput(NamedTuple):
@@ -545,25 +616,44 @@ def run_fleet_source(
     step_fn=None,
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    randomness: str = "pre_draw",
 ) -> Tuple[H2T2State, SourceRunOutput]:
     """Run a fleet over a `ScenarioSource` block-by-block, never holding the
     (S, T) trace: each `lax.scan` block emits one (S, block) SlotBatch and
     reduces it to per-block aggregates on device.
 
-    `step_fn(state, fs, betas, hrs, keys) -> (state, StepOutput)` selects the
-    execution path (pass a `PolicyEngine._step`); defaults to the fused fleet
-    step. Policy randomness follows `source_slot_keys(key, t, S)`, so every
-    step path produces identical decisions for the same `key`.
+    `step_fn(state, fs, betas, hrs, keys, t) -> (state, StepOutput)` selects
+    the execution path (pass a `PolicyEngine._step`); defaults to the fused
+    fleet step. Under `randomness="pre_draw"` policy randomness follows
+    `source_slot_keys(key, t, S)` (see `draw_fleet_slot_randomness` for the
+    materialized form), so every step path produces identical decisions for
+    the same `key`. Under `randomness="counter"` the slot keys are never
+    built — `keys` carries the (2,) uint32 counter seed
+    (`seed_from_key(key)`, constant across slots) and the step draws in
+    place at position (seed, stream, slot `t`).
     """
     if key is None:
         raise TypeError("run_fleet_source needs a policy `key` (the source "
                         "carries only its own generative key)")
+    check_randomness_mode(randomness)
     s, bsz = source.n_streams, source.block
+    counter = randomness == "counter"
+    seed = seed_from_key(key) if counter else None
     if step_fn is None:
-        def step_fn(st, f, beta, hr, keys):
-            psi, zeta = draw_psi_zeta(keys, cfg.eps)
-            return fleet_step_fused(cfg, st, f, psi, zeta, hr, beta,
-                                    use_kernel=use_kernel, interpret=interpret)
+        if counter:
+            def step_fn(st, f, beta, hr, keys, t):
+                rng = CounterRNG(seed=keys,
+                                 slot=jnp.asarray(t, jnp.int32),
+                                 stream_offset=jnp.zeros((), jnp.int32))
+                return fleet_step_fused(
+                    cfg, st, f, None, None, hr, beta,
+                    use_kernel=use_kernel, interpret=interpret, rng=rng)
+        else:
+            def step_fn(st, f, beta, hr, keys, t):
+                psi, zeta = draw_psi_zeta(keys, cfg.eps)
+                return fleet_step_fused(
+                    cfg, st, f, psi, zeta, hr, beta,
+                    use_kernel=use_kernel, interpret=interpret)
 
     if state is None:
         state = fleet_init(cfg, s)
@@ -571,7 +661,8 @@ def run_fleet_source(
 
     def slot_body(pst, xs):
         f, hr, y, beta, t = xs
-        pst, out = step_fn(pst, f, beta, hr, source_slot_keys(key, t, s))
+        keys = seed if counter else source_slot_keys(key, t, s)
+        pst, out = step_fn(pst, f, beta, hr, keys, t)
         return pst, (out.loss, true_loss_fleet(cfg, out, y, beta),
                      out.offload, out.explored, out.pred == y)
 
@@ -612,17 +703,22 @@ def fleet_step_fused(
     cfg: HIConfig,
     state: H2T2State,        # leaves batched over (S,)
     f: jnp.ndarray,          # (S,)
-    psi: jnp.ndarray,        # (S,) pre-drawn uniforms
-    zeta: jnp.ndarray,       # (S,) pre-drawn bernoulli(ε)
+    psi: Optional[jnp.ndarray],   # (S,) pre-drawn uniforms; None w/ rng
+    zeta: Optional[jnp.ndarray],  # (S,) pre-drawn bernoulli(ε); None w/ rng
     h_r: jnp.ndarray,        # (S,)
     beta: jnp.ndarray,       # (S,)
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
     *,
+    rng: Optional[CounterRNG] = None,     # counter-mode draw position
     eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
 ) -> Tuple[H2T2State, StepOutput]:
     """One fleet round via the fused kernel; mirrors vmapped `h2t2_step`.
+
+    Randomness is either pre-drawn (ψ, ζ) operands or — with `psi=zeta=None`
+    and a `rng` counter position — regenerated in place from
+    `(seed, stream, slot)`, so nothing randomness-shaped ever sits in HBM.
 
     `use_kernel=None` auto-selects: compiled Pallas on TPU, jnp oracle
     elsewhere — unless `interpret=True`, which forces the kernel in
@@ -634,10 +730,17 @@ def fleet_step_fused(
     from repro.kernels.hedge.ops import fleet_hedge_step
 
     use_kernel = _resolve_use_kernel(use_kernel, interpret)
-    new_lw, off, exp_, lp, q, p = fleet_hedge_step(
-        cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
-        h_r.astype(jnp.int32), beta,
-        use_kernel=use_kernel, interpret=interpret, eta=eta, decay=decay)
+    if rng is not None:
+        new_lw, off, exp_, lp, q, p = fleet_hedge_step(
+            cfg, state.log_w, f, None, None,
+            h_r.astype(jnp.int32), beta,
+            use_kernel=use_kernel, interpret=interpret, eta=eta, decay=decay,
+            randomness="counter", rng=rng)
+    else:
+        new_lw, off, exp_, lp, q, p = fleet_hedge_step(
+            cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
+            h_r.astype(jnp.int32), beta,
+            use_kernel=use_kernel, interpret=interpret, eta=eta, decay=decay)
     offload = off.astype(bool)
     explored = exp_.astype(bool)
     loss, pred = _charge_losses(cfg, offload, lp, h_r, beta)
@@ -661,13 +764,15 @@ def fleet_rounds_fused(
     cfg: HIConfig,
     state: H2T2State,        # leaves batched over (S,)
     f: jnp.ndarray,          # (S, TB)
-    psi: jnp.ndarray,        # (S, TB) pre-drawn uniforms
-    zeta: jnp.ndarray,       # (S, TB) pre-drawn bernoulli(ε)
+    psi: Optional[jnp.ndarray],   # (S, TB) pre-drawn uniforms; None w/ rng
+    zeta: Optional[jnp.ndarray],  # (S, TB) pre-drawn ζ; None w/ rng
     h_r: jnp.ndarray,        # (S, TB)
     beta: jnp.ndarray,       # (S, TB)
     use_kernel: Optional[bool] = None,
     interpret: Optional[bool] = None,
     *,
+    rng: Optional[CounterRNG] = None,     # counter position of the block's
+                                          # first round; round j draws slot+j
     eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
 ) -> Tuple[H2T2State, StepOutput]:
@@ -675,17 +780,27 @@ def fleet_rounds_fused(
 
     Mirrors a TB-long chain of `fleet_step_fused` calls — same state, same
     (S, TB) StepOutput leaves — with the expert grids resident in VMEM for
-    the whole block on TPU. The (η, decay) schedule is per-stream but held
-    fixed across the block (a constraint the serving layer checks before
-    taking this path for an adaptive schedule).
+    the whole block on TPU. With a counter `rng` (and `psi=zeta=None`),
+    round j of the block draws at slot `rng.slot + j` in-kernel — peak
+    randomness residency O(S×TB) regardless of the horizon. The (η, decay)
+    schedule is per-stream but held fixed across the block (a constraint
+    the serving layer checks before taking this path for an adaptive
+    schedule).
     """
     from repro.kernels.hedge.ops import fleet_hedge_rounds
 
     use_kernel = _resolve_use_kernel(use_kernel, interpret)
-    new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
-        cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
-        h_r.astype(jnp.int32), beta, use_kernel=use_kernel,
-        interpret=interpret, eta=eta, decay=decay)
+    if rng is not None:
+        new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
+            cfg, state.log_w, f, None, None,
+            h_r.astype(jnp.int32), beta, use_kernel=use_kernel,
+            interpret=interpret, eta=eta, decay=decay,
+            randomness="counter", rng=rng)
+    else:
+        new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
+            cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
+            h_r.astype(jnp.int32), beta, use_kernel=use_kernel,
+            interpret=interpret, eta=eta, decay=decay)
     offload = off.astype(bool)
     explored = exp_.astype(bool)
     loss, pred = _charge_losses(cfg, offload, lp, h_r, beta)
@@ -712,6 +827,7 @@ def run_fleet_fused(
     interpret: Optional[bool] = None,
     time_block: int = 1,
     stream_keys: Optional[jnp.ndarray] = None,
+    randomness: str = "pre_draw",
     eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
 ) -> Tuple[H2T2State, StepOutput]:
@@ -723,10 +839,65 @@ def run_fleet_fused(
     which keeps the expert grids in VMEM for `time_block` rounds per launch;
     requires T % time_block == 0. `eta`/`decay` thread a per-stream (S,)
     schedule (held fixed over the horizon) through either kernel path.
+
+    `randomness="pre_draw"` (default, the golden path) materializes the
+    whole (S, T) (ψ, ζ) block up front. `randomness="counter"` never does:
+    each scan step carries only a counter position (seed, slot, offset) and
+    the draws are regenerated in place — peak randomness residency
+    O(S×time_block). Counter runs are position-keyed off `key` alone;
+    `stream_keys` is a pre-draw-only knob.
     """
+    check_randomness_mode(randomness)
     s, t = fs.shape
     if state is None:
         state = fleet_init(cfg, s)
+
+    if randomness == "counter":
+        if stream_keys is not None:
+            raise ValueError(
+                "counter randomness is position-keyed; `stream_keys` only "
+                "applies to pre_draw")
+        if key is None:
+            raise ValueError("counter randomness needs `key`")
+        seed = seed_from_key(key)
+        offset = jnp.zeros((), jnp.int32)
+        if time_block == 1:
+            def body(st, xs):
+                f, hr, beta, slot = xs
+                rng = CounterRNG(seed=seed, slot=slot, stream_offset=offset)
+                return fleet_step_fused(
+                    cfg, st, f, None, None, hr, beta,
+                    use_kernel=use_kernel, interpret=interpret,
+                    rng=rng, eta=eta, decay=decay)
+
+            slots = jnp.arange(t, dtype=jnp.int32)
+            final, outs = jax.lax.scan(
+                body, state, (fs.T, hrs.T, betas.T, slots))
+            return final, jax.tree_util.tree_map(
+                lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+        if t % time_block:
+            raise ValueError(
+                f"horizon {t} not divisible by time_block {time_block}")
+        uk = _resolve_use_kernel(use_kernel, interpret)
+        n_blocks = t // time_block
+        blocked = lambda a: jnp.swapaxes(
+            a.reshape(s, n_blocks, time_block), 0, 1)
+        xs = tuple(blocked(a) for a in (fs, hrs, betas))
+        slot0s = jnp.arange(n_blocks, dtype=jnp.int32) * time_block
+
+        def body(st, xs_):
+            f, hr, beta, slot0 = xs_
+            rng = CounterRNG(seed=seed, slot=slot0, stream_offset=offset)
+            return fleet_rounds_fused(
+                cfg, st, f, None, None, hr, beta,
+                use_kernel=uk, interpret=interpret,
+                rng=rng, eta=eta, decay=decay)
+
+        final, outs = jax.lax.scan(body, state, xs + (slot0s,))
+        unblock = lambda a: jnp.swapaxes(a, 0, 1).reshape(s, t)
+        return final, jax.tree_util.tree_map(unblock, outs)
+
     psis, zetas = draw_fleet_randomness(cfg, key, s, t, stream_keys)
 
     if time_block == 1:

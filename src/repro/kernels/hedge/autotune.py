@@ -49,7 +49,22 @@ def cache_path() -> str:
     return os.path.join(root, "results", "hedge_autotune.json")
 
 
-def _entry_key(g: int, s: int, platform: str) -> str:
+def _entry_key(g: int, s: int, platform: str,
+               randomness: str = "pre_draw") -> str:
+    """Cache key: platform/G<grid>/S<streams>/<randomness>.
+
+    Keyed by randomness mode because the two modes have different kernel
+    bodies (counter mode trades the (SB, TB) ψ/ζ HBM reads for 20 rounds of
+    in-register mixing per draw) — a counter-mode winner must not be applied
+    to pre-draw runs, and vice versa. `lookup` still falls back to the
+    pre-mode legacy key (no suffix) for pre_draw, so committed caches keep
+    working.
+    """
+    return f"{platform}/G{g}/S{s}/{randomness}"
+
+
+def _legacy_entry_key(g: int, s: int, platform: str) -> str:
+    """Pre-randomness-mode key shape; consulted as a pre_draw fallback."""
     return f"{platform}/G{g}/S{s}"
 
 
@@ -77,21 +92,31 @@ def load_cache(path: Optional[str] = None) -> Dict[str, dict]:
 
 
 def lookup(g: int, s: int, platform: Optional[str] = None,
-           path: Optional[str] = None) -> Optional[dict]:
-    """The cached best-(SB, TB) record for (G, S, platform), or None."""
+           path: Optional[str] = None,
+           randomness: str = "pre_draw") -> Optional[dict]:
+    """The cached best-(SB, TB) record for (G, S, platform, mode), or None.
+
+    pre_draw lookups fall back to the legacy (mode-less) key so caches
+    written before randomness modes existed stay valid; counter-mode
+    lookups never do — legacy winners were measured on pre-draw kernels.
+    """
     platform = jax.default_backend() if platform is None else platform
-    return load_cache(path).get(_entry_key(g, s, platform))
+    cache = load_cache(path)
+    rec = cache.get(_entry_key(g, s, platform, randomness))
+    if rec is None and randomness == "pre_draw":
+        rec = cache.get(_legacy_entry_key(g, s, platform))
+    return rec
 
 
-def best_blocks(g: int, s: int, platform: Optional[str] = None
-                ) -> Tuple[int, int]:
+def best_blocks(g: int, s: int, platform: Optional[str] = None,
+                randomness: str = "pre_draw") -> Tuple[int, int]:
     """(stream_block, time_block) — cached winner, or the static defaults.
 
     Tolerant of partial entries (hand-edited or older-format caches): a
     missing field falls back to its default rather than crashing the
     serving hot path over an advisory performance cache.
     """
-    rec = lookup(g, s, platform)
+    rec = lookup(g, s, platform, randomness=randomness)
     if rec is None:
         return DEFAULT_STREAM_BLOCK, DEFAULT_TIME_BLOCK
     try:
@@ -101,33 +126,43 @@ def best_blocks(g: int, s: int, platform: Optional[str] = None
         return DEFAULT_STREAM_BLOCK, DEFAULT_TIME_BLOCK
 
 
-def best_stream_block(g: int, s: int, platform: Optional[str] = None) -> int:
-    return best_blocks(g, s, platform)[0]
+def best_stream_block(g: int, s: int, platform: Optional[str] = None,
+                      randomness: str = "pre_draw") -> int:
+    return best_blocks(g, s, platform, randomness)[0]
 
 
-def best_time_block(g: int, s: int, platform: Optional[str] = None) -> int:
-    return best_blocks(g, s, platform)[1]
+def best_time_block(g: int, s: int, platform: Optional[str] = None,
+                    randomness: str = "pre_draw") -> int:
+    return best_blocks(g, s, platform, randomness)[1]
 
 
 def _measure_rounds_us(cfg, s: int, sb: int, tb: int, interpret: bool,
-                       reps: int) -> float:
+                       reps: int, randomness: str = "pre_draw") -> float:
     """µs per H2T2 round of one multi-round launch chain at (SB, TB)."""
+    from repro.core.counter import counter_rng
     from repro.kernels.hedge.ops import fleet_hedge_rounds
 
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     logw = jnp.where(
         jnp.arange(cfg.grid)[:, None] <= jnp.arange(cfg.grid)[None, :],
         0.0, -1e30)[None].repeat(s, 0).astype(jnp.float32)
-    args = (logw,
-            jax.random.uniform(ks[0], (s, tb)),
-            jax.random.uniform(ks[1], (s, tb)),
-            jax.random.bernoulli(ks[2], cfg.eps, (s, tb)).astype(jnp.int32),
+    data = (jax.random.uniform(ks[0], (s, tb)),
             jax.random.bernoulli(ks[3], 0.5, (s, tb)).astype(jnp.int32),
             jax.random.uniform(ks[4], (s, tb), maxval=0.6))
+    if randomness == "counter":
+        kw = dict(rng=counter_rng(jax.random.PRNGKey(0), 0))
+        args = (logw, data[0], None, None) + data[1:]
+    else:
+        kw = {}
+        args = (logw, data[0],
+                jax.random.uniform(ks[1], (s, tb)),
+                jax.random.bernoulli(ks[2], cfg.eps,
+                                     (s, tb)).astype(jnp.int32)) + data[1:]
 
     def fn():
         return fleet_hedge_rounds(cfg, *args, use_kernel=True,
-                                  interpret=interpret, stream_block=sb)
+                                  interpret=interpret, stream_block=sb,
+                                  randomness=randomness, **kw)
 
     jax.block_until_ready(fn())                       # compile outside timing
     t0 = time.perf_counter()
@@ -147,6 +182,7 @@ def sweep(
     interpret: Optional[bool] = None,
     path: Optional[str] = None,
     write: bool = True,
+    randomness: str = "pre_draw",
 ) -> Dict[str, dict]:
     """Time every (SB ≤ S) × TB pair per (G, S); persist the winners.
 
@@ -173,16 +209,18 @@ def sweep(
             # fleet must not leave the sweep empty.
             for sb in sorted({min(b, s) for b in stream_blocks}):
                 for tb in time_blocks:
-                    us = _measure_rounds_us(cfg, s, sb, tb, interp, reps)
+                    us = _measure_rounds_us(cfg, s, sb, tb, interp, reps,
+                                            randomness)
                     measured[f"sb{sb}_tb{tb}"] = round(us, 3)
                     if best is None or us < best[0]:
                         best = (us, sb, tb)
             us, sb, tb = best
-            entries[_entry_key(g, s, platform)] = {
+            entries[_entry_key(g, s, platform, randomness)] = {
                 "stream_block": sb,
                 "time_block": tb,
                 "us_per_round": round(us, 3),
                 "interpret": bool(interp),
+                "randomness": randomness,
                 "measured": measured,
             }
     if write:
@@ -198,7 +236,8 @@ def write_cache(entries: Dict[str, dict], path: Optional[str] = None) -> str:
     doc = {
         "format": "hedge-autotune-v1",
         "note": ("best (stream_block, time_block) per platform/G<grid>/"
-                 "S<streams>; interpret-mode (CPU) timings are not "
+                 "S<streams>/<randomness>; legacy mode-less keys are read "
+                 "as pre_draw. interpret-mode (CPU) timings are not "
                  "predictive for TPU — entries are consulted per-platform "
                  "only. Refresh: benchmarks.run --only kernels --autotune"),
         "entries": {k: merged[k] for k in sorted(merged)},

@@ -43,7 +43,85 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+try:  # TPU-only hardware PRNG (no CPU interpret lowering; see counter docs)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - pallas without the TPU extension
+    pltpu = None
+
 NEG = -1e30
+
+# ---------------------------------------------------------------------------
+# Counter-mode randomness: the kernel-native twin of
+# `repro.core.counter.threefry2x32`. Implemented independently (fully
+# unrolled round ladder) on purpose — `tests/test_counter_rng.py` pins the
+# two implementations bit-for-bit against each other and against the
+# Random123 known-answer vectors, so integer-semantics drift in a jax or
+# pallas upgrade fails loudly instead of silently forking traces.
+# ---------------------------------------------------------------------------
+
+# 20 rounds of threefry2x32: the two 4-rotation schedules, alternating.
+_TF_ROT = (13, 15, 26, 6, 17, 29, 16, 24) * 3
+_TF_PARITY = 0x1BD11BDA
+_U24_SCALE = 1.0 / (1 << 24)
+
+
+def _tf2x32(k0, k1, c0, c1):
+    """threefry2x32(counter=(c0, c1), key=(k0, k1)) — all uint32."""
+    keys = (k0, k1, k0 ^ k1 ^ jnp.uint32(_TF_PARITY))
+    x0 = c0 + k0
+    x1 = c1 + k1
+    for r in range(20):
+        rot = _TF_ROT[r]
+        x0 = x0 + x1
+        x1 = ((x1 << rot) | (x1 >> (32 - rot))) ^ x0
+        if (r + 1) % 4 == 0:
+            j = (r + 1) // 4
+            x0 = x0 + keys[j % 3]
+            x1 = x1 + keys[(j + 1) % 3] + jnp.uint32(j)
+    return x0, x1
+
+
+def _counter_psi_zeta(seed0, seed1, sid, slot, eps: float):
+    """The in-kernel counter contract: (ψ, ζ) from (stream, slot) position.
+
+    Mirrors `repro.core.counter.psi_zeta_from_counter` exactly: top 24 bits
+    of each output word as a float32 uniform (exact in the mantissa), ζ via
+    a float compare against ε.
+    """
+    b0, b1 = _tf2x32(seed0, seed1,
+                     sid.astype(jnp.uint32), slot.astype(jnp.uint32))
+    psi = (b0 >> 8).astype(jnp.float32) * jnp.float32(_U24_SCALE)
+    u1 = (b1 >> 8).astype(jnp.float32) * jnp.float32(_U24_SCALE)
+    zeta = (u1 < jnp.float32(eps)).astype(jnp.int32)
+    return psi, zeta
+
+
+def _rng_words(rng_ref):
+    """Unpack the (4,) int32 rng vector: seed words, slot, stream offset."""
+    vals = rng_ref[...]
+    seed0 = jax.lax.bitcast_convert_type(vals[0], jnp.uint32)
+    seed1 = jax.lax.bitcast_convert_type(vals[1], jnp.uint32)
+    return seed0, seed1, vals[2], vals[3]
+
+
+def _block_stream_ids(offset, stream_block: int):
+    """Global stream ids of this program's (SB,) block rows."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (stream_block, 1), 0)[:, 0]
+    return offset + pl.program_id(0) * stream_block + iota
+
+
+def pack_counter_rng(rng) -> jnp.ndarray:
+    """Pack a `CounterRNG`-like (seed, slot, stream_offset) into the (4,)
+    int32 vector the counter kernels take (seed words bitcast, not
+    converted, so the full uint32 range survives)."""
+    seed, slot, offset = rng[0], rng[1], rng[2]
+    seed_i = jax.lax.bitcast_convert_type(
+        jnp.asarray(seed).astype(jnp.uint32), jnp.int32)
+    return jnp.stack([
+        seed_i[0], seed_i[1],
+        jnp.asarray(slot, jnp.int32).reshape(()),
+        jnp.asarray(offset, jnp.int32).reshape(()),
+    ])
 
 
 def _region_logsum(logw, mask):
@@ -224,6 +302,164 @@ def hedge_feedback_kernel(
         h_r_ref[...], beta_ref[...], eta_ref[...], decay_ref[...],
         l_idx, u_idx, valid, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
     new_log_w_ref[...] = new_logw.astype(new_log_w_ref.dtype)
+
+
+def hedge_step_counter_kernel(
+    # inputs
+    log_w_ref, i_f_ref, rng_ref, h_r_ref, beta_ref, eta_ref, decay_ref,
+    # outputs
+    new_log_w_ref, offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
+    *, grid_side: int, stream_block: int, eps: float,
+    delta_fp: float, delta_fn: float,
+):
+    """Counter-mode monolithic step: (ψ, ζ) regenerated in-register from the
+    (stream, slot) position — no randomness inputs, no randomness in HBM."""
+    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
+    l_idx, u_idx, valid = _grid_iota(grid_side)
+    seed0, seed1, slot, offset = _rng_words(rng_ref)
+    sid = _block_stream_ids(offset, stream_block)
+    psi, zeta = _counter_psi_zeta(seed0, seed1, sid, slot, eps)
+    new_logw, offload, explored, local_pred, q, p = _round_body(
+        logw, i_f_ref[...], psi, zeta, h_r_ref[...],
+        beta_ref[...], eta_ref[...], decay_ref[...], l_idx, u_idx, valid,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+
+    new_log_w_ref[...] = new_logw.astype(new_log_w_ref.dtype)
+    offload_ref[...] = offload.astype(jnp.int32)
+    explored_ref[...] = explored.astype(jnp.int32)
+    local_pred_ref[...] = local_pred
+    q_ref[...] = q.astype(jnp.float32)
+    p_ref[...] = p.astype(jnp.float32)
+
+
+def hedge_rounds_counter_kernel(
+    # inputs
+    log_w_ref, i_f_ref, rng_ref, h_r_ref, beta_ref, eta_ref, decay_ref,
+    # outputs
+    new_log_w_ref, offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
+    *, grid_side: int, n_rounds: int, stream_block: int, eps: float,
+    delta_fp: float, delta_fn: float,
+):
+    """Counter-mode time-blocked rounds: round t draws at slot₀ + t, so a
+    TB-chain reproduces the per-slot draws of any other chunking exactly —
+    the whole horizon's randomness never exists outside registers."""
+    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
+    l_idx, u_idx, valid = _grid_iota(grid_side)
+    eta = eta_ref[...]
+    decay = decay_ref[...]
+    seed0, seed1, slot0, offset = _rng_words(rng_ref)
+    sid = _block_stream_ids(offset, stream_block)
+
+    for t in range(n_rounds):                            # static unroll
+        psi, zeta = _counter_psi_zeta(seed0, seed1, sid, slot0 + t, eps)
+        logw, offload, explored, local_pred, q, p = _round_body(
+            logw, i_f_ref[:, t], psi, zeta, h_r_ref[:, t],
+            beta_ref[:, t], eta, decay, l_idx, u_idx, valid,
+            eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+        offload_ref[:, t] = offload.astype(jnp.int32)
+        explored_ref[:, t] = explored.astype(jnp.int32)
+        local_pred_ref[:, t] = local_pred
+        q_ref[:, t] = q.astype(jnp.float32)
+        p_ref[:, t] = p.astype(jnp.float32)
+
+    new_log_w_ref[...] = logw.astype(new_log_w_ref.dtype)
+
+
+def hedge_decide_counter_kernel(
+    # inputs
+    log_w_ref, i_f_ref, rng_ref,
+    # outputs
+    offload_ref, explored_ref, local_pred_ref, q_ref, p_ref, psi_ref,
+    *, grid_side: int, stream_block: int, eps: float,
+):
+    """Counter-mode serving decide. Additionally *outputs* the ψ draw: the
+    serving layer reuses it for the capacity-drop local fallback
+    (`FleetDecision.psi`), which pre-draw mode gets from the caller."""
+    logw = log_w_ref[...].astype(jnp.float32)            # (SB, G, G)
+    l_idx, u_idx, valid = _grid_iota(grid_side)
+    seed0, seed1, slot, offset = _rng_words(rng_ref)
+    sid = _block_stream_ids(offset, stream_block)
+    psi, zeta = _counter_psi_zeta(seed0, seed1, sid, slot, eps)
+    _, _, offload, explored, local_pred, q, p = _decide_body(
+        logw, i_f_ref[...], psi, zeta, l_idx, u_idx, valid)
+    offload_ref[...] = offload.astype(jnp.int32)
+    explored_ref[...] = explored.astype(jnp.int32)
+    local_pred_ref[...] = local_pred
+    q_ref[...] = q.astype(jnp.float32)
+    p_ref[...] = p.astype(jnp.float32)
+    psi_ref[...] = psi.astype(jnp.float32)
+
+
+def _counter_draw_kernel(
+    rng_ref, b0_ref, b1_ref, psi_ref, zeta_ref,
+    *, stream_block: int, eps: float, hw_bits: bool,
+):
+    """Raw counter draws for one slot — the bit-compat test surface.
+
+    `hw_bits=True` swaps the portable threefry mixing for the TPU hardware
+    generator (`pltpu.prng_seed`/`prng_random_bits` seeded per (stream
+    block, slot)). That path has no CPU interpret lowering, is NOT
+    bit-compatible with the counter contract, and its draws depend on the
+    stream_block partition — it exists only for on-TPU throughput
+    experiments (see ROADMAP's TPU-validation item).
+    """
+    vals = rng_ref[...]
+    if hw_bits:
+        if pltpu is None:  # pragma: no cover
+            raise NotImplementedError("pltpu unavailable")
+        pltpu.prng_seed(vals[0], vals[1], vals[2], pl.program_id(0))
+        b0 = pltpu.prng_random_bits((stream_block,)).astype(jnp.uint32)
+        b1 = pltpu.prng_random_bits((stream_block,)).astype(jnp.uint32)
+        psi = (b0 >> 8).astype(jnp.float32) * jnp.float32(_U24_SCALE)
+        u1 = (b1 >> 8).astype(jnp.float32) * jnp.float32(_U24_SCALE)
+        zeta = (u1 < jnp.float32(eps)).astype(jnp.int32)
+    else:
+        seed0, seed1, slot, offset = _rng_words(rng_ref)
+        sid = _block_stream_ids(offset, stream_block)
+        b0, b1 = _tf2x32(seed0, seed1,
+                         sid.astype(jnp.uint32), slot.astype(jnp.uint32))
+        psi, zeta = _counter_psi_zeta(seed0, seed1, sid, slot, eps)
+    b0_ref[...] = b0
+    b1_ref[...] = b1
+    psi_ref[...] = psi
+    zeta_ref[...] = zeta
+
+
+def counter_draw_pallas(
+    rng,                     # (seed (2,) uint32, slot (), stream_offset ())
+    n_streams: int,
+    *,
+    eps: float,
+    stream_block: int = 8,
+    interpret: bool = True,
+    hw_bits: bool = False,
+):
+    """Kernel-native counter draws for one slot: (b0, b1, ψ, ζ), each (S,).
+
+    The debug/test wrapper behind the pinned bit-compat suite: raw uint32
+    words straight out of the in-kernel mixing, compared bit-for-bit
+    against `repro.core.counter.counter_bits`/`psi_zeta_from_counter`.
+    """
+    s = int(n_streams)
+    sb, s_pad, _ = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
+    kern = functools.partial(
+        _counter_draw_kernel, stream_block=sb, eps=eps, hw_bits=hw_bits)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=(vec(), vec(), vec(), vec()),
+        out_shape=(
+            jax.ShapeDtypeStruct((s_pad,), jnp.uint32),
+            jax.ShapeDtypeStruct((s_pad,), jnp.uint32),
+            jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(pack_counter_rng(rng))
+    return tuple(o[:s] for o in out)
 
 
 def _block_streams(s: int, stream_block: int):
@@ -438,3 +674,153 @@ def hedge_feedback_pallas(
         interpret=interpret,
     )(*args)
     return out[:s]
+
+
+def _rng_spec():
+    return pl.BlockSpec((4,), lambda i: (0,))
+
+
+def hedge_step_counter_pallas(
+    log_w: jnp.ndarray,      # (S, G, G) float32
+    i_f: jnp.ndarray,        # (S,) int32
+    rng,                     # (seed (2,) uint32, slot (), stream_offset ())
+    h_r: jnp.ndarray,        # (S,) int32
+    beta: jnp.ndarray,       # (S,) float32
+    eta,                     # scalar or (S,) float32 — per-stream η
+    decay,                   # scalar or (S,) float32 — per-stream decay
+    *,
+    eps: float, delta_fp: float, delta_fn: float,
+    stream_block: int = 8,
+    interpret: bool = True,
+):
+    """Counter-mode `hedge_step_pallas`: no (ψ, ζ) inputs — the draws are
+    regenerated from (stream, slot) position inside the kernel."""
+    s, g, _ = log_w.shape
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
+    kern = functools.partial(
+        hedge_step_counter_kernel, grid_side=g, stream_block=sb, eps=eps,
+        delta_fp=delta_fp, delta_fn=delta_fn)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s_pad, g, g), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+    )
+    padded = _pad_streams(pad, log_w, i_f, h_r, beta,
+                          _sched_vec(eta, s), _sched_vec(decay, s))
+    args = padded[:2] + (pack_counter_rng(rng),) + padded[2:]
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            vec(), _rng_spec(), vec(), vec(), vec(), vec(),
+        ],
+        out_specs=(
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            vec(), vec(), vec(), vec(), vec(),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:s] for o in out)
+
+
+def hedge_rounds_counter_pallas(
+    log_w: jnp.ndarray,      # (S, G, G) float32
+    i_f: jnp.ndarray,        # (S, TB) int32
+    rng,                     # (seed, slot₀, stream_offset) — round t at slot₀+t
+    h_r: jnp.ndarray,        # (S, TB) int32
+    beta: jnp.ndarray,       # (S, TB) float32
+    eta,                     # scalar or (S,) float32 — per-stream η
+    decay,                   # scalar or (S,) float32 — per-stream decay
+    *,
+    eps: float, delta_fp: float, delta_fn: float,
+    stream_block: int = 8,
+    interpret: bool = True,
+):
+    """Counter-mode `hedge_rounds_pallas`: TB rounds, zero randomness HBM
+    traffic — peak randomness residency is the (SB,) in-register draw."""
+    s, g, _ = log_w.shape
+    tb = i_f.shape[1]
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
+    kern = functools.partial(
+        hedge_rounds_counter_kernel, grid_side=g, n_rounds=tb,
+        stream_block=sb, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    mat = lambda: pl.BlockSpec((sb, tb), lambda i: (i, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s_pad, g, g), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad, tb), jnp.float32),
+    )
+    padded = _pad_streams(pad, log_w, i_f, h_r, beta,
+                          _sched_vec(eta, s), _sched_vec(decay, s))
+    args = padded[:2] + (pack_counter_rng(rng),) + padded[2:]
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            mat(), _rng_spec(), mat(), mat(), vec(), vec(),
+        ],
+        out_specs=(
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            mat(), mat(), mat(), mat(), mat(),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:s] for o in out)
+
+
+def hedge_decide_counter_pallas(
+    log_w: jnp.ndarray,      # (S, G, G) float32
+    i_f: jnp.ndarray,        # (S,) int32
+    rng,                     # (seed (2,) uint32, slot (), stream_offset ())
+    *,
+    eps: float,
+    stream_block: int = 8,
+    interpret: bool = True,
+):
+    """Counter-mode serving decide: (offload, explored, local_pred, q, p, ψ).
+
+    ψ is an *output* here (serving reuses it for the capacity-drop local
+    fallback) — the one draw that outlives the kernel, (S,) not (S, T).
+    """
+    s, g, _ = log_w.shape
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    grid = (s_pad // sb,)
+    kern = functools.partial(
+        hedge_decide_counter_kernel, grid_side=g, stream_block=sb, eps=eps)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+    )
+    padded = _pad_streams(pad, log_w, i_f)
+    args = padded + (pack_counter_rng(rng),)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, g, g), lambda i: (i, 0, 0)),
+            vec(), _rng_spec(),
+        ],
+        out_specs=(vec(), vec(), vec(), vec(), vec(), vec()),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:s] for o in out)

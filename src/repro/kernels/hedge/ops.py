@@ -6,6 +6,13 @@ Every op takes the (η, decay) schedule as optional per-stream (S,) arrays
 schedule) and a `stream_block` override (None → consult the persistent
 autotune cache, `kernels.hedge.autotune`, falling back to its static
 default).
+
+The randomness-consuming ops (step/rounds/decide) additionally take
+`randomness="pre_draw" | "counter"`: pre_draw (default, the golden paper
+path) ships (ψ, ζ) as operands; counter mode takes an `rng`
+(seed, slot, stream_offset) position instead and regenerates the draws
+in-kernel via the threefry counter contract (`repro.core.counter`) — zero
+randomness tensors in memory. The autotune cache is consulted per mode.
 """
 from __future__ import annotations
 
@@ -14,18 +21,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.counter import check_randomness_mode
 from repro.core.types import HIConfig
 from repro.kernels.hedge import autotune
 from repro.kernels.hedge.kernel import (
+    hedge_decide_counter_pallas,
     hedge_decide_pallas,
     hedge_feedback_pallas,
+    hedge_rounds_counter_pallas,
     hedge_rounds_pallas,
+    hedge_step_counter_pallas,
     hedge_step_pallas,
 )
 from repro.kernels.hedge.ref import (
+    hedge_decide_counter_ref,
     hedge_decide_ref,
     hedge_feedback_ref,
+    hedge_rounds_counter_ref,
     hedge_rounds_ref,
+    hedge_step_counter_ref,
     hedge_step_ref,
 )
 
@@ -49,27 +63,44 @@ def _sched(cfg: HIConfig, eta, decay):
             cfg.decay if decay is None else decay)
 
 
-def _stream_block(stream_block, g: int, s: int) -> int:
+def _stream_block(stream_block, g: int, s: int,
+                  randomness: str = "pre_draw") -> int:
     """Static launch geometry: explicit override, else the autotune cache.
 
     Called at trace time (shapes are concrete), so the cache lookup is pure
     Python and free at execution time — which also means a (cfg, shape)
     combo this process already traced keeps its geometry even if the cache
-    file is rewritten (jit never re-traces identical static args).
+    file is rewritten (jit never re-traces identical static args). The
+    cache is consulted per randomness mode — counter kernels have different
+    arithmetic intensity, so their winners are tuned separately.
     """
     if stream_block is not None:
         return int(stream_block)
-    return autotune.best_stream_block(g, s)
+    return autotune.best_stream_block(g, s, randomness=randomness)
+
+
+def _check_randomness(randomness: str, psi, zeta, rng) -> None:
+    """Trace-time validation of the (mode, operands) pairing."""
+    check_randomness_mode(randomness)
+    if randomness == "counter":
+        if rng is None:
+            raise ValueError("randomness='counter' needs an rng "
+                             "(seed, slot, stream_offset) triple")
+        if psi is not None or zeta is not None:
+            raise ValueError("randomness='counter' regenerates (psi, zeta) "
+                             "in place — pass them as None")
+    elif rng is not None:
+        raise ValueError("rng is only meaningful with randomness='counter'")
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
-                                             "stream_block"))
+                                             "stream_block", "randomness"))
 def fleet_hedge_step(
     cfg: HIConfig,
     log_w: jnp.ndarray,      # (S, G, G)
     f: jnp.ndarray,          # (S,) confidences in [0, 1]
-    psi: jnp.ndarray,        # (S,) uniforms
-    zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws
+    psi: jnp.ndarray,        # (S,) uniforms; None in counter mode
+    zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws; None in counter mode
     h_r: jnp.ndarray,        # (S,) remote labels
     beta: jnp.ndarray,       # (S,) offload costs
     use_kernel: bool = True,
@@ -77,19 +108,35 @@ def fleet_hedge_step(
     eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
     decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
     stream_block: int = None,    # None → autotune cache default
+    randomness: str = "pre_draw",
+    rng=None,                    # (seed, slot, stream_offset) — counter mode
 ):
-    """One H2T2 round for a whole fleet of streams."""
+    """One H2T2 round for a whole fleet of streams.
+
+    With `randomness="counter"` the (ψ, ζ) draws are regenerated from the
+    `rng` position instead of passed in — no randomness operands at all.
+    """
+    _check_randomness(randomness, psi, zeta, rng)
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
     eta, decay = _sched(cfg, eta, decay)
+    sb = _stream_block(stream_block, g, log_w.shape[0], randomness)
     if use_kernel:
         interp = _interpret_default() if interpret is None else interpret
+        if randomness == "counter":
+            return hedge_step_counter_pallas(
+                log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
+                beta.astype(jnp.float32), eta, decay, interpret=interp,
+                stream_block=sb, **_loss_kw(cfg))
         return hedge_step_pallas(
             log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
             zeta.astype(jnp.int32), h_r.astype(jnp.int32),
             beta.astype(jnp.float32), eta, decay, interpret=interp,
-            stream_block=_stream_block(stream_block, g, log_w.shape[0]),
-            **_loss_kw(cfg))
+            stream_block=sb, **_loss_kw(cfg))
+    if randomness == "counter":
+        return hedge_step_counter_ref(
+            log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
+            beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
     return hedge_step_ref(
         log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
         zeta.astype(jnp.int32), h_r.astype(jnp.int32),
@@ -97,13 +144,13 @@ def fleet_hedge_step(
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
-                                             "stream_block"))
+                                             "stream_block", "randomness"))
 def fleet_hedge_rounds(
     cfg: HIConfig,
     log_w: jnp.ndarray,      # (S, G, G)
     f: jnp.ndarray,          # (S, TB) confidences in [0, 1]
-    psi: jnp.ndarray,        # (S, TB) uniforms
-    zeta: jnp.ndarray,       # (S, TB) bernoulli(ε) draws
+    psi: jnp.ndarray,        # (S, TB) uniforms; None in counter mode
+    zeta: jnp.ndarray,       # (S, TB) bernoulli(ε); None in counter mode
     h_r: jnp.ndarray,        # (S, TB) remote labels
     beta: jnp.ndarray,       # (S, TB) offload costs
     use_kernel: bool = True,
@@ -111,24 +158,38 @@ def fleet_hedge_rounds(
     eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
     decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
     stream_block: int = None,    # None → autotune cache default
+    randomness: str = "pre_draw",
+    rng=None,                    # (seed, slot₀, stream_offset) — counter mode
 ):
     """TB sequential H2T2 rounds for a whole fleet in one launch.
 
     Step-for-step identical to TB chained `fleet_hedge_step` calls (with the
     schedule held fixed across the block); on TPU the expert grids stay in
-    VMEM for the whole time block.
+    VMEM for the whole time block. Counter mode draws round t of the block
+    at slot₀ + t — the chain reproduces any other chunking bit-for-bit and
+    ships zero randomness operands.
     """
+    _check_randomness(randomness, psi, zeta, rng)
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
     eta, decay = _sched(cfg, eta, decay)
+    sb = _stream_block(stream_block, g, log_w.shape[0], randomness)
     if use_kernel:
         interp = _interpret_default() if interpret is None else interpret
+        if randomness == "counter":
+            return hedge_rounds_counter_pallas(
+                log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
+                beta.astype(jnp.float32), eta, decay, interpret=interp,
+                stream_block=sb, **_loss_kw(cfg))
         return hedge_rounds_pallas(
             log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
             zeta.astype(jnp.int32), h_r.astype(jnp.int32),
             beta.astype(jnp.float32), eta, decay, interpret=interp,
-            stream_block=_stream_block(stream_block, g, log_w.shape[0]),
-            **_loss_kw(cfg))
+            stream_block=sb, **_loss_kw(cfg))
+    if randomness == "counter":
+        return hedge_rounds_counter_ref(
+            log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
+            beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
     return hedge_rounds_ref(
         log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
         zeta.astype(jnp.int32), h_r.astype(jnp.int32),
@@ -136,32 +197,45 @@ def fleet_hedge_rounds(
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
-                                             "stream_block"))
+                                             "stream_block", "randomness"))
 def fleet_hedge_decide(
     cfg: HIConfig,
     log_w: jnp.ndarray,      # (S, G, G)
     f: jnp.ndarray,          # (S,) confidences in [0, 1]
-    psi: jnp.ndarray,        # (S,) uniforms
-    zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws
+    psi: jnp.ndarray,        # (S,) uniforms; None in counter mode
+    zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws; None in counter mode
     use_kernel: bool = True,
     interpret: bool = None,
     stream_block: int = None,    # None → autotune cache default
+    randomness: str = "pre_draw",
+    rng=None,                    # (seed, slot, stream_offset) — counter mode
 ):
     """Serving phase 1 for the fleet: quantize + region masses + decisions.
 
     Returns (i_f, offload, explored, local_pred, q, p) — everything
-    `core.policy.FleetDecision` needs except the caller-held ψ. No weight
+    `core.policy.FleetDecision` needs except the caller-held ψ. In counter
+    mode ψ is regenerated in place and *returned* as a seventh element
+    (serving reuses it for the capacity-drop local fallback). No weight
     write: feedback waits for the (delayed, possibly capacity-dropped)
     remote labels in `fleet_hedge_feedback`.
     """
+    _check_randomness(randomness, psi, zeta, rng)
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
+    sb = _stream_block(stream_block, g, log_w.shape[0], randomness)
     if use_kernel:
         interp = _interpret_default() if interpret is None else interpret
-        out = hedge_decide_pallas(
-            log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
-            zeta.astype(jnp.int32), interpret=interp,
-            stream_block=_stream_block(stream_block, g, log_w.shape[0]))
+        if randomness == "counter":
+            out = hedge_decide_counter_pallas(
+                log_w.astype(jnp.float32), i_f, rng, eps=cfg.eps,
+                interpret=interp, stream_block=sb)
+        else:
+            out = hedge_decide_pallas(
+                log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+                zeta.astype(jnp.int32), interpret=interp, stream_block=sb)
+    elif randomness == "counter":
+        out = hedge_decide_counter_ref(
+            log_w.astype(jnp.float32), i_f, rng, eps=cfg.eps)
     else:
         out = hedge_decide_ref(
             log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),

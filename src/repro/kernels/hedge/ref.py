@@ -11,7 +11,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.counter import psi_zeta_from_counter
+
 NEG = -1e30
+
+
+def _counter_draws(rng, s: int, slot_shift, eps: float):
+    """(ψ, ζ) for streams [offset, offset+S) at slot + slot_shift, via the
+    golden counter contract (`repro.core.counter`)."""
+    seed, slot, offset = rng[0], rng[1], rng[2]
+    sid = jnp.asarray(offset, jnp.int32) + jnp.arange(s, dtype=jnp.int32)
+    psi, zeta = psi_zeta_from_counter(
+        seed, sid, jnp.asarray(slot, jnp.int32) + slot_shift, eps)
+    return psi, zeta.astype(jnp.int32)
 
 
 def _sched_col(val, s: int) -> jnp.ndarray:
@@ -114,3 +126,46 @@ def hedge_rounds_ref(
     final, outs = jax.lax.scan(body, log_w.astype(jnp.float32), xs)
     off, exp_, lp, q, p = (o.T for o in outs)                    # back to (S, TB)
     return final, off, exp_, lp, q, p
+
+
+def hedge_step_counter_ref(
+    log_w: jnp.ndarray, i_f: jnp.ndarray, rng, h_r: jnp.ndarray,
+    beta: jnp.ndarray,
+    *, eta, eps: float, delta_fp: float, delta_fn: float, decay=1.0,
+):
+    """Counter-mode oracle: draws (ψ, ζ) from (stream, slot) position via
+    the golden counter contract, then runs the pre-draw step oracle."""
+    psi, zeta = _counter_draws(rng, log_w.shape[0], 0, eps)
+    return hedge_step_ref(
+        log_w, i_f, psi, zeta, h_r, beta,
+        eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+
+
+def hedge_rounds_counter_ref(
+    log_w: jnp.ndarray, i_f: jnp.ndarray, rng, h_r: jnp.ndarray,
+    beta: jnp.ndarray,
+    *, eta, eps: float, delta_fp: float, delta_fn: float, decay=1.0,
+):
+    """Counter-mode rounds oracle: round t of the block draws at slot₀ + t.
+
+    The (S, TB) draws here are worklocal to the call — the XLA fallback's
+    peak randomness residency, matching the kernel's O(S×TB) contract.
+    """
+    tb = i_f.shape[1]
+    seed, slot0, offset = rng[0], rng[1], rng[2]
+    sid = jnp.asarray(offset, jnp.int32) + jnp.arange(
+        log_w.shape[0], dtype=jnp.int32)
+    slots = jnp.asarray(slot0, jnp.int32) + jnp.arange(tb, dtype=jnp.int32)
+    psi, zeta = psi_zeta_from_counter(
+        seed, sid[:, None], slots[None, :], eps)
+    return hedge_rounds_ref(
+        log_w, i_f, psi, zeta.astype(jnp.int32), h_r, beta,
+        eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+
+
+def hedge_decide_counter_ref(log_w: jnp.ndarray, i_f: jnp.ndarray, rng,
+                             *, eps: float):
+    """Counter-mode decide oracle; appends the ψ draw (serving reuses it
+    for the capacity-drop local fallback), mirroring the counter kernel."""
+    psi, zeta = _counter_draws(rng, log_w.shape[0], 0, eps)
+    return hedge_decide_ref(log_w, i_f, psi, zeta) + (psi,)

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FleetDecision, HIConfig
+from repro.core.counter import CounterRNG, check_randomness_mode, seed_from_key
 from repro.core.policy import (
     H2T2State,
     classification_cost,
@@ -79,6 +80,10 @@ class HIServerConfig:
     engine: str = "fused"              # PolicyEngine registry name
     interpret: Optional[bool] = None   # kernel interpret override
     use_kernel: Optional[bool] = None  # kernel routing override (None = auto)
+    # Policy randomness: "pre_draw" (per-stream slot keys, the golden paper
+    # path) or "counter" (in-place counter draws at (seed, stream, slot) —
+    # no key tree, no materialized ψ/ζ; see `core.counter`).
+    randomness: str = "pre_draw"
     # RDL batch capacity per slot; None → n_streams (padded, never drops).
     offload_capacity: Optional[int] = None
     # Multi-round serving: `run_source` drives the multi-round hedge kernel
@@ -88,6 +93,7 @@ class HIServerConfig:
     time_block: Optional[int] = None
 
     def __post_init__(self):
+        check_randomness_mode(self.randomness)
         if self.offload_capacity is not None and self.offload_capacity < 1:
             raise ValueError(
                 f"offload_capacity must be ≥ 1 (got {self.offload_capacity}); "
@@ -188,7 +194,8 @@ class HIServer:
         self.ldl = ldl
         self.rdl = rdl
         self.engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret,
-                                 use_kernel=cfg.use_kernel)
+                                 use_kernel=cfg.use_kernel,
+                                 randomness=cfg.randomness)
         self._serve_block = None    # jitted source-serving scan, built lazily
         self._serve_rounds = None   # jitted multi-round block fn, built lazily
 
@@ -223,8 +230,13 @@ class HIServer:
         policy = self._apply_pending(state)
         # Phase 1: edge inference + offload decisions (label-free).
         fs = self.ldl(tokens)                                # (S,)
-        keys = jax.random.split(key, s)
-        decision = self.engine.decide(policy, fs, keys)
+        if self.cfg.randomness == "counter":
+            # Counter mode consumes the slot key directly as the seed and
+            # draws at (seed, stream, slot=t) — no per-stream key split.
+            decision = self.engine.decide(policy, fs, key, slot=state.t)
+        else:
+            keys = jax.random.split(key, s)
+            decision = self.engine.decide(policy, fs, keys)
         # Phase 2: compact ONLY the offloaded samples into one RDL batch
         # (rotating the drop priority when capacity can overflow).
         batch = rotated_compact(tokens, decision.offload, cap, state.t)
@@ -282,7 +294,10 @@ class HIServer:
                                        pending.betas, sent=pending.sent)[0],
                 lambda p: p, pol)
             # Phase 1: offload decisions, label-free.
-            dec = eng.decide(pol, f, source_slot_keys(key, t, s))
+            if eng.randomness == "counter":
+                dec = eng.decide(pol, f, key, slot=t)
+            else:
+                dec = eng.decide(pol, f, source_slot_keys(key, t, s))
             # Phase 2: offload-only RDL batch over the remote labels; the
             # per-slot payload is the (S, 1) label column, so compaction,
             # capacity, and rotation behave exactly as with real tokens.
@@ -366,15 +381,23 @@ class HIServer:
             def chunk(carry, xs_):
                 st, t, acc = carry
                 f, hr, y, beta = xs_                          # (S, tb) each
-                ts = t + jnp.arange(tb, dtype=jnp.int32)
-                keys = jax.vmap(
-                    lambda ti: source_slot_keys(key, ti, s))(ts)
-                psi, zeta = jax.vmap(
-                    lambda k: draw_psi_zeta(k, hi.eps))(keys)  # (tb, S)
-                tp = lambda a: jnp.swapaxes(a, 0, 1)
-                st, out = fleet_rounds_fused(
-                    hi, st, f, tp(psi), tp(zeta), hr, beta,
-                    use_kernel=uk, interpret=interp)
+                if eng.randomness == "counter":
+                    rng = CounterRNG(seed=seed_from_key(key),
+                                     slot=jnp.asarray(t, jnp.int32),
+                                     stream_offset=jnp.zeros((), jnp.int32))
+                    st, out = fleet_rounds_fused(
+                        hi, st, f, None, None, hr, beta,
+                        use_kernel=uk, interpret=interp, rng=rng)
+                else:
+                    ts = t + jnp.arange(tb, dtype=jnp.int32)
+                    keys = jax.vmap(
+                        lambda ti: source_slot_keys(key, ti, s))(ts)
+                    psi, zeta = jax.vmap(
+                        lambda k: draw_psi_zeta(k, hi.eps))(keys)  # (tb, S)
+                    tp = lambda a: jnp.swapaxes(a, 0, 1)
+                    st, out = fleet_rounds_fused(
+                        hi, st, f, tp(psi), tp(zeta), hr, beta,
+                        use_kernel=uk, interpret=interp)
                 # Serving accounting: β where offloaded (nothing can be
                 # dropped on this path), remote label as the prediction.
                 obs = jnp.where(out.offload, beta, 0.0)
@@ -561,8 +584,13 @@ class HIServer:
                             "betas and key")
         state = self.init_state()
         horizon = token_stream.shape[0]
+        counter = self.cfg.randomness == "counter"
         for t in range(horizon):
-            key, sub = jax.random.split(key)
+            if counter:
+                # One seed for the whole run; serve_slot draws at slot t.
+                sub = key
+            else:
+                key, sub = jax.random.split(key)
             state, _ = self.serve_slot(state, token_stream[t], betas[t], sub)
         state = self.flush(state)
         n = horizon * self.cfg.n_streams

@@ -21,9 +21,23 @@ simulation, the benchmarks, and the `HIServer` all speak one interface:
                                      jnp oracle elsewhere, interpret=True
                                      forcing the kernel on CPU
 
-`keys` is always (S, 2) — one PRNGKey per stream — consumed through
-`draw_psi_zeta`, so every engine makes bit-for-bit identical decisions for
-the same keys. Registered engines:
+Randomness comes in one of two engine-wide modes (the `randomness`
+constructor option, validated against `core.counter.RANDOMNESS_MODES`):
+
+  "pre_draw" (default) — `keys` is always (S, 2), one PRNGKey per stream,
+      consumed through `draw_psi_zeta`, so every engine makes bit-for-bit
+      identical decisions for the same keys.
+  "counter"  — no key tree and no materialized (ψ, ζ): draws are
+      regenerated in place (in-kernel on the kernel path) from the counter
+      position (seed, stream, slot). `keys` then carries the run key (or
+      its (2,) uint32 `seed_from_key` seed) and `step`/`decide` take a
+      `slot` — the absolute round index. All engines share one counter
+      contract (`core.counter.psi_zeta_from_counter`), so decisions again
+      do not depend on the engine — including "sharded", whose shards
+      offset their stream ids by `axis_index * shard_size` to draw exactly
+      the global fleet's bits.
+
+Registered engines:
 
   "reference" — vmapped per-stream `h2t2_step`; the paper-shaped jnp path.
   "fused"     — batched `fleet_hedge_step` (Pallas kernel on TPU, jnp oracle
@@ -54,6 +68,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.counter import (
+    CounterRNG,
+    check_randomness_mode,
+    seed_from_key,
+)
 from repro.core.policy import (
     FleetDecision,
     H2T2State,
@@ -122,18 +141,26 @@ class PolicyEngine:
 
     def __init__(self, hi_cfg: HIConfig,
                  interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None):
-        # `interpret`/`use_kernel` are accepted uniformly so the registry can
-        # construct any engine from one opts dict.
+                 use_kernel: Optional[bool] = None,
+                 randomness: str = "pre_draw"):
+        # `interpret`/`use_kernel`/`randomness` are accepted uniformly so the
+        # registry can construct any engine from one opts dict.
+        check_randomness_mode(randomness)
         self.hi = hi_cfg
         self.interpret = interpret
         self.use_kernel = use_kernel
+        self.randomness = randomness
         uk, interp = self._kernel_opts()
 
-        def decide(st, fs, keys):
-            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            return fleet_decide(hi_cfg, st, fs, psi, zeta,
-                                use_kernel=uk, interpret=interp)
+        if randomness == "counter":
+            def decide(st, fs, rng):
+                return fleet_decide(hi_cfg, st, fs, None, None, rng=rng,
+                                    use_kernel=uk, interpret=interp)
+        else:
+            def decide(st, fs, keys):
+                psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+                return fleet_decide(hi_cfg, st, fs, psi, zeta,
+                                    use_kernel=uk, interpret=interp)
 
         self._decide = jax.jit(decide)
         self._feedback = jax.jit(
@@ -146,14 +173,36 @@ class PolicyEngine:
         fused steps resolve against (`core.policy._resolve_use_kernel`)."""
         return self.use_kernel, self.interpret
 
+    def _counter_rng(self, key, slot) -> CounterRNG:
+        """Counter position for one slot: `key` is the run key (typed, raw
+        uint32, or an already-derived (2,) seed), `slot` the absolute round
+        index. The fleet's streams always start at global id 0 here — the
+        sharded engine re-offsets per shard inside its mesh."""
+        if slot is None:
+            raise ValueError(
+                f"{self.name!r} engine with counter randomness needs `slot` "
+                "(the absolute round index)")
+        return CounterRNG(seed=seed_from_key(key),
+                          slot=jnp.asarray(slot, jnp.int32),
+                          stream_offset=jnp.zeros((), jnp.int32))
+
     def init(self, n_streams: int) -> H2T2State:
         """Fresh fleet state: every leaf batched over (n_streams,)."""
         return fleet_init(self.hi, n_streams)
 
-    def step(self, state: H2T2State, fs, betas, hrs, keys
+    def step(self, state: H2T2State, fs, betas, hrs, keys, slot=None
              ) -> Tuple[H2T2State, StepOutput]:
-        """One slot for the whole fleet (decide + immediate feedback)."""
-        raise NotImplementedError
+        """One slot for the whole fleet (decide + immediate feedback).
+
+        Under counter randomness `keys` is the run key (or (2,) seed) and
+        `slot` the absolute round index; under pre_draw `keys` is the (S, 2)
+        per-stream slot keys and `slot` is ignored.
+        """
+        if self.randomness == "counter":
+            rng = self._counter_rng(keys, slot)
+            return self._step(state, fs, betas, hrs, rng.seed, rng.slot)
+        return self._step(state, fs, betas, hrs, keys,
+                          jnp.zeros((), jnp.int32))
 
     def run(self, fs, hrs=None, betas=None, key=None, *, stream_keys=None):
         """Whole horizon in one call: (S, T) arrays OR a `ScenarioSource`.
@@ -184,14 +233,24 @@ class PolicyEngine:
         """Chunked run over a `ScenarioSource` on this engine's step path.
 
         Peak trace residency is one (S, block) SlotBatch; randomness follows
-        `source_slot_keys`, so all engines return identical costs for the
-        same source + key.
+        `source_slot_keys` (pre_draw) or the counter contract at slot t
+        (counter), so all engines return identical costs for the same
+        source + key + mode.
         """
         return run_fleet_source(self.hi, source, key, state=state,
-                                step_fn=self._step)
+                                step_fn=self._step,
+                                randomness=self.randomness)
 
-    def decide(self, state: H2T2State, fs, keys) -> FleetDecision:
-        """Phase 1 of a slot: offload decisions, no labels consumed."""
+    def decide(self, state: H2T2State, fs, keys, *, slot=None
+               ) -> FleetDecision:
+        """Phase 1 of a slot: offload decisions, no labels consumed.
+
+        Under counter randomness `keys` is the run key (or (2,) seed) and
+        `slot` the absolute round index; under pre_draw `keys` is the (S, 2)
+        per-stream slot keys and `slot` is ignored.
+        """
+        if self.randomness == "counter":
+            return self._decide(state, fs, self._counter_rng(keys, slot))
         return self._decide(state, fs, keys)
 
     def feedback(self, state: H2T2State, decision: FleetDecision,
@@ -216,15 +275,35 @@ class ReferenceEngine(PolicyEngine):
 
     def __init__(self, hi_cfg: HIConfig,
                  interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None):
-        super().__init__(hi_cfg, interpret, use_kernel)
-        self._step = jax.jit(jax.vmap(
-            lambda st, f, b, hr, k: h2t2_step(hi_cfg, st, f, b, hr, k)))
+                 use_kernel: Optional[bool] = None,
+                 randomness: str = "pre_draw"):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness)
+        if randomness == "counter":
+            # decide + immediate feedback on the jnp math — the counter
+            # analogue of `h2t2_step` (same composition the adaptive engine
+            # runs, pinned to use_kernel=False).
+            def step(st, f, b, hr, seed, t):
+                rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
+                                 stream_offset=jnp.zeros((), jnp.int32))
+                dec = fleet_decide(hi_cfg, st, f, None, None, rng=rng,
+                                   use_kernel=False)
+                return fleet_feedback(hi_cfg, st, dec, hr, b, dec.offload,
+                                      use_kernel=False)
 
-    def step(self, state, fs, betas, hrs, keys):
-        return self._step(state, fs, betas, hrs, keys)
+            self._step = jax.jit(step)
+        else:
+            vstep = jax.vmap(
+                lambda st, f, b, hr, k: h2t2_step(hi_cfg, st, f, b, hr, k))
+            self._step = jax.jit(
+                lambda st, f, b, hr, k, t: vstep(st, f, b, hr, k))
 
     def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
+        if self.randomness == "counter":
+            if stream_keys is not None:
+                raise ValueError("counter randomness is position-keyed; "
+                                 "`stream_keys` only applies to pre_draw")
+            return run_fleet_fused(self.hi, fs, hrs, betas, key,
+                                   use_kernel=False, randomness="counter")
         return run_fleet(self.hi, fs, hrs, betas, key,
                          stream_keys=stream_keys)
 
@@ -251,40 +330,48 @@ class FusedEngine(PolicyEngine):
     def __init__(self, hi_cfg: HIConfig,
                  interpret: Optional[bool] = None,
                  use_kernel: Optional[bool] = None,
-                 time_block: Optional[int] = None):
-        super().__init__(hi_cfg, interpret, use_kernel)
+                 time_block: Optional[int] = None,
+                 randomness: str = "pre_draw"):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness)
         self.time_block = time_block
 
-        def step(state, fs, betas, hrs, keys):
-            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            return fleet_step_fused(hi_cfg, state, fs, psi, zeta, hrs, betas,
-                                    use_kernel=use_kernel, interpret=interpret)
+        if randomness == "counter":
+            def step(state, fs, betas, hrs, seed, t):
+                rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
+                                 stream_offset=jnp.zeros((), jnp.int32))
+                return fleet_step_fused(
+                    hi_cfg, state, fs, None, None, hrs, betas,
+                    use_kernel=use_kernel, interpret=interpret, rng=rng)
+        else:
+            def step(state, fs, betas, hrs, keys, t):
+                psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+                return fleet_step_fused(
+                    hi_cfg, state, fs, psi, zeta, hrs, betas,
+                    use_kernel=use_kernel, interpret=interpret)
 
         self._step = jax.jit(step)
 
     def _resolve_time_block(self, s: int, t: int) -> int:
-        """Explicit time_block, else the autotuned winner when it divides
-        the horizon, else single-round."""
+        """Explicit time_block, else the autotuned winner (per randomness
+        mode) when it divides the horizon, else single-round."""
         if self.time_block is not None:
             return self.time_block
         from repro.kernels.hedge import autotune
 
-        rec = autotune.lookup(self.hi.grid, s)
+        rec = autotune.lookup(self.hi.grid, s, randomness=self.randomness)
         if rec:
             tb = int(rec.get("time_block", 1) or 1)
             if tb >= 1 and t % tb == 0:
                 return tb
         return 1
 
-    def step(self, state, fs, betas, hrs, keys):
-        return self._step(state, fs, betas, hrs, keys)
-
     def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
         return run_fleet_fused(self.hi, fs, hrs, betas, key,
                                use_kernel=self.use_kernel,
                                interpret=self.interpret,
                                time_block=self._resolve_time_block(*fs.shape),
-                               stream_keys=stream_keys)
+                               stream_keys=stream_keys,
+                               randomness=self.randomness)
 
 
 @register_engine("sharded")
@@ -299,6 +386,11 @@ class ShardedEngine(PolicyEngine):
     device-count multiple. Decisions are bit-for-bit those of the fused
     engine for the same keys.
 
+    Under counter randomness each shard re-offsets its stream ids by
+    `axis_index * shard_size` before drawing, so the shards regenerate
+    exactly the bits the unsharded fleet would — decisions are invariant to
+    the device count (the padding rows draw ids ≥ S and are sliced off).
+
     On CPU, validate with XLA_FLAGS=--xla_force_host_platform_device_count=N
     (set before importing jax).
     """
@@ -308,15 +400,25 @@ class ShardedEngine(PolicyEngine):
     def __init__(self, hi_cfg: HIConfig,
                  interpret: Optional[bool] = None,
                  use_kernel: Optional[bool] = None,
-                 devices: Optional[Sequence[jax.Device]] = None):
-        super().__init__(hi_cfg, interpret, use_kernel)
+                 devices: Optional[Sequence[jax.Device]] = None,
+                 randomness: str = "pre_draw"):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness)
         devs = list(devices) if devices is not None else jax.devices()
         self.mesh = Mesh(np.array(devs), (self.AXIS,))
         self.n_devices = len(devs)
 
         spec = P(self.AXIS)
+        rng_spec = CounterRNG(seed=P(), slot=P(), stream_offset=P())
         unpad = lambda s: lambda tree: jax.tree_util.tree_map(
             lambda a: a[:s], tree)
+        axis = self.AXIS
+
+        def local_rng(rng: CounterRNG, local_s: int) -> CounterRNG:
+            # Inside the mesh: this shard's streams start at the global id
+            # axis_index * shard_size (padding keeps shard sizes equal).
+            return rng._replace(
+                stream_offset=rng.stream_offset
+                + jax.lax.axis_index(axis) * local_s)
 
         sharded_step = shard_map(
             lambda st, f, psi, zeta, hr, beta: fleet_step_fused(
@@ -329,11 +431,30 @@ class ShardedEngine(PolicyEngine):
         )
         self._sharded_step = sharded_step
 
-        def step(state, fs, betas, hrs, keys):
-            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            s = fs.shape[0]
-            args = self._pad_tree((state, fs, psi, zeta, hrs, betas), s)
-            return unpad(s)(sharded_step(*args))
+        sharded_step_counter = shard_map(
+            lambda st, f, hr, beta, rng: fleet_step_fused(
+                hi_cfg, st, f, None, None, hr, beta,
+                use_kernel=use_kernel, interpret=interpret,
+                rng=local_rng(rng, f.shape[0])),
+            mesh=self.mesh,
+            in_specs=(spec, spec, spec, spec, rng_spec),
+            out_specs=(spec, spec),
+            check_rep=False,
+        )
+
+        if randomness == "counter":
+            def step(state, fs, betas, hrs, seed, t):
+                rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
+                                 stream_offset=jnp.zeros((), jnp.int32))
+                s = fs.shape[0]
+                args = self._pad_tree((state, fs, hrs, betas), s)
+                return unpad(s)(sharded_step_counter(*args, rng))
+        else:
+            def step(state, fs, betas, hrs, keys, t):
+                psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+                s = fs.shape[0]
+                args = self._pad_tree((state, fs, psi, zeta, hrs, betas), s)
+                return unpad(s)(sharded_step(*args))
 
         self._step = jax.jit(step)
 
@@ -354,6 +475,25 @@ class ShardedEngine(PolicyEngine):
 
         self._run = jax.jit(run)
 
+        def run_counter(fs, hrs, betas, seed):
+            s, t = fs.shape
+            state_p, *xs_p = self._pad_tree(
+                (fleet_init(hi_cfg, s), fs, hrs, betas), s)
+            slots = jnp.arange(t, dtype=jnp.int32)
+
+            def body(st, xs):
+                f, hr, beta, slot = xs
+                rng = CounterRNG(seed=seed, slot=slot,
+                                 stream_offset=jnp.zeros((), jnp.int32))
+                return sharded_step_counter(st, f, hr, beta, rng)
+
+            final, outs = jax.lax.scan(
+                body, state_p, tuple(a.T for a in xs_p) + (slots,))
+            return (unpad(s)(final), jax.tree_util.tree_map(
+                lambda a: jnp.swapaxes(a, 0, 1)[:s], outs))
+
+        self._run_counter = jax.jit(run_counter)
+
         # The serving split runs through the mesh too — each device runs the
         # decide/feedback *kernels* on its stream shard (same auto-select as
         # everywhere) — so HIServer's phases scale with the fleet like
@@ -365,11 +505,25 @@ class ShardedEngine(PolicyEngine):
             mesh=self.mesh, in_specs=(spec, spec, spec, spec),
             out_specs=spec, check_rep=False)
 
-        def decide(state, fs, keys):
-            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            s = fs.shape[0]
-            args = self._pad_tree((state, fs, psi, zeta), s)
-            return unpad(s)(sharded_decide(*args))
+        sharded_decide_counter = shard_map(
+            lambda st, fs, rng: fleet_decide(
+                hi_cfg, st, fs, None, None,
+                rng=local_rng(rng, fs.shape[0]),
+                use_kernel=use_kernel, interpret=interpret),
+            mesh=self.mesh, in_specs=(spec, spec, rng_spec),
+            out_specs=spec, check_rep=False)
+
+        if randomness == "counter":
+            def decide(state, fs, rng):
+                s = fs.shape[0]
+                args = self._pad_tree((state, fs), s)
+                return unpad(s)(sharded_decide_counter(*args, rng))
+        else:
+            def decide(state, fs, keys):
+                psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+                s = fs.shape[0]
+                args = self._pad_tree((state, fs, psi, zeta), s)
+                return unpad(s)(sharded_decide(*args))
 
         self._decide = jax.jit(decide)
 
@@ -401,11 +555,15 @@ class ShardedEngine(PolicyEngine):
             lambda a: jnp.concatenate(
                 [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0), tree)
 
-    def step(self, state, fs, betas, hrs, keys):
-        return self._step(state, fs, betas, hrs, keys)
-
     def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
         s, t = fs.shape
+        if self.randomness == "counter":
+            if stream_keys is not None:
+                raise ValueError("counter randomness is position-keyed; "
+                                 "`stream_keys` only applies to pre_draw")
+            if key is None:
+                raise ValueError("counter randomness needs `key`")
+            return self._run_counter(fs, hrs, betas, seed_from_key(key))
         psis, zetas = draw_fleet_randomness(self.hi, key, s, t, stream_keys)
         return self._run(fs, hrs, betas, psis, zetas.astype(jnp.int32))
 
@@ -470,8 +628,9 @@ class AdaptiveEngine(PolicyEngine):
                  interpret: Optional[bool] = None,
                  use_kernel: Optional[bool] = None,
                  shift: Optional[ShiftConfig] = None,
-                 restart: bool = True):
-        super().__init__(hi_cfg, interpret, use_kernel)
+                 restart: bool = True,
+                 randomness: str = "pre_draw"):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness)
         self.shift_cfg = ShiftConfig() if shift is None else shift
         self.restart = bool(restart)
         scfg = self.shift_cfg
@@ -499,42 +658,71 @@ class AdaptiveEngine(PolicyEngine):
 
         self._feedback = jax.jit(feedback)
 
-        def decide(state, fs, keys):
-            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            return fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
-                                use_kernel=uk, interpret=interp)
+        if randomness == "counter":
+            def decide(state, fs, rng):
+                return fleet_decide(hi_cfg, state.policy, fs, None, None,
+                                    rng=rng, use_kernel=uk, interpret=interp)
+
+            def step(state, fs, betas, hrs, seed, t):
+                rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
+                                 stream_offset=jnp.zeros((), jnp.int32))
+                decision = fleet_decide(hi_cfg, state.policy, fs, None, None,
+                                        rng=rng, use_kernel=uk,
+                                        interpret=interp)
+                return feedback(state, decision, hrs, betas, decision.offload)
+
+            def run(state, fs, hrs, betas, seed):
+                slots = jnp.arange(fs.shape[1], dtype=jnp.int32)
+
+                def body(st, xs):
+                    f, hr, beta, slot = xs
+                    return step(st, f, beta, hr, seed, slot)
+
+                tp = lambda a: jnp.swapaxes(a, 0, 1)
+                final, outs = jax.lax.scan(
+                    body, state, (tp(fs), tp(hrs), tp(betas), slots))
+                return final, jax.tree_util.tree_map(tp, outs)
+        else:
+            def decide(state, fs, keys):
+                psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+                return fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
+                                    use_kernel=uk, interpret=interp)
+
+            def step(state, fs, betas, hrs, keys, t):
+                psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
+                decision = fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
+                                        use_kernel=uk, interpret=interp)
+                return feedback(state, decision, hrs, betas, decision.offload)
+
+            def run(state, fs, hrs, betas, keys_t):
+                def body(st, xs):
+                    f, hr, beta, keys = xs
+                    return step(st, f, beta, hr, keys,
+                                jnp.zeros((), jnp.int32))
+
+                tp = lambda a: jnp.swapaxes(a, 0, 1)
+                final, outs = jax.lax.scan(
+                    body, state, (tp(fs), tp(hrs), tp(betas), tp(keys_t)))
+                return final, jax.tree_util.tree_map(tp, outs)
 
         self._decide = jax.jit(decide)
-
-        def step(state, fs, betas, hrs, keys):
-            psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-            decision = fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
-                                    use_kernel=uk, interpret=interp)
-            return feedback(state, decision, hrs, betas, decision.offload)
-
         self._step = jax.jit(step)
-
-        def run(state, fs, hrs, betas, keys_t):
-            def body(st, xs):
-                f, hr, beta, keys = xs
-                return step(st, f, beta, hr, keys)
-
-            tp = lambda a: jnp.swapaxes(a, 0, 1)
-            final, outs = jax.lax.scan(
-                body, state, (tp(fs), tp(hrs), tp(betas), tp(keys_t)))
-            return final, jax.tree_util.tree_map(tp, outs)
-
         self._run = jax.jit(run)
 
     def init(self, n_streams: int) -> AdaptiveState:
         return AdaptiveState(policy=fleet_init(self.hi, n_streams),
                              shift=shift_init(n_streams, self.hi.dtype))
 
-    def step(self, state, fs, betas, hrs, keys):
-        return self._step(state, fs, betas, hrs, keys)
-
     def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
         s, t = fs.shape
+        if self.randomness == "counter":
+            if stream_keys is not None:
+                raise ValueError("counter randomness is position-keyed; "
+                                 "`stream_keys` only applies to pre_draw")
+            if key is None:
+                raise ValueError("AdaptiveEngine.run needs `key`")
+            return self._run(self.init(s), fs, hrs, betas,
+                             seed_from_key(key))
         if stream_keys is None:
             if key is None:
                 raise ValueError("AdaptiveEngine.run needs `key` or "
@@ -550,4 +738,5 @@ class AdaptiveEngine(PolicyEngine):
         if state is None:
             state = self.init(source.n_streams)
         return run_fleet_source(self.hi, source, key, state=state,
-                                step_fn=self._step)
+                                step_fn=self._step,
+                                randomness=self.randomness)

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.counter import check_randomness_mode
 from repro.core.types import HIConfig
 from repro.serving.policy_engine import get_engine
 from repro.serving.request_plane.admission import (
@@ -170,6 +171,7 @@ class RequestPlaneConfig:
     engine: str = "fused"
     use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None
+    randomness: str = "pre_draw"             # "counter" → in-place PRNG draws
     offload_capacity: Optional[int] = None   # RDL batch rows; None → S
     max_batch: Optional[int] = None          # flush at this many streams; None → S
     max_wait: float = 0.05                   # s; flush deadline after first queue
@@ -183,6 +185,7 @@ class RequestPlaneConfig:
     record_rounds: bool = False        # keep per-round arrays (replay parity)
 
     def __post_init__(self):
+        check_randomness_mode(self.randomness)
         if self.n_streams < 1:
             raise ValueError(f"n_streams must be ≥ 1 (got {self.n_streams})")
         if not (1 <= self.batch_limit <= self.n_streams):
@@ -220,7 +223,8 @@ class RequestPlane:
         self.link = SimulatedLink(cfg.link)
         self.estimator = NetworkEstimator(cfg.estimator, cfg.n_streams)
         engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret,
-                            use_kernel=cfg.use_kernel)
+                            use_kernel=cfg.use_kernel,
+                            randomness=cfg.randomness)
         self.batcher = MicroBatcher(
             hi=cfg.hi, engine=engine, n_streams=cfg.n_streams,
             capacity=cfg.capacity, max_batch=cfg.batch_limit,

@@ -267,8 +267,14 @@ class MicroBatcher:
         # snapshot is both what feedback charges and what the summary
         # accounts, replacing any generator-supplied β end to end.
         betas = self.estimator.beta_vector(payloads)
-        keys = source_slot_keys(self.key, t, s)
-        decision = self.engine.decide(self.state, jnp.asarray(fs), keys)
+        if self.engine.randomness == "counter":
+            # The flush round index is the counter slot — the same position
+            # a `run_source` replay of these rounds would draw at.
+            decision = self.engine.decide(self.state, jnp.asarray(fs),
+                                          self.key, slot=t)
+        else:
+            keys = source_slot_keys(self.key, t, s)
+            decision = self.engine.decide(self.state, jnp.asarray(fs), keys)
         active_j = jnp.asarray(active)
         decision = decision._replace(
             offload=decision.offload & active_j,

@@ -133,6 +133,18 @@ def test_compare_skips_latency_percentiles():
     assert len(failures) == 1 and "deny_rate" in failures[0]
 
 
+def test_compare_skips_bytes_metrics():
+    """Memory-footprint metrics (`rand_bytes_peak` in the long-horizon
+    kernel rows) are informational: they move whenever block sizes retune,
+    while behavioral metrics in the same row keep gating."""
+    base = _report(lh={"rand_bytes_peak": 8192.0, "cost": 1.0})
+    cur = _report(lh={"rand_bytes_peak": 32768.0, "cost": 1.0})
+    assert compare(cur, base) == []
+    bad = _report(lh={"rand_bytes_peak": 8192.0, "cost": 2.0})
+    failures = compare(bad, base)
+    assert len(failures) == 1 and "lh.cost" in failures[0]
+
+
 def test_compare_flags_errored_run():
     base = _report(bench={"cost": 1.0})
     cur = {"meta": {}, "benchmarks": {"bench": {"error": True, "metrics": {}}}}
@@ -162,8 +174,8 @@ def test_committed_baseline_is_valid_and_covers_gated_modules():
         baseline = json.load(fh)
     benches = baseline["benchmarks"]
     assert len(benches) >= 10
-    # The gated CI subset: drift, scenarios, the three adaptive arms, and
-    # the request-plane load sweep.
+    # The gated CI subset: drift, scenarios, the three adaptive arms, the
+    # request-plane load sweep, and the kernel rows (both randomness modes).
     for required in (
         "drift_h2t2_paper",
         "scenario_stationary",
@@ -172,6 +184,9 @@ def test_committed_baseline_is_valid_and_covers_gated_modules():
         "adaptive_drift_ood_oracle",
         "request_plane_poisson_x1",
         "request_plane_mmpp_x1",
+        "hedge_fleet_G16_S16_T256_fused_counter",
+        "hedge_longhorizon_S4_T51200_pre_draw",
+        "hedge_longhorizon_S4_T51200_counter",
     ):
         assert required in benches, required
         metrics = benches[required]["metrics"]

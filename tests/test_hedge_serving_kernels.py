@@ -433,25 +433,46 @@ def test_hiserver_rounds_eligibility_gates():
 def test_autotune_sweep_persists_and_lookup(tmp_path, monkeypatch):
     path = str(tmp_path / "hedge_autotune.json")
     monkeypatch.setenv("REPRO_HEDGE_AUTOTUNE_CACHE", path)
+    backend = jax.default_backend()
     entries = autotune.sweep(grids=(8,), streams=(4,), stream_blocks=(1, 4),
                              time_blocks=(1, 2), reps=1)
-    assert set(entries) == {f"{jax.default_backend()}/G8/S4"}
+    assert set(entries) == {f"{backend}/G8/S4/pre_draw"}
     rec = autotune.lookup(8, 4)
     assert rec is not None and os.path.exists(path)
     assert rec["stream_block"] in (1, 4) and rec["time_block"] in (1, 2)
+    assert rec["randomness"] == "pre_draw"
     assert set(rec["measured"]) == {"sb1_tb1", "sb1_tb2", "sb4_tb1", "sb4_tb2"}
     # Unknown shapes fall back to the static defaults.
     assert autotune.best_blocks(8, 999) == (
         autotune.DEFAULT_STREAM_BLOCK, autotune.DEFAULT_TIME_BLOCK)
     # A rewrite is picked up (mtime invalidation, no process restart).
-    entries[f"{jax.default_backend()}/G8/S4"]["stream_block"] = 2
+    entries[f"{backend}/G8/S4/pre_draw"]["stream_block"] = 2
     autotune.write_cache(entries, path)
     assert autotune.best_stream_block(8, 4) == 2
-    # Other platforms' entries survive a merge.
+    # Other platforms' entries survive a merge; legacy mode-less keys are
+    # read as pre_draw winners...
     autotune.write_cache({"tpu/G8/S4": {"stream_block": 16, "time_block": 32,
                                         "us_per_round": 1.0}}, path)
     assert autotune.best_blocks(8, 4, platform="tpu") == (16, 32)
     assert autotune.best_stream_block(8, 4) == 2
+    # ...but never as counter-mode winners (measured on a different kernel
+    # body), and a counter entry never shadows the pre_draw lookup.
+    assert autotune.lookup(8, 4, platform="tpu", randomness="counter") is None
+    assert autotune.best_blocks(8, 4, platform="tpu",
+                                randomness="counter") == (
+        autotune.DEFAULT_STREAM_BLOCK, autotune.DEFAULT_TIME_BLOCK)
+    autotune.write_cache({"tpu/G8/S4/counter": {"stream_block": 2,
+                                                "time_block": 4}}, path)
+    assert autotune.best_blocks(8, 4, platform="tpu",
+                                randomness="counter") == (2, 4)
+    assert autotune.best_blocks(8, 4, platform="tpu") == (16, 32)
+    # A counter-mode sweep measures the counter kernel and writes its own key.
+    centries = autotune.sweep(grids=(8,), streams=(4,), stream_blocks=(4,),
+                              time_blocks=(1,), reps=1, randomness="counter")
+    assert set(centries) == {f"{backend}/G8/S4/counter"}
+    assert autotune.lookup(8, 4, randomness="counter")["randomness"] == \
+        "counter"
+    assert autotune.best_stream_block(8, 4) == 2     # pre_draw untouched
     # Partial entries (hand-edited caches) degrade field-by-field, not crash.
     autotune.write_cache({"tpu/G8/S2": {"stream_block": 16}}, path)
     assert autotune.best_blocks(8, 2, platform="tpu") == (

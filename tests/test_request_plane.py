@@ -376,6 +376,47 @@ def test_low_load_parity_with_hi_server_replay():
     assert summary["accuracy"] == replay["accuracy"]
 
 
+def test_counter_mode_low_load_parity_and_determinism():
+    """`randomness="counter"` through the whole plane: the flush round
+    index is the counter slot, so the low-load replay parity with a
+    counter-mode `HIServer.run_source` holds exactly as in pre-draw mode —
+    with zero key-tree splits and no (ψ, ζ) tensors anywhere."""
+    s, rounds = 4, 16
+    hi = HIConfig(eps=0.3)
+    cfg = RequestPlaneConfig(n_streams=s, hi=hi, max_wait=0.2,
+                             record_rounds=True, randomness="counter")
+    plane, results, summary = serve_traffic(
+        cfg, _lockstep_arrivals(s, rounds, period=1.0), K(7))
+    assert summary["drop_rate"] == 0.0 and summary["deny_rate"] == 0.0
+    rec = plane.batcher.record
+    assert len(rec) == rounds
+
+    stack = lambda name: np.stack([r[name] for r in rec], axis=1)  # (S, T)
+    src = ReplaySource(fs=stack("fs"), hrs=stack("hrs"), ys=stack("ys"),
+                       betas=stack("betas"))
+    server = HIServer(
+        HIServerConfig(n_streams=s, hi=hi, randomness="counter"),
+        ldl=None, rdl=None)
+    _, replay = server.run_source(src, K(7))
+    assert summary["offload_rate"] == replay["offload_rate"]
+    assert summary["avg_offload_cost"] == pytest.approx(
+        replay["avg_offload_cost"], abs=1e-5)
+    assert summary["avg_true_cost"] == pytest.approx(
+        replay["avg_true_cost"], abs=1e-5)
+
+    # Deterministic for a fixed seed, and a different contract from the
+    # pre-draw key tree under the same key.
+    again = serve_traffic(
+        cfg, _lockstep_arrivals(s, rounds, period=1.0), K(7))[2]
+    assert again == summary
+    pre = serve_traffic(
+        RequestPlaneConfig(n_streams=s, hi=hi, max_wait=0.2),
+        _lockstep_arrivals(s, rounds, period=1.0), K(7))[2]
+    assert pre["offload_rate"] != summary["offload_rate"]
+    with pytest.raises(ValueError, match="randomness"):
+        RequestPlaneConfig(n_streams=s, randomness="bogus")
+
+
 def test_replay_source_round_trips_and_validates():
     trace = ReplaySource(fs=np.full((2, 8), 0.5, np.float32),
                          hrs=np.zeros((2, 8), np.int32),
