@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import avg_costs_all_policies, engine_cached, timed
-from repro.core import HIConfig
+from repro.core import ExecSpec, HIConfig
 from repro.data import dataset_trace
 from repro.kernels.hedge.ops import fleet_hedge_rounds, fleet_hedge_step
 
@@ -53,15 +53,16 @@ def run(quick: bool = False, engine: str = "fused") -> List[str]:
         args = (logw, jax.random.uniform(ks[1], (s,)), jax.random.uniform(ks[2], (s,)),
                 jnp.zeros((s,), jnp.int32), jnp.ones((s,), jnp.int32),
                 jnp.full((s,), 0.3))
-        us_k = timed(lambda *a: fleet_hedge_step(cfg, *a, use_kernel=True), *args)
-        us_r = timed(lambda *a: fleet_hedge_step(cfg, *a, use_kernel=False), *args)
+        ker, ref = ExecSpec(use_kernel=True), ExecSpec(use_kernel=False)
+        us_k = timed(lambda *a: fleet_hedge_step(cfg, *a, spec=ker), *args)
+        us_r = timed(lambda *a: fleet_hedge_step(cfg, *a, spec=ref), *args)
         rargs = (logw,
                  jax.random.uniform(ks[1], (s, tb)),
                  jax.random.uniform(ks[2], (s, tb)),
                  jnp.zeros((s, tb), jnp.int32), jnp.ones((s, tb), jnp.int32),
                  jnp.full((s, tb), 0.3))
         us_rounds = timed(
-            lambda *a: fleet_hedge_rounds(cfg, *a, use_kernel=True), *rargs)
+            lambda *a: fleet_hedge_rounds(cfg, *a, spec=ker), *rargs)
         rows.append(f"fig10_bits{b}_hedge_kernel,{us_k:.1f},"
                     f"jnp_ref_us={us_r:.1f};rounds_tb{tb}_us={us_rounds:.1f};"
                     f"streams={s};interpret=True")

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
-from repro.core import HIConfig
+from repro.core import ExecSpec, HIConfig
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.hedge import autotune as hedge_autotune
 from repro.kernels.ssd.ref import ssd_ref
@@ -48,10 +48,12 @@ def _hedge_fleet_rows(quick: bool) -> List[str]:
         engines = {
             "reference": get_engine("reference", cfg),
             "fused": get_engine("fused", cfg),
-            "fused_tb8": get_engine("fused", cfg, time_block=8),
-            "fused_counter": get_engine("fused", cfg, randomness="counter"),
+            "fused_tb8": get_engine("fused", cfg, spec=ExecSpec(time_block=8)),
+            "fused_counter": get_engine(
+                "fused", cfg, spec=ExecSpec(randomness="counter")),
             "fused_tb8_counter": get_engine(
-                "fused", cfg, time_block=8, randomness="counter"),
+                "fused", cfg,
+                spec=ExecSpec(time_block=8, randomness="counter")),
         }
         if len(jax.devices()) > 1:
             engines["sharded"] = get_engine("sharded", cfg)
@@ -81,7 +83,8 @@ def _long_horizon_rows(quick: bool) -> List[str]:
     betas = jnp.full((s, t), 0.3)
     key = jax.random.PRNGKey(1)
     for mode in ("pre_draw", "counter"):
-        eng = get_engine("fused", cfg, time_block=tb, randomness=mode)
+        eng = get_engine(
+            "fused", cfg, spec=ExecSpec(time_block=tb, randomness=mode))
         fn = jax.jit(lambda k, e=eng: e.run(fs, hrs, betas, k)[1].loss)
         us = timed(fn, key, reps=1)
         draws = s * t if mode == "pre_draw" else s * tb

@@ -22,6 +22,12 @@ configuration, matching the paper's artifacts:
               (chunked engine runs; --scenario restricts the sweep)
     adaptive BEYOND-PAPER: fixed vs shift-aware adaptive vs oracle-restart
               policies under drift / β dynamics / RDL noise
+    learners BEYOND-PAPER: learner-registry rows — factored vs dense H2T2
+              regret parity on manuscript workloads, plus the factored
+              + counter-RNG million-stream scaling smoke
+
+``--list`` prints every registered policy engine, workload scenario, and
+hedge learner with its one-line description, then exits.
 
 ``--json out.json`` additionally writes the rows as machine-readable
 per-benchmark records (see `parse_row`); `benchmarks/check_regression.py`
@@ -46,6 +52,7 @@ from benchmarks import (
     bench_fig9,
     bench_fig10,
     bench_kernels,
+    bench_learners,
     bench_regret,
     bench_request_plane,
     bench_scenarios,
@@ -64,6 +71,7 @@ MODULES = {
     "scenarios": bench_scenarios,
     "adaptive": bench_adaptive,
     "request_plane": bench_request_plane,
+    "learners": bench_learners,
 }
 
 
@@ -119,6 +127,9 @@ def main() -> int:
     from repro.data.scenarios import available_scenarios
     from repro.serving.policy_engine import available_engines
 
+    ap.add_argument("--list", action="store_true",
+                    help="list registered policy engines, scenarios, and "
+                         "learners with descriptions, then exit")
     ap.add_argument("--engine", default="fused",
                     choices=available_engines(),
                     help="H2T2 PolicyEngine for modules that run the fleet")
@@ -133,6 +144,18 @@ def main() -> int:
                          "results/hedge_autotune.json (consulted by "
                          "repro.kernels.hedge.ops defaults)")
     args = ap.parse_args()
+    if args.list:
+        from repro.core.learners import list_learners
+        from repro.data.scenarios import list_scenarios
+        from repro.serving.policy_engine import list_engines
+
+        for kind, entries in (("engines", list_engines()),
+                              ("scenarios", list_scenarios()),
+                              ("learners", list_learners())):
+            print(f"{kind}:")
+            for name, desc in entries:
+                print(f"  {name:14s} {desc}")
+        return 0
     names = [n for n in args.only.split(",") if n] or list(MODULES)
     print("name,us_per_call,derived")
     all_rows = []

@@ -1,6 +1,9 @@
 # The paper's primary contribution: H2T2 two-threshold hierarchical-inference
 # policy, calibrated-model closed forms, offline optima, and paper baselines.
 from repro.core.types import HIConfig, StreamSpec
+from repro.core.execspec import UNSET, ExecSpec, resolve_spec
+from repro.core.learners import get_learner, list_learners, register_learner
+from repro.core.registry import Registry
 from repro.core.counter import (
     RANDOMNESS_MODES,
     CounterRNG,
@@ -59,6 +62,7 @@ from repro.core import baselines, multiclass, offline, regret
 __all__ = [
     "COUNTER_CAP",
     "CounterRNG", "RANDOMNESS_MODES",
+    "ExecSpec", "Registry", "UNSET",
     "HIConfig", "StreamSpec", "FleetDecision", "H2T2State",
     "ShiftConfig", "ShiftState",
     "SourceRunOutput", "StepOutput", "adapt_schedule", "classification_cost",
@@ -67,8 +71,10 @@ __all__ = [
     "draw_psi_zeta", "effective_local_pred",
     "fleet_decide", "fleet_feedback", "fleet_init", "fleet_restart",
     "fleet_rounds_fused", "fleet_step_fused",
-    "h2t2_init", "h2t2_step", "local_fallback_pred", "pseudo_loss",
-    "psi_zeta_from_counter", "quantize", "region_masks",
+    "get_learner", "h2t2_init", "h2t2_step", "list_learners",
+    "local_fallback_pred", "pseudo_loss",
+    "psi_zeta_from_counter", "quantize", "region_masks", "register_learner",
+    "resolve_spec",
     "run_fleet", "run_fleet_fused", "run_fleet_source", "run_stream",
     "seed_from_key", "shift_init", "shift_update",
     "source_slot_keys", "true_loss_fleet",

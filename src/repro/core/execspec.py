@@ -1,0 +1,121 @@
+"""ExecSpec: one frozen bundle for the kernel-routing knobs.
+
+The hedge path used to thread five loose kwargs (``use_kernel``,
+``interpret``, ``randomness``, ``stream_block``, ``time_block``) through
+every layer — ``fleet_decide``/``fleet_feedback``, the ops wrappers,
+each engine's ``_kernel_opts``, ``HIServerConfig``, and
+``RequestPlaneConfig`` — and the learner registry would have made it
+six. :class:`ExecSpec` consolidates them into a single frozen (hence
+hashable, hence jit-static) dataclass that is passed as ``spec=`` at
+every layer.
+
+The old per-call kwargs keep working as thin shims: public entry points
+accept them, emit a ``DeprecationWarning`` (outside any jit trace, so
+the warning fires on every call rather than once per compile-cache
+entry), and map them onto an ``ExecSpec`` via :func:`resolve_spec`.
+In-repo code never uses the deprecated spellings — the tier-1 suite
+escalates ``DeprecationWarning`` from ``repro.*`` modules to errors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, Optional
+
+RANDOMNESS_MODES = ("pre_draw", "counter")
+
+
+class _Unset:
+    """Sentinel distinguishing 'kwarg not passed' from an explicit None."""
+
+    _instance: Optional["_Unset"] = None
+
+    def __new__(cls) -> "_Unset":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "<unset>"
+
+
+UNSET = _Unset()
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """How a fleet-policy call executes, not what it computes.
+
+    Fields:
+      learner: weight-structure name from ``core.learners`` ("dense" is
+        the paper's (G, G) grid; "factored" holds two (G,) vectors).
+      use_kernel: True forces the Pallas kernel, False forces the jnp
+        path, None auto-selects (kernel on TPU, jnp elsewhere).
+      interpret: run Pallas in interpret mode (None = auto: interpret
+        off-TPU so kernels remain testable on CPU).
+      randomness: "pre_draw" (caller materializes (psi, zeta)) or
+        "counter" (position-keyed threefry evaluated in-kernel).
+      stream_block: kernel stream-block size (None = autotuned default).
+      time_block: slots chained per monolithic kernel launch in the
+        fused/serving paths (None = engine default).
+
+    Frozen and hashable so it can ride through ``jax.jit`` as a static
+    argument; all semantics of each field are owned by the layer that
+    consumes it (ops for blocks, engines for time_block).
+    """
+
+    learner: str = "dense"
+    use_kernel: Optional[bool] = None
+    interpret: Optional[bool] = None
+    randomness: str = "pre_draw"
+    stream_block: Optional[int] = None
+    time_block: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.randomness not in RANDOMNESS_MODES:
+            raise ValueError(
+                f"unknown randomness mode {self.randomness!r}; expected one "
+                f"of {RANDOMNESS_MODES}"
+            )
+        if self.stream_block is not None and self.stream_block <= 0:
+            raise ValueError("stream_block must be positive when set")
+        if self.time_block is not None and self.time_block <= 0:
+            raise ValueError("time_block must be positive when set")
+
+    def evolve(self, **overrides: Any) -> "ExecSpec":
+        """A copy with the given fields replaced; UNSET/absent = keep."""
+        kept = {k: v for k, v in overrides.items() if v is not UNSET}
+        return dataclasses.replace(self, **kept) if kept else self
+
+
+def resolve_spec(
+    spec: Optional[ExecSpec],
+    *,
+    caller: str,
+    stacklevel: int = 3,
+    **legacy: Any,
+) -> ExecSpec:
+    """Merge deprecated per-call kwargs onto an ExecSpec, warning once.
+
+    ``legacy`` maps ExecSpec field names to the values of the deprecated
+    kwargs; pass :data:`UNSET` (the defaults do) for kwargs the caller
+    did not supply. When any legacy kwarg *was* supplied, one
+    ``DeprecationWarning`` is emitted naming the kwargs and the caller,
+    and the values override the corresponding ``spec`` fields. Must be
+    invoked outside jit traces so the warning fires per call.
+    """
+    base = spec if spec is not None else ExecSpec()
+    used: Dict[str, Any] = {
+        k: v for k, v in legacy.items() if v is not UNSET
+    }
+    if not used:
+        return base
+    names = ", ".join(sorted(used))
+    warnings.warn(
+        f"{caller}: the per-call kwarg(s) {names} are deprecated; pass "
+        f"spec=ExecSpec(...) instead",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+    return base.evolve(**used)

@@ -1,0 +1,138 @@
+"""Pluggable hedge learners: the weight structure under the H2T2 policy.
+
+The paper's policy maintains a dense (G, G) log-weight grid per stream —
+one expert per (lower, upper) threshold pair — so fleet size × G² bounds
+both memory residency and the decide-phase region-mass reduce. Following
+Chattopadhyay et al. (low-regret *and* low-complexity learners for
+hierarchical inference), the two-threshold structure admits far cheaper
+learners; this registry makes the weight structure a pluggable choice
+threaded through `fleet_decide`/`fleet_feedback` and every engine via
+``ExecSpec.learner``.
+
+Each learner owns its state pytree layout (the ``log_w`` leaf of
+``H2T2State``), its decide-time region-mass reduce, and its
+feedback-time weight update. The numerical ops live next to the dense
+kernels (`repro.kernels.hedge.factored` for the factored variant);
+this module holds only the structural metadata the policy layer and the
+engines need: fresh-weight construction, restart masking, and the
+analytic residency accounting the scaling benches report.
+
+Registered learners:
+  dense     the paper's (G, G) product grid — bit-identical to the
+            pre-registry behavior; O(G²) state and reduce per stream.
+  factored  two (G,) per-threshold weight vectors (row 0 = lower, row 1
+            = upper) combined as a product distribution at decide time;
+            O(G) state and reduce per stream. Feedback updates each axis
+            with the pseudo-loss marginalized over the other axis'
+            current distribution, so regret tracks dense H2T2 whenever
+            the dense posterior is close to a product measure (the
+            manuscript scenarios, where one threshold dominates).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.registry import Registry
+
+LEARNERS = Registry("learner")
+
+
+class DenseLearner:
+    """Paper H2T2: dense (G, G) log-weight grid, one expert per (l, u) pair."""
+
+    name = "dense"
+    description = (
+        "dense (G, G) expert grid over (lower, upper) threshold pairs "
+        "(the paper's H2T2; O(G^2) state per stream)"
+    )
+
+    def fresh_weights(self, cfg) -> jnp.ndarray:
+        """Uniform log-weights over the valid l <= u triangle."""
+        g = cfg.grid
+        iu = jnp.arange(g)
+        valid = iu[:, None] <= iu[None, :]
+        return jnp.where(valid, 0.0, -jnp.inf).astype(cfg.dtype)
+
+    def fleet_weights(self, cfg, n_streams: int) -> jnp.ndarray:
+        return jnp.broadcast_to(
+            self.fresh_weights(cfg)[None], (n_streams, cfg.grid, cfg.grid)
+        )
+
+    def remask(self, cfg, log_w: jnp.ndarray) -> jnp.ndarray:
+        """Re-pin invalid (l > u) cells after a kernel update.
+
+        The Pallas kernels represent -inf with a large negative sentinel;
+        restoring the exact -inf keeps the state bit-identical to the jnp
+        path.
+        """
+        g = cfg.grid
+        iu = jnp.arange(g)
+        valid = iu[:, None] <= iu[None, :]
+        return jnp.where(valid[None], log_w, -jnp.inf).astype(cfg.dtype)
+
+    def weight_bytes(self, cfg, n_streams: int) -> int:
+        return 4 * n_streams * cfg.grid * cfg.grid
+
+    def state_shape(self, cfg) -> Tuple[int, ...]:
+        return (cfg.grid, cfg.grid)
+
+
+class FactoredLearner:
+    """Factored per-threshold learner: two (G,) weight vectors, O(G) state.
+
+    ``log_w`` per stream is (2, G): row 0 the lower-threshold weights,
+    row 1 the upper-threshold weights. Region masses come from the
+    product distribution (restricted to l <= u via a cumulative-sum
+    reduce, so decide stays O(G)); feedback updates each axis against
+    the Eq.-10 pseudo-loss marginalized over the other axis.
+    """
+
+    name = "factored"
+    description = (
+        "factored per-threshold learner: two (G,) weight vectors with a "
+        "product combine (O(G) state per stream)"
+    )
+
+    def fresh_weights(self, cfg) -> jnp.ndarray:
+        return jnp.zeros((2, cfg.grid), cfg.dtype)
+
+    def fleet_weights(self, cfg, n_streams: int) -> jnp.ndarray:
+        return jnp.zeros((n_streams, 2, cfg.grid), cfg.dtype)
+
+    def remask(self, cfg, log_w: jnp.ndarray) -> jnp.ndarray:
+        """No invalid cells to re-pin: every (row, index) weight is live."""
+        return log_w.astype(cfg.dtype)
+
+    def weight_bytes(self, cfg, n_streams: int) -> int:
+        return 4 * n_streams * 2 * cfg.grid
+
+    def state_shape(self, cfg) -> Tuple[int, ...]:
+        return (2, cfg.grid)
+
+    def ops(self):
+        """The op module implementing this learner's decide/feedback math."""
+        from repro.kernels.hedge import factored
+
+        return factored
+
+
+LEARNERS.add("dense", DenseLearner())
+LEARNERS.add("factored", FactoredLearner())
+
+
+def register_learner(name: str):
+    """Decorator registering a learner *instance factory* under ``name``."""
+    return LEARNERS.register(name)
+
+
+def get_learner(name: str):
+    """Look up a learner by name; unknown names list the available ones."""
+    return LEARNERS.lookup(name)
+
+
+def list_learners() -> Tuple[Tuple[str, str], ...]:
+    """(name, one-line description) pairs for ``benchmarks.run --list``."""
+    return LEARNERS.describe()

@@ -25,6 +25,7 @@ from repro.core.counter import (
     psi_zeta_from_counter,
     seed_from_key,
 )
+from repro.core.execspec import UNSET, ExecSpec, resolve_spec
 from repro.core.types import HIConfig
 
 
@@ -167,8 +168,9 @@ def fleet_decide(
     zeta: Optional[jnp.ndarray],  # (S,) pre-drawn bernoulli(ε); None w/ rng
     *,
     rng: Optional[CounterRNG] = None,   # counter-mode draw position
-    use_kernel: Optional[bool] = None,
-    interpret: Optional[bool] = None,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
+    spec: Optional[ExecSpec] = None,
 ) -> FleetDecision:
     """Decide offload/local for a whole fleet without touching any label.
 
@@ -184,21 +186,27 @@ def fleet_decide(
     `FleetDecision.psi` carries the regenerated ψ for the capacity-drop
     fallback.
 
-    `use_kernel` routes the region reductions through the Pallas decide
-    kernel (`hedge_decide_pallas`); the default auto-selects like
-    `fleet_step_fused` (kernel on TPU, vmapped jnp elsewhere,
-    `interpret=True` forces the kernel for CPU correctness runs). Both
-    paths make identical decisions.
+    `spec` (an :class:`ExecSpec`) routes execution: `spec.use_kernel`
+    sends the region reductions through the Pallas decide kernel (the
+    default auto-selects like `fleet_step_fused` — kernel on TPU, vmapped
+    jnp elsewhere, `interpret=True` forces the kernel for CPU correctness
+    runs), and `spec.learner` picks the weight structure (non-dense
+    learners always route through the ops layer). Both kernel and jnp
+    paths make identical decisions. The loose `use_kernel`/`interpret`
+    kwargs are deprecated shims onto the spec.
     """
+    spec = resolve_spec(spec, caller="fleet_decide",
+                        use_kernel=use_kernel, interpret=interpret)
+    uk = _resolve_use_kernel(spec.use_kernel, spec.interpret)
     if rng is not None:
         if psi is not None or zeta is not None:
             raise ValueError("fleet_decide: pass (psi, zeta) OR rng, not both")
-        if _resolve_use_kernel(use_kernel, interpret):
+        if uk or spec.learner != "dense":
             from repro.kernels.hedge.ops import fleet_hedge_decide
 
             i_f, off, exp_, lp, q, p, psi_out = fleet_hedge_decide(
-                cfg, state.log_w, fs, None, None, interpret=interpret,
-                randomness="counter", rng=rng)
+                cfg, state.log_w, fs, None, None, rng=rng,
+                spec=spec.evolve(use_kernel=uk, randomness="counter"))
             return FleetDecision(i_f=i_f, offload=off.astype(bool),
                                  explored=exp_.astype(bool), local_pred=lp,
                                  q=q, p=p, psi=psi_out)
@@ -206,12 +214,12 @@ def fleet_decide(
         psi, zeta = psi_zeta_from_counter(rng.seed, sid, rng.slot, cfg.eps)
     elif psi is None or zeta is None:
         raise ValueError("fleet_decide needs (psi, zeta) or a counter rng")
-    if _resolve_use_kernel(use_kernel, interpret):
+    if uk or spec.learner != "dense":
         from repro.kernels.hedge.ops import fleet_hedge_decide
 
         i_f, off, exp_, lp, q, p = fleet_hedge_decide(
             cfg, state.log_w, fs, psi, zeta.astype(jnp.int32),
-            interpret=interpret)
+            spec=spec.evolve(use_kernel=uk, randomness="pre_draw"))
         return FleetDecision(i_f=i_f, offload=off.astype(bool),
                              explored=exp_.astype(bool), local_pred=lp,
                              q=q, p=p, psi=psi)
@@ -258,8 +266,9 @@ def fleet_feedback(
     *,
     eta: Optional[jnp.ndarray] = None,    # (S,) or scalar; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) or scalar; None → cfg.decay
-    use_kernel: Optional[bool] = None,
-    interpret: Optional[bool] = None,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
+    spec: Optional[ExecSpec] = None,
 ) -> Tuple[H2T2State, StepOutput]:
     """Second half of `h2t2_step`: charge losses and update expert weights.
 
@@ -276,15 +285,19 @@ def fleet_feedback(
     broadcast the HIConfig scalars, which is bit-identical to the fixed
     paper schedule.
 
-    `use_kernel` routes the (S, G, G) weight update through the Pallas
-    feedback kernel (`hedge_feedback_pallas`, which takes the
-    post-compaction `sent` mask and the per-stream schedule as VMEM
-    vectors); the (S,) loss/prediction accounting always stays in jnp. The
-    default auto-selects like `fleet_step_fused`.
+    `spec.use_kernel` routes the weight update through the Pallas
+    feedback kernel (which takes the post-compaction `sent` mask and the
+    per-stream schedule as VMEM vectors); the (S,) loss/prediction
+    accounting always stays in jnp. The default auto-selects like
+    `fleet_step_fused`; `spec.learner` picks the weight structure
+    (non-dense learners always route through the ops layer). The loose
+    `use_kernel`/`interpret` kwargs are deprecated shims onto the spec.
 
     `fleet_decide` + `fleet_feedback` (with full `hrs` and `sent=None`)
     reproduces the vmapped `h2t2_step` exactly — state and outputs.
     """
+    spec = resolve_spec(spec, caller="fleet_feedback",
+                        use_kernel=use_kernel, interpret=interpret)
     if sent is None:
         sent = decision.offload
     sent = sent.astype(bool)
@@ -297,17 +310,18 @@ def fleet_feedback(
     decay = jnp.broadcast_to(
         jnp.asarray(cfg.decay if decay is None else decay, dtype), sent.shape)
 
-    if _resolve_use_kernel(use_kernel, interpret):
+    uk = _resolve_use_kernel(spec.use_kernel, spec.interpret)
+    if uk or spec.learner != "dense":
+        from repro.core.learners import get_learner
         from repro.kernels.hedge.ops import fleet_hedge_feedback
 
         new_lw = fleet_hedge_feedback(
             cfg, state.log_w, decision.i_f, sent.astype(jnp.int32),
             explored.astype(jnp.int32), hrs.astype(jnp.int32), betas,
-            interpret=interpret, eta=eta, decay=decay)
-        # The kernel's NEG sentinel → -inf, so kernel- and jnp-updated states
-        # are interchangeable representations.
-        log_w = jnp.where(_valid_mask(cfg.grid)[None], new_lw,
-                          -jnp.inf).astype(dtype)
+            eta=eta, decay=decay, spec=spec.evolve(use_kernel=uk))
+        # The kernel's NEG sentinel → -inf (dense), so kernel- and
+        # jnp-updated states are interchangeable representations.
+        log_w = get_learner(spec.learner).remask(cfg, new_lw)
     else:
         def one(lw, i_f, off, exp_, hr, beta, eta_s, decay_s):
             lt = pseudo_loss(cfg, i_f, off, exp_, hr, beta)
@@ -362,17 +376,19 @@ def adapt_schedule(cfg: HIConfig, shift_cfg, shift_state
     return eta, decay
 
 
-def fleet_restart(cfg: HIConfig, state: H2T2State,
-                  mask: jnp.ndarray) -> H2T2State:
+def fleet_restart(cfg: HIConfig, state: H2T2State, mask: jnp.ndarray,
+                  learner: str = "dense") -> H2T2State:
     """Re-initialize expert log-weights where `mask` (S,) is set.
 
     The restart is weights-only: the round/offload/exploration counters —
     the stream's threshold *history* — are preserved, so regret accounting
     and ε/η horizon schedules keep their meaning across a restart. Streams
-    outside the mask are untouched.
+    outside the mask are untouched. `learner` names the weight structure
+    (`core.learners`); the fresh weights match `fleet_init`'s.
     """
-    g = cfg.grid
-    fresh = jnp.where(_valid_mask(g), 0.0, -jnp.inf).astype(state.log_w.dtype)
+    from repro.core.learners import get_learner
+
+    fresh = get_learner(learner).fresh_weights(cfg).astype(state.log_w.dtype)
     mask = mask.astype(bool)
     return state._replace(
         log_w=jnp.where(mask[:, None, None], fresh[None], state.log_w))
@@ -476,9 +492,23 @@ def run_fleet(
 # decisions for the same key.
 
 
-def fleet_init(cfg: HIConfig, n_streams: int) -> H2T2State:
-    """`h2t2_init` batched over a fleet: every leaf gains a leading (S,) axis."""
-    return jax.vmap(lambda _: h2t2_init(cfg))(jnp.arange(n_streams))
+def fleet_init(cfg: HIConfig, n_streams: int,
+               learner: str = "dense") -> H2T2State:
+    """`h2t2_init` batched over a fleet: every leaf gains a leading (S,) axis.
+
+    `learner` names the weight structure (`core.learners`): "dense" is the
+    paper's (S, G, G) grid (bit-identical to the vmapped `h2t2_init`);
+    other learners supply their own `log_w` leaf layout (e.g. (S, 2, G)
+    for "factored") with the same (S,) counters.
+    """
+    if learner == "dense":
+        return jax.vmap(lambda _: h2t2_init(cfg))(jnp.arange(n_streams))
+    from repro.core.learners import get_learner
+
+    zero = jnp.zeros((n_streams,), jnp.int32)
+    return H2T2State(
+        log_w=get_learner(learner).fleet_weights(cfg, n_streams),
+        t=zero, n_offloads=zero, n_explores=zero)
 
 
 def draw_psi_zeta(keys: jnp.ndarray, eps: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -614,9 +644,10 @@ def run_fleet_source(
     *,
     state: Optional[H2T2State] = None,
     step_fn=None,
-    use_kernel: Optional[bool] = None,
-    interpret: Optional[bool] = None,
-    randomness: str = "pre_draw",
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
+    randomness=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    spec: Optional[ExecSpec] = None,
 ) -> Tuple[H2T2State, SourceRunOutput]:
     """Run a fleet over a `ScenarioSource` block-by-block, never holding the
     (S, T) trace: each `lax.scan` block emits one (S, block) SlotBatch and
@@ -635,9 +666,11 @@ def run_fleet_source(
     if key is None:
         raise TypeError("run_fleet_source needs a policy `key` (the source "
                         "carries only its own generative key)")
-    check_randomness_mode(randomness)
+    spec = resolve_spec(spec, caller="run_fleet_source",
+                        use_kernel=use_kernel, interpret=interpret,
+                        randomness=randomness)
     s, bsz = source.n_streams, source.block
-    counter = randomness == "counter"
+    counter = spec.randomness == "counter"
     seed = seed_from_key(key) if counter else None
     if step_fn is None:
         if counter:
@@ -646,17 +679,15 @@ def run_fleet_source(
                                  slot=jnp.asarray(t, jnp.int32),
                                  stream_offset=jnp.zeros((), jnp.int32))
                 return fleet_step_fused(
-                    cfg, st, f, None, None, hr, beta,
-                    use_kernel=use_kernel, interpret=interpret, rng=rng)
+                    cfg, st, f, None, None, hr, beta, rng=rng, spec=spec)
         else:
             def step_fn(st, f, beta, hr, keys, t):
                 psi, zeta = draw_psi_zeta(keys, cfg.eps)
                 return fleet_step_fused(
-                    cfg, st, f, psi, zeta, hr, beta,
-                    use_kernel=use_kernel, interpret=interpret)
+                    cfg, st, f, psi, zeta, hr, beta, spec=spec)
 
     if state is None:
-        state = fleet_init(cfg, s)
+        state = fleet_init(cfg, s, learner=spec.learner)
     src_key = source.key
 
     def slot_body(pst, xs):
@@ -707,12 +738,13 @@ def fleet_step_fused(
     zeta: Optional[jnp.ndarray],  # (S,) pre-drawn bernoulli(ε); None w/ rng
     h_r: jnp.ndarray,        # (S,)
     beta: jnp.ndarray,       # (S,)
-    use_kernel: Optional[bool] = None,
-    interpret: Optional[bool] = None,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
     *,
     rng: Optional[CounterRNG] = None,     # counter-mode draw position
     eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
+    spec: Optional[ExecSpec] = None,
 ) -> Tuple[H2T2State, StepOutput]:
     """One fleet round via the fused kernel; mirrors vmapped `h2t2_step`.
 
@@ -720,34 +752,38 @@ def fleet_step_fused(
     and a `rng` counter position — regenerated in place from
     `(seed, stream, slot)`, so nothing randomness-shaped ever sits in HBM.
 
-    `use_kernel=None` auto-selects: compiled Pallas on TPU, jnp oracle
+    `spec.use_kernel=None` auto-selects: compiled Pallas on TPU, jnp oracle
     elsewhere — unless `interpret=True`, which forces the kernel in
-    interpret mode (the correctness-test path on CPU). `eta`/`decay`
-    override the fixed schedule per stream (the kernels take them as (S,)
-    VMEM vectors; the broadcast defaults are bit-identical to the paper
-    schedule).
+    interpret mode (the correctness-test path on CPU); `spec.learner`
+    picks the weight structure. `eta`/`decay` override the fixed schedule
+    per stream (the kernels take them as (S,) VMEM vectors; the broadcast
+    defaults are bit-identical to the paper schedule). The loose
+    `use_kernel`/`interpret` kwargs are deprecated shims onto the spec.
     """
+    from repro.core.learners import get_learner
     from repro.kernels.hedge.ops import fleet_hedge_step
 
-    use_kernel = _resolve_use_kernel(use_kernel, interpret)
+    spec = resolve_spec(spec, caller="fleet_step_fused",
+                        use_kernel=use_kernel, interpret=interpret)
+    kspec = spec.evolve(
+        use_kernel=_resolve_use_kernel(spec.use_kernel, spec.interpret),
+        randomness="counter" if rng is not None else "pre_draw")
     if rng is not None:
         new_lw, off, exp_, lp, q, p = fleet_hedge_step(
             cfg, state.log_w, f, None, None,
             h_r.astype(jnp.int32), beta,
-            use_kernel=use_kernel, interpret=interpret, eta=eta, decay=decay,
-            randomness="counter", rng=rng)
+            eta=eta, decay=decay, rng=rng, spec=kspec)
     else:
         new_lw, off, exp_, lp, q, p = fleet_hedge_step(
             cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
-            h_r.astype(jnp.int32), beta,
-            use_kernel=use_kernel, interpret=interpret, eta=eta, decay=decay)
+            h_r.astype(jnp.int32), beta, eta=eta, decay=decay, spec=kspec)
     offload = off.astype(bool)
     explored = exp_.astype(bool)
     loss, pred = _charge_losses(cfg, offload, lp, h_r, beta)
     # Re-mask invalid cells to -inf so fused state is interchangeable with the
-    # reference representation (the kernel uses a -1e30 sentinel internally).
-    valid = _valid_mask(cfg.grid)[None]
-    log_w = jnp.where(valid, new_lw, -jnp.inf).astype(cfg.dtype)
+    # reference representation (the dense kernel uses a -1e30 sentinel
+    # internally; non-dense learners have no invalid cells).
+    log_w = get_learner(spec.learner).remask(cfg, new_lw)
     new_state = H2T2State(
         log_w=log_w,
         t=state.t + 1,
@@ -768,13 +804,14 @@ def fleet_rounds_fused(
     zeta: Optional[jnp.ndarray],  # (S, TB) pre-drawn ζ; None w/ rng
     h_r: jnp.ndarray,        # (S, TB)
     beta: jnp.ndarray,       # (S, TB)
-    use_kernel: Optional[bool] = None,
-    interpret: Optional[bool] = None,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
     *,
     rng: Optional[CounterRNG] = None,     # counter position of the block's
                                           # first round; round j draws slot+j
     eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
+    spec: Optional[ExecSpec] = None,
 ) -> Tuple[H2T2State, StepOutput]:
     """TB rounds for the whole fleet in one multi-round kernel launch.
 
@@ -787,26 +824,28 @@ def fleet_rounds_fused(
     the serving layer checks before taking this path for an adaptive
     schedule).
     """
+    from repro.core.learners import get_learner
     from repro.kernels.hedge.ops import fleet_hedge_rounds
 
-    use_kernel = _resolve_use_kernel(use_kernel, interpret)
+    spec = resolve_spec(spec, caller="fleet_rounds_fused",
+                        use_kernel=use_kernel, interpret=interpret)
+    kspec = spec.evolve(
+        use_kernel=_resolve_use_kernel(spec.use_kernel, spec.interpret),
+        randomness="counter" if rng is not None else "pre_draw")
     if rng is not None:
         new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
             cfg, state.log_w, f, None, None,
-            h_r.astype(jnp.int32), beta, use_kernel=use_kernel,
-            interpret=interpret, eta=eta, decay=decay,
-            randomness="counter", rng=rng)
+            h_r.astype(jnp.int32), beta,
+            eta=eta, decay=decay, rng=rng, spec=kspec)
     else:
         new_lw, off, exp_, lp, q, p = fleet_hedge_rounds(
             cfg, state.log_w, f, psi, zeta.astype(jnp.int32),
-            h_r.astype(jnp.int32), beta, use_kernel=use_kernel,
-            interpret=interpret, eta=eta, decay=decay)
+            h_r.astype(jnp.int32), beta, eta=eta, decay=decay, spec=kspec)
     offload = off.astype(bool)
     explored = exp_.astype(bool)
     loss, pred = _charge_losses(cfg, offload, lp, h_r, beta)
-    valid = _valid_mask(cfg.grid)[None]
     new_state = H2T2State(
-        log_w=jnp.where(valid, new_lw, -jnp.inf).astype(cfg.dtype),
+        log_w=get_learner(spec.learner).remask(cfg, new_lw),
         t=state.t + f.shape[1],
         n_offloads=state.n_offloads + jnp.sum(off, axis=1),
         n_explores=state.n_explores + jnp.sum(exp_, axis=1),
@@ -823,13 +862,14 @@ def run_fleet_fused(
     key: Optional[jax.Array] = None,
     state: Optional[H2T2State] = None,
     *,
-    use_kernel: Optional[bool] = None,
-    interpret: Optional[bool] = None,
-    time_block: int = 1,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
+    time_block=UNSET,        # deprecated — pass spec=ExecSpec(...)
     stream_keys: Optional[jnp.ndarray] = None,
-    randomness: str = "pre_draw",
+    randomness=UNSET,        # deprecated — pass spec=ExecSpec(...)
     eta: Optional[jnp.ndarray] = None,    # (S,) per-stream η; None → cfg.eta
     decay: Optional[jnp.ndarray] = None,  # (S,) per-stream decay
+    spec: Optional[ExecSpec] = None,
 ) -> Tuple[H2T2State, StepOutput]:
     """Kernel-backed `run_fleet`: scan over time of the batched fused step.
 
@@ -840,19 +880,24 @@ def run_fleet_fused(
     requires T % time_block == 0. `eta`/`decay` thread a per-stream (S,)
     schedule (held fixed over the horizon) through either kernel path.
 
-    `randomness="pre_draw"` (default, the golden path) materializes the
-    whole (S, T) (ψ, ζ) block up front. `randomness="counter"` never does:
-    each scan step carries only a counter position (seed, slot, offset) and
+    `spec.randomness="pre_draw"` (default, the golden path) materializes
+    the whole (S, T) (ψ, ζ) block up front. `"counter"` never does: each
+    scan step carries only a counter position (seed, slot, offset) and
     the draws are regenerated in place — peak randomness residency
     O(S×time_block). Counter runs are position-keyed off `key` alone;
-    `stream_keys` is a pre-draw-only knob.
+    `stream_keys` is a pre-draw-only knob. `spec.time_block=None` means 1
+    here (the single-round step path). The loose `use_kernel`/`interpret`/
+    `time_block`/`randomness` kwargs are deprecated shims onto the spec.
     """
-    check_randomness_mode(randomness)
+    spec = resolve_spec(spec, caller="run_fleet_fused",
+                        use_kernel=use_kernel, interpret=interpret,
+                        time_block=time_block, randomness=randomness)
+    tb = 1 if spec.time_block is None else spec.time_block
     s, t = fs.shape
     if state is None:
-        state = fleet_init(cfg, s)
+        state = fleet_init(cfg, s, learner=spec.learner)
 
-    if randomness == "counter":
+    if spec.randomness == "counter":
         if stream_keys is not None:
             raise ValueError(
                 "counter randomness is position-keyed; `stream_keys` only "
@@ -861,14 +906,13 @@ def run_fleet_fused(
             raise ValueError("counter randomness needs `key`")
         seed = seed_from_key(key)
         offset = jnp.zeros((), jnp.int32)
-        if time_block == 1:
+        if tb == 1:
             def body(st, xs):
                 f, hr, beta, slot = xs
                 rng = CounterRNG(seed=seed, slot=slot, stream_offset=offset)
                 return fleet_step_fused(
                     cfg, st, f, None, None, hr, beta,
-                    use_kernel=use_kernel, interpret=interpret,
-                    rng=rng, eta=eta, decay=decay)
+                    rng=rng, eta=eta, decay=decay, spec=spec)
 
             slots = jnp.arange(t, dtype=jnp.int32)
             final, outs = jax.lax.scan(
@@ -876,23 +920,21 @@ def run_fleet_fused(
             return final, jax.tree_util.tree_map(
                 lambda a: jnp.swapaxes(a, 0, 1), outs)
 
-        if t % time_block:
+        if t % tb:
             raise ValueError(
-                f"horizon {t} not divisible by time_block {time_block}")
-        uk = _resolve_use_kernel(use_kernel, interpret)
-        n_blocks = t // time_block
+                f"horizon {t} not divisible by time_block {tb}")
+        n_blocks = t // tb
         blocked = lambda a: jnp.swapaxes(
-            a.reshape(s, n_blocks, time_block), 0, 1)
+            a.reshape(s, n_blocks, tb), 0, 1)
         xs = tuple(blocked(a) for a in (fs, hrs, betas))
-        slot0s = jnp.arange(n_blocks, dtype=jnp.int32) * time_block
+        slot0s = jnp.arange(n_blocks, dtype=jnp.int32) * tb
 
         def body(st, xs_):
             f, hr, beta, slot0 = xs_
             rng = CounterRNG(seed=seed, slot=slot0, stream_offset=offset)
             return fleet_rounds_fused(
                 cfg, st, f, None, None, hr, beta,
-                use_kernel=uk, interpret=interpret,
-                rng=rng, eta=eta, decay=decay)
+                rng=rng, eta=eta, decay=decay, spec=spec)
 
         final, outs = jax.lax.scan(body, state, xs + (slot0s,))
         unblock = lambda a: jnp.swapaxes(a, 0, 1).reshape(s, t)
@@ -900,31 +942,28 @@ def run_fleet_fused(
 
     psis, zetas = draw_fleet_randomness(cfg, key, s, t, stream_keys)
 
-    if time_block == 1:
+    if tb == 1:
         def body(st, xs):
             f, psi, zeta, hr, beta = xs
             return fleet_step_fused(cfg, st, f, psi, zeta, hr, beta,
-                                    use_kernel=use_kernel, interpret=interpret,
-                                    eta=eta, decay=decay)
+                                    eta=eta, decay=decay, spec=spec)
 
         final, outs = jax.lax.scan(
             body, state, (fs.T, psis.T, zetas.T, hrs.T, betas.T))
         return final, jax.tree_util.tree_map(
             lambda a: jnp.swapaxes(a, 0, 1), outs)
 
-    if t % time_block:
-        raise ValueError(f"horizon {t} not divisible by time_block {time_block}")
-    uk = _resolve_use_kernel(use_kernel, interpret)
-    n_blocks = t // time_block
+    if t % tb:
+        raise ValueError(f"horizon {t} not divisible by time_block {tb}")
+    n_blocks = t // tb
     # (S, T) → (n_blocks, S, TB) so scan iterates over time blocks.
-    blocked = lambda a: jnp.swapaxes(a.reshape(s, n_blocks, time_block), 0, 1)
+    blocked = lambda a: jnp.swapaxes(a.reshape(s, n_blocks, tb), 0, 1)
     xs = tuple(blocked(a) for a in (fs, psis, zetas, hrs, betas))
 
     def body(st, xs_):
         f, psi, zeta, hr, beta = xs_                     # (S, TB) each
         return fleet_rounds_fused(cfg, st, f, psi, zeta, hr, beta,
-                                  use_kernel=uk, interpret=interpret,
-                                  eta=eta, decay=decay)
+                                  eta=eta, decay=decay, spec=spec)
 
     final, outs = jax.lax.scan(body, state, xs)
     # (n_blocks, S, TB) → (S, T)

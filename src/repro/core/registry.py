@@ -1,0 +1,85 @@
+"""One generic name→entry registry shared by engines, scenarios, learners.
+
+Every pluggable family in the repo (policy engines, scenario sources,
+hedge learners) used to carry its own copy of the same three functions:
+a module-level dict, a ``register_*`` decorator, and a ``get_*`` lookup
+with its own flavor of unknown-name error. This module is the single
+implementation: construct a :class:`Registry` per family and re-export
+thin wrappers so existing call sites keep their names.
+
+Lookup failures raise ``ValueError`` with a uniform message that lists
+the available entries, so ``get_engine("fuzed")`` and
+``get_learner("fact")`` fail identically and self-document.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator, Optional, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+class Registry:
+    """A named collection of pluggable entries with uniform errors.
+
+    ``kind`` is the human-facing family name used in error messages
+    ("policy engine", "scenario", "learner").
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, object] = {}
+
+    def register(self, name: str) -> Callable[[T], T]:
+        """Decorator: add ``entry`` under ``name`` (last write wins)."""
+
+        def deco(entry: T) -> T:
+            self._entries[name] = entry
+            return entry
+
+        return deco
+
+    def add(self, name: str, entry: object) -> None:
+        """Imperative form of :meth:`register`."""
+        self._entries[name] = entry
+
+    def lookup(self, name: str) -> object:
+        """Return the entry for ``name`` or raise the uniform error."""
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} {name!r}; available: "
+                + ", ".join(self.names())
+            ) from None
+
+    def names(self) -> Tuple[str, ...]:
+        """All registered names, sorted."""
+        return tuple(sorted(self._entries))
+
+    def describe(self) -> Tuple[Tuple[str, str], ...]:
+        """(name, one-line description) pairs for ``--list`` style output.
+
+        The description is the first line of the entry's docstring (or of
+        an explicit ``description`` attribute when the entry carries one).
+        """
+        rows = []
+        for name in self.names():
+            entry = self._entries[name]
+            doc = getattr(entry, "description", None)
+            if not isinstance(doc, str):
+                doc = getattr(entry, "__doc__", None) or ""
+            rows.append((name, doc.strip().splitlines()[0] if doc.strip() else ""))
+        return tuple(rows)
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, name: str, default: Optional[object] = None) -> object:
+        return self._entries.get(name, default)

@@ -39,11 +39,12 @@ Registered scenarios:
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Type, Union
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import Registry
 from repro.core.types import StreamSpec
 from repro.data.datasets import calibrate, get_spec
 
@@ -67,7 +68,10 @@ class SlotBatch(NamedTuple):
     betas: jnp.ndarray   # offloading costs, float32
 
 
-_SCENARIOS: Dict[str, Type["ScenarioSource"]] = {}
+SCENARIOS: Registry = Registry("scenario")
+# Compatibility alias: this IS the registry's backing dict (tests add and
+# delete entries through it directly), not a copy.
+_SCENARIOS = SCENARIOS._entries
 
 
 def register_scenario(name: str):
@@ -75,7 +79,7 @@ def register_scenario(name: str):
 
     def deco(cls):
         cls.name = name
-        _SCENARIOS[name] = cls
+        SCENARIOS.add(name, cls)
         return cls
 
     return deco
@@ -85,19 +89,18 @@ def available_scenarios(synthetic_only: bool = False) -> Tuple[str, ...]:
     """Registered scenario names; `synthetic_only=True` keeps only sources
     constructible from (n_streams, horizon, key) alone — generic sweeps use
     this to skip data-backed sources like `replay`."""
-    return tuple(n for n, cls in _SCENARIOS.items()
-                 if not synthetic_only or cls.synthetic)
+    return tuple(n for n in SCENARIOS.names()
+                 if not synthetic_only or SCENARIOS.get(n).synthetic)
+
+
+def list_scenarios() -> Tuple[Tuple[str, str], ...]:
+    """(name, one-line description) pairs for every registered scenario."""
+    return SCENARIOS.describe()
 
 
 def get_scenario(name: str, **opts) -> "ScenarioSource":
     """Resolve a registered scenario name to a constructed source."""
-    try:
-        cls = _SCENARIOS[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown scenario {name!r}; expected one of "
-            f"{available_scenarios()}") from None
-    return cls(**opts)
+    return SCENARIOS.lookup(name)(**opts)
 
 
 def _trunc_normal(key: jax.Array, mu, sigma, shape) -> jnp.ndarray:
@@ -421,3 +424,78 @@ class BetaProcessSource(ScenarioSource):
         state, (f, y, b) = jax.lax.scan(one, state, ts)
         tp = lambda a: jnp.swapaxes(a, 0, 1)
         return state, SlotBatch(fs=tp(f), hrs=tp(y), ys=tp(y), betas=tp(b))
+
+
+# --------------------------------------------------------------------------
+# Materialized-trace helpers (formerly `repro.data.streams`, which is now a
+# deprecation shim over these). They run the matching scenario sources to
+# completion, so there is a single generation path: the chunked
+# per-slot-keyed draws. Prefer a ScenarioSource (and `run_fleet_source` /
+# `HIServer.run_source`) for anything long-horizon or nonstationary; these
+# exist for the paper figures and tests that need the whole trace at once.
+# --------------------------------------------------------------------------
+
+
+class Trace(NamedTuple):
+    fs: jnp.ndarray      # (T,) or (S, T) LDL confidences in [0, 1)
+    hrs: jnp.ndarray     # remote labels (ground-truth proxy), int32
+    betas: jnp.ndarray   # offloading costs
+
+
+def _to_trace(batch: SlotBatch, squeeze: bool) -> Trace:
+    fs, hrs, betas = batch.fs, batch.hrs, batch.betas
+    if squeeze:
+        fs, hrs, betas = fs[0], hrs[0], betas[0]
+    return Trace(fs=fs, hrs=hrs, betas=betas)
+
+
+def sample_trace(
+    spec: SpecLike,
+    horizon: int,
+    key: jax.Array,
+    beta: float = 0.3,
+    beta_mode: str = "fixed",
+    n_streams: Optional[int] = None,
+) -> Trace:
+    """Materialized stationary trace of length `horizon` (optionally
+    (n_streams, horizon)) — `StationarySource` run to completion.
+
+    beta_mode: 'fixed' — constant β (paper's comparison study);
+               'uniform' — β_t ~ U(0, β) oblivious adversary.
+    """
+    src = StationarySource(spec=spec, n_streams=n_streams or 1,
+                           horizon=horizon, key=key, beta=beta,
+                           beta_mode=beta_mode)
+    return _to_trace(src.materialize(), squeeze=n_streams is None)
+
+
+def dataset_trace(
+    name: str, horizon: int, key: jax.Array, beta: float = 0.3, **kw
+) -> Trace:
+    return sample_trace(get_spec(name), horizon, key, beta=beta, **kw)
+
+
+def empirical_confusion(trace) -> Tuple[float, float, float]:
+    """(accuracy, fp, fn) of the argmax rule on a trace — sanity vs Table 2.
+
+    Accepts a `Trace` or any (fs, hrs)-carrying batch (e.g. `SlotBatch`)."""
+    pred1 = trace.fs >= 0.5
+    fp = float(jnp.mean(pred1 & (trace.hrs == 0)))
+    fn = float(jnp.mean(~pred1 & (trace.hrs == 1)))
+    return 1.0 - fp - fn, fp, fn
+
+
+def drift_trace(
+    name_a: str,
+    name_b: str,
+    horizon: int,
+    key: jax.Array,
+    beta: float = 0.3,
+    switch_at: Optional[int] = None,
+) -> Trace:
+    """Two-regime shift trace — the `piecewise` scenario's simplest schedule,
+    kept for the distribution-shift robustness runs."""
+    switch_at = horizon // 2 if switch_at is None else switch_at
+    src = PiecewiseSource(segments=((0, name_a), (switch_at, name_b)),
+                          horizon=horizon, key=key, beta=beta)
+    return _to_trace(src.materialize(), squeeze=True)

@@ -1,87 +1,38 @@
-"""Simulated HI streams — thin compatibility shims over the ScenarioSource
-registry (`repro.data.scenarios`).
+"""DEPRECATED shim — everything here lives in `repro.data.scenarios`.
 
-`sample_trace` / `dataset_trace` / `drift_trace` predate the registry and
-materialized (S, T) traces on the host in one shot. They now materialize
-the matching scenario sources (`stationary`, `piecewise`), so there is a
-single generation path: the chunked per-slot-keyed draws. Chunked emission
-and these materialized traces are bit-identical by construction — prefer a
-`ScenarioSource` (and `run_fleet_source` / `HIServer.run_source`) for
-anything long-horizon or nonstationary; these shims exist for the paper
-figures and tests that genuinely need the whole trace at once.
+`sample_trace` / `dataset_trace` / `drift_trace` predate the ScenarioSource
+registry; they are now plain re-exports of the materialized-trace helpers in
+`repro.data.scenarios` (which run the registered `stationary` / `piecewise`
+sources to completion, so the chunked per-slot-keyed draws are the single
+generation path).
+
+Importing this module emits a `DeprecationWarning`. Import the same names
+from `repro.data` (or `repro.data.scenarios`) instead.
+
+Removal horizon: this shim is kept for two more stacked PRs after the
+learner-registry/ExecSpec consolidation (PR 9) and will then be deleted;
+no in-repo code imports it anymore.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple, Union
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.data.scenarios import (  # noqa: F401
+    Trace,
+    _to_trace,
+    dataset_trace,
+    drift_trace,
+    empirical_confusion,
+    sample_trace,
+)
 
-from repro.core.types import StreamSpec
-from repro.data.datasets import get_spec
-from repro.data.scenarios import PiecewiseSource, SlotBatch, StationarySource
+warnings.warn(
+    "repro.data.streams is deprecated and will be removed; import "
+    "Trace/sample_trace/dataset_trace/drift_trace/empirical_confusion "
+    "from repro.data (or repro.data.scenarios) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-
-class Trace(NamedTuple):
-    fs: jnp.ndarray      # (T,) or (S, T) LDL confidences in [0, 1)
-    hrs: jnp.ndarray     # remote labels (ground-truth proxy), int32
-    betas: jnp.ndarray   # offloading costs
-
-
-def _to_trace(batch: SlotBatch, squeeze: bool) -> Trace:
-    fs, hrs, betas = batch.fs, batch.hrs, batch.betas
-    if squeeze:
-        fs, hrs, betas = fs[0], hrs[0], betas[0]
-    return Trace(fs=fs, hrs=hrs, betas=betas)
-
-
-def sample_trace(
-    spec: Union[StreamSpec, str],
-    horizon: int,
-    key: jax.Array,
-    beta: float = 0.3,
-    beta_mode: str = "fixed",
-    n_streams: Optional[int] = None,
-) -> Trace:
-    """Materialized stationary trace of length `horizon` (optionally
-    (n_streams, horizon)) — `StationarySource` run to completion.
-
-    beta_mode: 'fixed' — constant β (paper's comparison study);
-               'uniform' — β_t ~ U(0, β) oblivious adversary.
-    """
-    src = StationarySource(spec=spec, n_streams=n_streams or 1,
-                           horizon=horizon, key=key, beta=beta,
-                           beta_mode=beta_mode)
-    return _to_trace(src.materialize(), squeeze=n_streams is None)
-
-
-def dataset_trace(
-    name: str, horizon: int, key: jax.Array, beta: float = 0.3, **kw
-) -> Trace:
-    return sample_trace(get_spec(name), horizon, key, beta=beta, **kw)
-
-
-def empirical_confusion(trace) -> Tuple[float, float, float]:
-    """(accuracy, fp, fn) of the argmax rule on a trace — sanity vs Table 2.
-
-    Accepts a `Trace` or any (fs, hrs)-carrying batch (e.g. `SlotBatch`)."""
-    pred1 = trace.fs >= 0.5
-    fp = float(jnp.mean(pred1 & (trace.hrs == 0)))
-    fn = float(jnp.mean(~pred1 & (trace.hrs == 1)))
-    return 1.0 - fp - fn, fp, fn
-
-
-def drift_trace(
-    name_a: str,
-    name_b: str,
-    horizon: int,
-    key: jax.Array,
-    beta: float = 0.3,
-    switch_at: Optional[int] = None,
-) -> Trace:
-    """Two-regime shift trace — the `piecewise` scenario's simplest schedule,
-    kept for the distribution-shift robustness runs."""
-    switch_at = horizon // 2 if switch_at is None else switch_at
-    src = PiecewiseSource(segments=((0, name_a), (switch_at, name_b)),
-                          horizon=horizon, key=key, beta=beta)
-    return _to_trace(src.materialize(), squeeze=True)
+__all__ = ["Trace", "dataset_trace", "drift_trace", "empirical_confusion",
+           "sample_trace"]

@@ -140,6 +140,7 @@ def _measure_rounds_us(cfg, s: int, sb: int, tb: int, interpret: bool,
                        reps: int, randomness: str = "pre_draw") -> float:
     """µs per H2T2 round of one multi-round launch chain at (SB, TB)."""
     from repro.core.counter import counter_rng
+    from repro.core.execspec import ExecSpec
     from repro.kernels.hedge.ops import fleet_hedge_rounds
 
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -159,10 +160,11 @@ def _measure_rounds_us(cfg, s: int, sb: int, tb: int, interpret: bool,
                 jax.random.bernoulli(ks[2], cfg.eps,
                                      (s, tb)).astype(jnp.int32)) + data[1:]
 
+    spec = ExecSpec(use_kernel=True, interpret=interpret,
+                    stream_block=sb, randomness=randomness)
+
     def fn():
-        return fleet_hedge_rounds(cfg, *args, use_kernel=True,
-                                  interpret=interpret, stream_block=sb,
-                                  randomness=randomness, **kw)
+        return fleet_hedge_rounds(cfg, *args, spec=spec, **kw)
 
     jax.block_until_ready(fn())                       # compile outside timing
     t0 = time.perf_counter()

@@ -1,0 +1,403 @@
+"""Factored per-threshold hedge learner: O(S·G) state, O(G) reduces.
+
+The dense kernels keep a (G, G) expert grid per stream; this module is
+the reduced-complexity alternative the learner registry
+(`repro.core.learners`) exposes as ``learner="factored"``. Per stream
+the state is (2, G): row 0 holds log-weights over the *lower* threshold
+index, row 1 over the *upper* index. Region masses come from the
+product distribution restricted to the valid l ≤ u triangle — all three
+are O(G) via one cumulative sum over the lower axis:
+
+    total = Σ_u wu[u] · cl[u]            cl[u] = Σ_{l ≤ u} wl[l]
+    r3    = Σ_{u ≤ i_f} wu[u] · cl[u]    (predict-1 mass)
+    r2    = cl[i_f] · Σ_{u > i_f} wu[u]  (ambiguous mass)
+
+so `q = r2/total` and `p = r3/total` feed the exact dense decision
+rules (offload iff ψ ≤ q or ζ; local_pred = [ψ ≤ q+p]).
+
+Feedback updates each axis against the Eq.-10 pseudo-loss with the
+*other* axis marginalized under its current distribution: a lower index
+l ≤ i_f sits in r2 with probability P(u > i_f) (→ β on offload) and in
+r3 otherwise (→ δ_fp/ε on exploration), etc. Each (G,) row is
+decay/η-updated and renormalized by its own max, exactly like the dense
+grid.
+
+Layout mirrors `ref.py` + `kernel.py`: `*_ref` functions are the jnp
+oracles (the XLA fallback), `*_pallas` the Pallas launches over
+(SB, 2, G) stream blocks, with counter-randomness twins that draw
+(ψ, ζ) in-kernel from the same position-keyed threefry contract as the
+dense kernels — so switching learners never changes the draws. The
+kernel bodies call the same `_decide_core`/`_feedback_core` as the
+oracles, which is what makes interpret-mode runs bit-identical to the
+refs. Exported names follow the uniform learner-ops protocol
+`repro.kernels.hedge.ops` dispatches on: `step_ref`, `rounds_ref`,
+`decide_ref`, `feedback_ref`, their `*_counter_ref` twins, and the
+matching `*_pallas` set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.counter import psi_zeta_from_counter
+from repro.kernels.hedge.kernel import (
+    _block_stream_ids,
+    _block_streams,
+    _counter_psi_zeta,
+    _pad_streams,
+    _rng_spec,
+    _rng_words,
+    _sched_vec,
+    pack_counter_rng,
+)
+from repro.kernels.hedge.ref import _counter_draws
+
+TINY = 1e-38
+
+
+def _axis_idx(g: int):
+    """(1, G) int32 iota over the threshold axis (2-D for TPU lowering)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (1, g), 1)
+
+
+def _axis_weights(lv):
+    """Max-shifted weights of one (S, G) log-weight row (safe exp)."""
+    return jnp.exp(lv - jnp.max(lv, axis=-1, keepdims=True))
+
+
+def _decide_core(log_w, i_f, psi, zeta, g: int):
+    """Region masses + decisions for an (S, 2, G) block; shared verbatim by
+    the jnp oracle and the Pallas kernel bodies (interpret-mode
+    bit-identity)."""
+    wl = _axis_weights(log_w[:, 0, :].astype(jnp.float32))
+    wu = _axis_weights(log_w[:, 1, :].astype(jnp.float32))
+    cl = jnp.cumsum(wl, axis=-1)                   # cl[u] = Σ_{l<=u} wl[l]
+    idx = _axis_idx(g)
+    i_b = i_f[:, None]
+    le = idx <= i_b
+    s_tot = jnp.sum(wu * cl, axis=-1)
+    s_r3 = jnp.sum(jnp.where(le, wu * cl, 0.0), axis=-1)
+    cl_if = jnp.sum(jnp.where(idx == i_b, cl, 0.0), axis=-1)
+    wu_gt = jnp.sum(jnp.where(le, 0.0, wu), axis=-1)
+    tot = jnp.maximum(s_tot, TINY)
+    q = cl_if * wu_gt / tot
+    p = s_r3 / tot
+    in_r2 = psi <= q
+    offload = in_r2 | (zeta != 0)
+    explored = (zeta != 0) & ~in_r2
+    local_pred = (psi <= q + p).astype(jnp.int32)
+    return (offload.astype(jnp.int32), explored.astype(jnp.int32), local_pred,
+            q.astype(jnp.float32), p.astype(jnp.float32))
+
+
+def _feedback_core(log_w, i_f, sent, explored, h_r, beta, eta, decay, g: int,
+                   *, eps: float, delta_fp: float, delta_fn: float):
+    """Per-axis Eq.-10 update with the other axis marginalized; (η, decay)
+    arrive as (S,) vectors. Returns the renormalized (S, 2, G) state."""
+    lv_l = log_w[:, 0, :].astype(jnp.float32)
+    lv_u = log_w[:, 1, :].astype(jnp.float32)
+    wl = _axis_weights(lv_l)
+    wu = _axis_weights(lv_u)
+    cl = jnp.cumsum(wl, axis=-1)
+    cu = jnp.cumsum(wu, axis=-1)
+    idx = _axis_idx(g)
+    i_b = i_f[:, None]
+    at = idx == i_b
+    cl_if = jnp.sum(jnp.where(at, cl, 0.0), axis=-1)
+    cu_if = jnp.sum(jnp.where(at, cu, 0.0), axis=-1)
+    sum_l = jnp.maximum(jnp.sum(wl, axis=-1), TINY)
+    sum_u = jnp.maximum(jnp.sum(wu, axis=-1), TINY)
+    p_l_le = cl_if / sum_l                         # P(l <= i_f)
+    p_u_gt = (sum_u - cu_if) / sum_u               # P(u >  i_f)
+    phi_fp = jnp.where(h_r == 0, delta_fp, 0.0).astype(jnp.float32)
+    phi_fn = jnp.where(h_r == 1, delta_fn, 0.0).astype(jnp.float32)
+    sent_f = (sent != 0).astype(jnp.float32)
+    expl_f = (explored != 0).astype(jnp.float32) * jnp.float32(1.0 / eps)
+    beta_f = beta.astype(jnp.float32)
+    # Lower axis: l <= i_f is ambiguous w.p. P(u > i_f), predict-1 otherwise;
+    # l > i_f is always predict-0 (r1) on the valid triangle.
+    amb_l = sent_f * beta_f * p_u_gt + expl_f * phi_fp * (1.0 - p_u_gt)
+    lt_l = jnp.where(idx <= i_b, amb_l[:, None], (expl_f * phi_fn)[:, None])
+    # Upper axis: u > i_f is ambiguous w.p. P(l <= i_f), predict-0 otherwise;
+    # u <= i_f is always predict-1 (r3).
+    amb_u = sent_f * beta_f * p_l_le + expl_f * phi_fn * (1.0 - p_l_le)
+    lt_u = jnp.where(idx > i_b, amb_u[:, None], (expl_f * phi_fp)[:, None])
+    new_l = decay[:, None] * lv_l - eta[:, None] * lt_l
+    new_u = decay[:, None] * lv_u - eta[:, None] * lt_u
+    new_l = new_l - jnp.max(new_l, axis=-1, keepdims=True)
+    new_u = new_u - jnp.max(new_u, axis=-1, keepdims=True)
+    return jnp.stack([new_l, new_u], axis=1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# jnp oracles (mirror ref.py's signatures exactly)
+# ---------------------------------------------------------------------------
+
+
+def decide_ref(log_w, i_f, psi, zeta):
+    """(offload, explored, local_pred, q, p) from an (S, 2, G) state."""
+    return _decide_core(log_w, i_f, psi, zeta, log_w.shape[-1])
+
+
+def feedback_ref(log_w, i_f, sent, explored, h_r, beta, eta, decay,
+                 *, eps: float, delta_fp: float, delta_fn: float):
+    s, _, g = log_w.shape
+    return _feedback_core(
+        log_w, i_f, sent, explored, h_r, beta,
+        _sched_vec(eta, s), _sched_vec(decay, s), g,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+
+
+def step_ref(log_w, i_f, psi, zeta, h_r, beta,
+             *, eta, eps: float, delta_fp: float, delta_fn: float, decay=1.0):
+    off, exp_, lp, q, p = decide_ref(log_w, i_f, psi, zeta)
+    new = feedback_ref(
+        log_w, i_f, off, exp_, h_r, beta, eta, decay,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+    return new, off, exp_, lp, q, p
+
+
+def rounds_ref(log_w, i_f, psi, zeta, h_r, beta,
+               *, eta, eps: float, delta_fp: float, delta_fn: float,
+               decay=1.0):
+    """Scan `step_ref` over the (S, TB) block, schedule held fixed."""
+
+    def body(lw, xs):
+        new, off, exp_, lp, q, p = step_ref(
+            lw, *xs, eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn,
+            decay=decay)
+        return new, (off, exp_, lp, q, p)
+
+    xs = tuple(a.T for a in (i_f, psi, zeta, h_r, beta))         # time-major
+    final, outs = jax.lax.scan(body, log_w.astype(jnp.float32), xs)
+    off, exp_, lp, q, p = (o.T for o in outs)                    # back to (S, TB)
+    return final, off, exp_, lp, q, p
+
+
+def step_counter_ref(log_w, i_f, rng, h_r, beta,
+                     *, eta, eps: float, delta_fp: float, delta_fn: float,
+                     decay=1.0):
+    psi, zeta = _counter_draws(rng, log_w.shape[0], 0, eps)
+    return step_ref(
+        log_w, i_f, psi, zeta, h_r, beta,
+        eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+
+
+def rounds_counter_ref(log_w, i_f, rng, h_r, beta,
+                       *, eta, eps: float, delta_fp: float, delta_fn: float,
+                       decay=1.0):
+    tb = i_f.shape[1]
+    seed, slot0, offset = rng[0], rng[1], rng[2]
+    sid = jnp.asarray(offset, jnp.int32) + jnp.arange(
+        log_w.shape[0], dtype=jnp.int32)
+    slots = jnp.asarray(slot0, jnp.int32) + jnp.arange(tb, dtype=jnp.int32)
+    psi, zeta = psi_zeta_from_counter(seed, sid[:, None], slots[None, :], eps)
+    return rounds_ref(
+        log_w, i_f, psi, zeta.astype(jnp.int32), h_r, beta,
+        eta=eta, eps=eps, delta_fp=delta_fp, delta_fn=delta_fn, decay=decay)
+
+
+def decide_counter_ref(log_w, i_f, rng, *, eps: float):
+    """Counter-mode decide oracle; appends the ψ draw like the dense one."""
+    psi, zeta = _counter_draws(rng, log_w.shape[0], 0, eps)
+    return decide_ref(log_w, i_f, psi, zeta) + (psi,)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels: the factored decide/feedback pair (+ counter twins)
+# ---------------------------------------------------------------------------
+
+
+def decide_kernel(log_w_ref, i_f_ref, psi_ref, zeta_ref,
+                  offload_ref, explored_ref, local_pred_ref, q_ref, p_ref,
+                  *, grid_side: int):
+    off, exp_, lp, q, p = _decide_core(
+        log_w_ref[...], i_f_ref[...], psi_ref[...], zeta_ref[...], grid_side)
+    offload_ref[...] = off
+    explored_ref[...] = exp_
+    local_pred_ref[...] = lp
+    q_ref[...] = q
+    p_ref[...] = p
+
+
+def decide_counter_kernel(log_w_ref, i_f_ref, rng_ref,
+                          offload_ref, explored_ref, local_pred_ref,
+                          q_ref, p_ref, psi_ref,
+                          *, grid_side: int, stream_block: int, eps: float):
+    seed0, seed1, slot, offset = _rng_words(rng_ref)
+    sid = _block_stream_ids(offset, stream_block)
+    psi, zeta = _counter_psi_zeta(seed0, seed1, sid, slot, eps)
+    off, exp_, lp, q, p = _decide_core(
+        log_w_ref[...], i_f_ref[...], psi, zeta, grid_side)
+    offload_ref[...] = off
+    explored_ref[...] = exp_
+    local_pred_ref[...] = lp
+    q_ref[...] = q
+    p_ref[...] = p
+    psi_ref[...] = psi.astype(jnp.float32)
+
+
+def feedback_kernel(log_w_ref, i_f_ref, sent_ref, explored_ref, h_r_ref,
+                    beta_ref, eta_ref, decay_ref, out_ref,
+                    *, grid_side: int, eps: float, delta_fp: float,
+                    delta_fn: float):
+    out_ref[...] = _feedback_core(
+        log_w_ref[...], i_f_ref[...], sent_ref[...], explored_ref[...],
+        h_r_ref[...], beta_ref[...], eta_ref[...], decay_ref[...], grid_side,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn)
+
+
+def _state_spec(sb: int, g: int):
+    return pl.BlockSpec((sb, 2, g), lambda i: (i, 0, 0))
+
+
+def decide_pallas(log_w, i_f, psi, zeta, *,
+                  stream_block: int = 8, interpret: bool = True):
+    """Factored serving decide: (offload, explored, local_pred, q, p)."""
+    s, _, g = log_w.shape
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    kern = functools.partial(decide_kernel, grid_side=g)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+    )
+    args = _pad_streams(pad, log_w, i_f, psi, zeta)
+    out = pl.pallas_call(
+        kern,
+        grid=(s_pad // sb,),
+        in_specs=[_state_spec(sb, g), vec(), vec(), vec()],
+        out_specs=(vec(), vec(), vec(), vec(), vec()),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:s] for o in out)
+
+
+def decide_counter_pallas(log_w, i_f, rng, *, eps: float,
+                          stream_block: int = 8, interpret: bool = True):
+    """Counter-mode factored decide; appends the in-kernel ψ draw."""
+    s, _, g = log_w.shape
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    kern = functools.partial(
+        decide_counter_kernel, grid_side=g, stream_block=sb, eps=eps)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+        jax.ShapeDtypeStruct((s_pad,), jnp.float32),
+    )
+    padded = _pad_streams(pad, log_w, i_f)
+    args = padded + (pack_counter_rng(rng),)
+    out = pl.pallas_call(
+        kern,
+        grid=(s_pad // sb,),
+        in_specs=[_state_spec(sb, g), vec(), _rng_spec()],
+        out_specs=(vec(), vec(), vec(), vec(), vec(), vec()),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:s] for o in out)
+
+
+def feedback_pallas(log_w, i_f, sent, explored, h_r, beta, eta, decay, *,
+                    eps: float, delta_fp: float, delta_fn: float,
+                    stream_block: int = 8, interpret: bool = True):
+    """Factored serving feedback: the per-axis Eq.-10 update only."""
+    s, _, g = log_w.shape
+    sb, s_pad, pad = _block_streams(s, stream_block)
+    kern = functools.partial(
+        feedback_kernel, grid_side=g, eps=eps,
+        delta_fp=delta_fp, delta_fn=delta_fn)
+    vec = lambda: pl.BlockSpec((sb,), lambda i: (i,))
+    args = _pad_streams(pad, log_w, i_f, sent, explored, h_r, beta,
+                        _sched_vec(eta, s), _sched_vec(decay, s))
+    out = pl.pallas_call(
+        kern,
+        grid=(s_pad // sb,),
+        in_specs=[_state_spec(sb, g),
+                  vec(), vec(), vec(), vec(), vec(), vec(), vec()],
+        out_specs=_state_spec(sb, g),
+        out_shape=jax.ShapeDtypeStruct((s_pad, 2, g), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out[:s]
+
+
+def step_pallas(log_w, i_f, psi, zeta, h_r, beta, eta, decay, *,
+                eps: float, delta_fp: float, delta_fn: float,
+                stream_block: int = 8, interpret: bool = True):
+    """One factored round = the decide kernel + the feedback kernel (the
+    state is O(S·G), so there is no fused-grid win to chase)."""
+    off, exp_, lp, q, p = decide_pallas(
+        log_w, i_f, psi, zeta, stream_block=stream_block, interpret=interpret)
+    new = feedback_pallas(
+        log_w, i_f, off, exp_, h_r, beta, eta, decay,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn,
+        stream_block=stream_block, interpret=interpret)
+    return new, off, exp_, lp, q, p
+
+
+def rounds_pallas(log_w, i_f, psi, zeta, h_r, beta, eta, decay, *,
+                  eps: float, delta_fp: float, delta_fn: float,
+                  stream_block: int = 8, interpret: bool = True):
+    """TB sequential factored rounds: scan of the kernel-pair step."""
+
+    def body(lw, xs):
+        new, off, exp_, lp, q, p = step_pallas(
+            lw, *xs, eta, decay, eps=eps, delta_fp=delta_fp,
+            delta_fn=delta_fn, stream_block=stream_block, interpret=interpret)
+        return new, (off, exp_, lp, q, p)
+
+    xs = tuple(a.T for a in (i_f, psi, zeta, h_r, beta))
+    final, outs = jax.lax.scan(body, log_w.astype(jnp.float32), xs)
+    off, exp_, lp, q, p = (o.T for o in outs)
+    return final, off, exp_, lp, q, p
+
+
+def step_counter_pallas(log_w, i_f, rng, h_r, beta, eta, decay, *,
+                        eps: float, delta_fp: float, delta_fn: float,
+                        stream_block: int = 8, interpret: bool = True):
+    """Counter-mode factored round: in-kernel draws in decide, then the
+    feedback kernel on the resulting masks."""
+    off, exp_, lp, q, p, _psi = decide_counter_pallas(
+        log_w, i_f, rng, eps=eps, stream_block=stream_block,
+        interpret=interpret)
+    new = feedback_pallas(
+        log_w, i_f, off, exp_, h_r, beta, eta, decay,
+        eps=eps, delta_fp=delta_fp, delta_fn=delta_fn,
+        stream_block=stream_block, interpret=interpret)
+    return new, off, exp_, lp, q, p
+
+
+def rounds_counter_pallas(log_w, i_f, rng, h_r, beta, eta, decay, *,
+                          eps: float, delta_fp: float, delta_fn: float,
+                          stream_block: int = 8, interpret: bool = True):
+    """TB counter-mode rounds: round t draws at slot₀ + t, never holding
+    more than the (S,) working set of one slot's randomness."""
+    seed, slot0, offset = rng[0], rng[1], rng[2]
+
+    def body(lw, xs):
+        t, i_f_t, h_r_t, beta_t = xs
+        rng_t = (seed, jnp.asarray(slot0, jnp.int32) + t, offset)
+        new, off, exp_, lp, q, p = step_counter_pallas(
+            lw, i_f_t, rng_t, h_r_t, beta_t, eta, decay,
+            eps=eps, delta_fp=delta_fp, delta_fn=delta_fn,
+            stream_block=stream_block, interpret=interpret)
+        return new, (off, exp_, lp, q, p)
+
+    tb = i_f.shape[1]
+    xs = (jnp.arange(tb, dtype=jnp.int32),
+          i_f.T, h_r.T, beta.T)
+    final, outs = jax.lax.scan(body, log_w.astype(jnp.float32), xs)
+    off, exp_, lp, q, p = (o.T for o in outs)
+    return final, off, exp_, lp, q, p

@@ -1,27 +1,48 @@
-"""jit'd public wrappers for the fused hedge kernels: the monolithic
+"""Public wrappers for the fused hedge kernels: the monolithic
 single-/multi-round steps and the serving decide/feedback split.
 
-Every op takes the (η, decay) schedule as optional per-stream (S,) arrays
-(None → the HIConfig scalars, broadcast — bit-identical to the fixed paper
-schedule) and a `stream_block` override (None → consult the persistent
-autotune cache, `kernels.hedge.autotune`, falling back to its static
-default).
+Every op routes on a single frozen :class:`repro.core.ExecSpec` passed
+as ``spec=`` — learner choice, kernel-vs-jnp, interpret mode, stream
+block, randomness mode all live there. The old loose kwargs
+(``use_kernel``, ``interpret``, ``stream_block``, ``randomness``) keep
+working as deprecated shims that emit a ``DeprecationWarning`` and map
+onto the spec; since the shim resolution happens in a plain-Python
+wrapper *outside* the jit boundary, the warning fires per call while
+the jitted impl still sees one hashable static spec.
 
-The randomness-consuming ops (step/rounds/decide) additionally take
-`randomness="pre_draw" | "counter"`: pre_draw (default, the golden paper
-path) ships (ψ, ζ) as operands; counter mode takes an `rng`
+``spec.use_kernel=None`` auto-selects (the Pallas kernel on TPU, the
+jnp oracle elsewhere — unless ``interpret=True`` explicitly asks for
+the interpret-mode kernel). ``spec.learner`` picks the weight
+structure: ``"dense"`` dispatches to the paper's (G, G) kernels in
+`ref.py`/`kernel.py` bit-identically; any other name resolves through
+`repro.core.learners` to a module exporting the same op protocol (see
+:class:`LearnerFns`; `factored.py` is the (2, G) per-threshold
+instance).
+
+Every op takes the (η, decay) schedule as optional per-stream (S,)
+arrays (None → the HIConfig scalars, broadcast — bit-identical to the
+fixed paper schedule); ``spec.stream_block=None`` consults the
+persistent autotune cache (`kernels.hedge.autotune`).
+
+The randomness-consuming ops (step/rounds/decide) honor
+``spec.randomness``: ``"pre_draw"`` (default, the golden paper path)
+ships (ψ, ζ) as operands; ``"counter"`` takes an `rng`
 (seed, slot, stream_offset) position instead and regenerates the draws
-in-kernel via the threefry counter contract (`repro.core.counter`) — zero
-randomness tensors in memory. The autotune cache is consulted per mode.
+in-kernel via the threefry counter contract (`repro.core.counter`) —
+zero randomness tensors in memory, and the draws are position-keyed so
+they are identical across learners.
 """
 from __future__ import annotations
 
 import functools
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.counter import check_randomness_mode
+from repro.core.execspec import UNSET, ExecSpec, resolve_spec
+from repro.core.learners import get_learner
 from repro.core.types import HIConfig
 from repro.kernels.hedge import autotune
 from repro.kernels.hedge.kernel import (
@@ -53,6 +74,55 @@ def kernel_available() -> bool:
     return jax.default_backend() == "tpu"
 
 
+class LearnerFns(NamedTuple):
+    """The op protocol a learner's kernel module exports.
+
+    The dense entries are assembled from `ref.py`/`kernel.py`; any other
+    registered learner's ``ops()`` module must export exactly these
+    names with the same signatures (`factored.py` is the model)."""
+
+    step_ref: Callable
+    rounds_ref: Callable
+    decide_ref: Callable
+    feedback_ref: Callable
+    step_counter_ref: Callable
+    rounds_counter_ref: Callable
+    decide_counter_ref: Callable
+    step_pallas: Callable
+    rounds_pallas: Callable
+    decide_pallas: Callable
+    feedback_pallas: Callable
+    step_counter_pallas: Callable
+    rounds_counter_pallas: Callable
+    decide_counter_pallas: Callable
+
+
+_DENSE_FNS = LearnerFns(
+    step_ref=hedge_step_ref,
+    rounds_ref=hedge_rounds_ref,
+    decide_ref=hedge_decide_ref,
+    feedback_ref=hedge_feedback_ref,
+    step_counter_ref=hedge_step_counter_ref,
+    rounds_counter_ref=hedge_rounds_counter_ref,
+    decide_counter_ref=hedge_decide_counter_ref,
+    step_pallas=hedge_step_pallas,
+    rounds_pallas=hedge_rounds_pallas,
+    decide_pallas=hedge_decide_pallas,
+    feedback_pallas=hedge_feedback_pallas,
+    step_counter_pallas=hedge_step_counter_pallas,
+    rounds_counter_pallas=hedge_rounds_counter_pallas,
+    decide_counter_pallas=hedge_decide_counter_pallas,
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _learner_fns(name: str) -> LearnerFns:
+    if name == "dense":
+        return _DENSE_FNS
+    mod = get_learner(name).ops()
+    return LearnerFns(**{f: getattr(mod, f) for f in LearnerFns._fields})
+
+
 def _loss_kw(cfg: HIConfig) -> dict:
     return dict(eps=cfg.eps, delta_fp=cfg.delta_fp, delta_fn=cfg.delta_fn)
 
@@ -79,6 +149,18 @@ def _stream_block(stream_block, g: int, s: int,
     return autotune.best_stream_block(g, s, randomness=randomness)
 
 
+def _use_kernel(spec: ExecSpec) -> bool:
+    """Resolve spec.use_kernel=None: kernel where it compiles (TPU), or
+    where interpret mode was explicitly requested; jnp oracle elsewhere."""
+    if spec.use_kernel is None:
+        return kernel_available() or spec.interpret is True
+    return bool(spec.use_kernel)
+
+
+def _interpret(spec: ExecSpec) -> bool:
+    return _interpret_default() if spec.interpret is None else spec.interpret
+
+
 def _check_randomness(randomness: str, psi, zeta, rng) -> None:
     """Trace-time validation of the (mode, operands) pairing."""
     check_randomness_mode(randomness)
@@ -93,122 +175,169 @@ def _check_randomness(randomness: str, psi, zeta, rng) -> None:
         raise ValueError("rng is only meaningful with randomness='counter'")
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
-                                             "stream_block", "randomness"))
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _fleet_hedge_step(cfg, log_w, f, psi, zeta, h_r, beta, eta, decay, rng,
+                      *, spec: ExecSpec):
+    _check_randomness(spec.randomness, psi, zeta, rng)
+    fns = _learner_fns(spec.learner)
+    g = cfg.grid
+    i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
+    eta, decay = _sched(cfg, eta, decay)
+    sb = _stream_block(spec.stream_block, g, log_w.shape[0], spec.randomness)
+    if _use_kernel(spec):
+        interp = _interpret(spec)
+        if spec.randomness == "counter":
+            return fns.step_counter_pallas(
+                log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
+                beta.astype(jnp.float32), eta, decay, interpret=interp,
+                stream_block=sb, **_loss_kw(cfg))
+        return fns.step_pallas(
+            log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+            zeta.astype(jnp.int32), h_r.astype(jnp.int32),
+            beta.astype(jnp.float32), eta, decay, interpret=interp,
+            stream_block=sb, **_loss_kw(cfg))
+    if spec.randomness == "counter":
+        return fns.step_counter_ref(
+            log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
+            beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
+    return fns.step_ref(
+        log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+        zeta.astype(jnp.int32), h_r.astype(jnp.int32),
+        beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
+
+
 def fleet_hedge_step(
     cfg: HIConfig,
-    log_w: jnp.ndarray,      # (S, G, G)
+    log_w: jnp.ndarray,      # (S, G, G) dense / learner state pytree leaf
     f: jnp.ndarray,          # (S,) confidences in [0, 1]
     psi: jnp.ndarray,        # (S,) uniforms; None in counter mode
     zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws; None in counter mode
     h_r: jnp.ndarray,        # (S,) remote labels
     beta: jnp.ndarray,       # (S,) offload costs
-    use_kernel: bool = True,
-    interpret: bool = None,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
     eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
     decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
-    stream_block: int = None,    # None → autotune cache default
-    randomness: str = "pre_draw",
-    rng=None,                    # (seed, slot, stream_offset) — counter mode
+    stream_block=UNSET,      # deprecated — pass spec=ExecSpec(...)
+    randomness=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    rng=None,                # (seed, slot, stream_offset) — counter mode
+    spec: ExecSpec = None,
 ):
     """One H2T2 round for a whole fleet of streams.
 
-    With `randomness="counter"` the (ψ, ζ) draws are regenerated from the
-    `rng` position instead of passed in — no randomness operands at all.
+    With ``spec.randomness="counter"`` the (ψ, ζ) draws are regenerated
+    from the `rng` position instead of passed in — no randomness operands
+    at all.
     """
-    _check_randomness(randomness, psi, zeta, rng)
+    spec = resolve_spec(spec, caller="fleet_hedge_step",
+                        use_kernel=use_kernel, interpret=interpret,
+                        stream_block=stream_block, randomness=randomness)
+    return _fleet_hedge_step(cfg, log_w, f, psi, zeta, h_r, beta, eta, decay,
+                             rng, spec=spec)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _fleet_hedge_rounds(cfg, log_w, f, psi, zeta, h_r, beta, eta, decay, rng,
+                        *, spec: ExecSpec):
+    _check_randomness(spec.randomness, psi, zeta, rng)
+    fns = _learner_fns(spec.learner)
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
     eta, decay = _sched(cfg, eta, decay)
-    sb = _stream_block(stream_block, g, log_w.shape[0], randomness)
-    if use_kernel:
-        interp = _interpret_default() if interpret is None else interpret
-        if randomness == "counter":
-            return hedge_step_counter_pallas(
+    sb = _stream_block(spec.stream_block, g, log_w.shape[0], spec.randomness)
+    if _use_kernel(spec):
+        interp = _interpret(spec)
+        if spec.randomness == "counter":
+            return fns.rounds_counter_pallas(
                 log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
                 beta.astype(jnp.float32), eta, decay, interpret=interp,
                 stream_block=sb, **_loss_kw(cfg))
-        return hedge_step_pallas(
+        return fns.rounds_pallas(
             log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
             zeta.astype(jnp.int32), h_r.astype(jnp.int32),
             beta.astype(jnp.float32), eta, decay, interpret=interp,
             stream_block=sb, **_loss_kw(cfg))
-    if randomness == "counter":
-        return hedge_step_counter_ref(
+    if spec.randomness == "counter":
+        return fns.rounds_counter_ref(
             log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
             beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
-    return hedge_step_ref(
+    return fns.rounds_ref(
         log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
         zeta.astype(jnp.int32), h_r.astype(jnp.int32),
         beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
-                                             "stream_block", "randomness"))
 def fleet_hedge_rounds(
     cfg: HIConfig,
-    log_w: jnp.ndarray,      # (S, G, G)
+    log_w: jnp.ndarray,      # (S, G, G) dense / learner state pytree leaf
     f: jnp.ndarray,          # (S, TB) confidences in [0, 1]
     psi: jnp.ndarray,        # (S, TB) uniforms; None in counter mode
     zeta: jnp.ndarray,       # (S, TB) bernoulli(ε); None in counter mode
     h_r: jnp.ndarray,        # (S, TB) remote labels
     beta: jnp.ndarray,       # (S, TB) offload costs
-    use_kernel: bool = True,
-    interpret: bool = None,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
     eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
     decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
-    stream_block: int = None,    # None → autotune cache default
-    randomness: str = "pre_draw",
-    rng=None,                    # (seed, slot₀, stream_offset) — counter mode
+    stream_block=UNSET,      # deprecated — pass spec=ExecSpec(...)
+    randomness=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    rng=None,                # (seed, slot₀, stream_offset) — counter mode
+    spec: ExecSpec = None,
 ):
     """TB sequential H2T2 rounds for a whole fleet in one launch.
 
     Step-for-step identical to TB chained `fleet_hedge_step` calls (with the
-    schedule held fixed across the block); on TPU the expert grids stay in
+    schedule held fixed across the block); on TPU the expert state stays in
     VMEM for the whole time block. Counter mode draws round t of the block
     at slot₀ + t — the chain reproduces any other chunking bit-for-bit and
     ships zero randomness operands.
     """
-    _check_randomness(randomness, psi, zeta, rng)
+    spec = resolve_spec(spec, caller="fleet_hedge_rounds",
+                        use_kernel=use_kernel, interpret=interpret,
+                        stream_block=stream_block, randomness=randomness)
+    return _fleet_hedge_rounds(cfg, log_w, f, psi, zeta, h_r, beta, eta,
+                               decay, rng, spec=spec)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _fleet_hedge_decide(cfg, log_w, f, psi, zeta, rng, *, spec: ExecSpec):
+    _check_randomness(spec.randomness, psi, zeta, rng)
+    fns = _learner_fns(spec.learner)
     g = cfg.grid
     i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
-    eta, decay = _sched(cfg, eta, decay)
-    sb = _stream_block(stream_block, g, log_w.shape[0], randomness)
-    if use_kernel:
-        interp = _interpret_default() if interpret is None else interpret
-        if randomness == "counter":
-            return hedge_rounds_counter_pallas(
-                log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
-                beta.astype(jnp.float32), eta, decay, interpret=interp,
-                stream_block=sb, **_loss_kw(cfg))
-        return hedge_rounds_pallas(
+    sb = _stream_block(spec.stream_block, g, log_w.shape[0], spec.randomness)
+    if _use_kernel(spec):
+        interp = _interpret(spec)
+        if spec.randomness == "counter":
+            out = fns.decide_counter_pallas(
+                log_w.astype(jnp.float32), i_f, rng, eps=cfg.eps,
+                interpret=interp, stream_block=sb)
+        else:
+            out = fns.decide_pallas(
+                log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
+                zeta.astype(jnp.int32), interpret=interp, stream_block=sb)
+    elif spec.randomness == "counter":
+        out = fns.decide_counter_ref(
+            log_w.astype(jnp.float32), i_f, rng, eps=cfg.eps)
+    else:
+        out = fns.decide_ref(
             log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
-            zeta.astype(jnp.int32), h_r.astype(jnp.int32),
-            beta.astype(jnp.float32), eta, decay, interpret=interp,
-            stream_block=sb, **_loss_kw(cfg))
-    if randomness == "counter":
-        return hedge_rounds_counter_ref(
-            log_w.astype(jnp.float32), i_f, rng, h_r.astype(jnp.int32),
-            beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
-    return hedge_rounds_ref(
-        log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
-        zeta.astype(jnp.int32), h_r.astype(jnp.int32),
-        beta.astype(jnp.float32), eta=eta, decay=decay, **_loss_kw(cfg))
+            zeta.astype(jnp.int32))
+    return (i_f,) + tuple(out)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
-                                             "stream_block", "randomness"))
 def fleet_hedge_decide(
     cfg: HIConfig,
-    log_w: jnp.ndarray,      # (S, G, G)
+    log_w: jnp.ndarray,      # (S, G, G) dense / learner state pytree leaf
     f: jnp.ndarray,          # (S,) confidences in [0, 1]
     psi: jnp.ndarray,        # (S,) uniforms; None in counter mode
     zeta: jnp.ndarray,       # (S,) bernoulli(ε) draws; None in counter mode
-    use_kernel: bool = True,
-    interpret: bool = None,
-    stream_block: int = None,    # None → autotune cache default
-    randomness: str = "pre_draw",
-    rng=None,                    # (seed, slot, stream_offset) — counter mode
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
+    stream_block=UNSET,      # deprecated — pass spec=ExecSpec(...)
+    randomness=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    rng=None,                # (seed, slot, stream_offset) — counter mode
+    spec: ExecSpec = None,
 ):
     """Serving phase 1 for the fleet: quantize + region masses + decisions.
 
@@ -219,65 +348,57 @@ def fleet_hedge_decide(
     write: feedback waits for the (delayed, possibly capacity-dropped)
     remote labels in `fleet_hedge_feedback`.
     """
-    _check_randomness(randomness, psi, zeta, rng)
+    spec = resolve_spec(spec, caller="fleet_hedge_decide",
+                        use_kernel=use_kernel, interpret=interpret,
+                        stream_block=stream_block, randomness=randomness)
+    return _fleet_hedge_decide(cfg, log_w, f, psi, zeta, rng, spec=spec)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _fleet_hedge_feedback(cfg, log_w, i_f, sent, explored, h_r, beta, eta,
+                          decay, *, spec: ExecSpec):
+    fns = _learner_fns(spec.learner)
     g = cfg.grid
-    i_f = jnp.clip((f * g).astype(jnp.int32), 0, g - 1)
-    sb = _stream_block(stream_block, g, log_w.shape[0], randomness)
-    if use_kernel:
-        interp = _interpret_default() if interpret is None else interpret
-        if randomness == "counter":
-            out = hedge_decide_counter_pallas(
-                log_w.astype(jnp.float32), i_f, rng, eps=cfg.eps,
-                interpret=interp, stream_block=sb)
-        else:
-            out = hedge_decide_pallas(
-                log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
-                zeta.astype(jnp.int32), interpret=interp, stream_block=sb)
-    elif randomness == "counter":
-        out = hedge_decide_counter_ref(
-            log_w.astype(jnp.float32), i_f, rng, eps=cfg.eps)
-    else:
-        out = hedge_decide_ref(
-            log_w.astype(jnp.float32), i_f, psi.astype(jnp.float32),
-            zeta.astype(jnp.int32))
-    return (i_f,) + tuple(out)
+    eta, decay = _sched(cfg, eta, decay)
+    if _use_kernel(spec):
+        return fns.feedback_pallas(
+            log_w.astype(jnp.float32), i_f.astype(jnp.int32),
+            sent.astype(jnp.int32), explored.astype(jnp.int32),
+            h_r.astype(jnp.int32), beta.astype(jnp.float32), eta, decay,
+            interpret=_interpret(spec),
+            stream_block=_stream_block(
+                spec.stream_block, g, log_w.shape[0]),
+            **_loss_kw(cfg))
+    return fns.feedback_ref(
+        log_w.astype(jnp.float32), i_f.astype(jnp.int32),
+        sent.astype(jnp.int32), explored.astype(jnp.int32),
+        h_r.astype(jnp.int32), beta.astype(jnp.float32), eta, decay,
+        **_loss_kw(cfg))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "interpret",
-                                             "stream_block"))
 def fleet_hedge_feedback(
     cfg: HIConfig,
-    log_w: jnp.ndarray,      # (S, G, G)
+    log_w: jnp.ndarray,      # (S, G, G) dense / learner state pytree leaf
     i_f: jnp.ndarray,        # (S,) decision-time quantized confidence
     sent: jnp.ndarray,       # (S,) offloads that reached the RDL
     explored: jnp.ndarray,   # (S,) exploration flag, already ∧ sent
     h_r: jnp.ndarray,        # (S,) remote labels
     beta: jnp.ndarray,       # (S,) decision-time offload costs
-    use_kernel: bool = True,
-    interpret: bool = None,
+    use_kernel=UNSET,        # deprecated — pass spec=ExecSpec(...)
+    interpret=UNSET,         # deprecated — pass spec=ExecSpec(...)
     eta: jnp.ndarray = None,     # (S,) per-stream η; None → cfg.eta
     decay: jnp.ndarray = None,   # (S,) per-stream decay; None → cfg.decay
-    stream_block: int = None,    # None → autotune cache default
+    stream_block=UNSET,      # deprecated — pass spec=ExecSpec(...)
+    spec: ExecSpec = None,
 ):
     """Serving phase 2 for the fleet: the Eq.-10 weight update only.
 
     The cheap (S,) loss/prediction accounting lives in
-    `core.policy.fleet_feedback`, which routes its (S, G, G) weight traffic
-    here when `use_kernel` resolves true.
+    `core.policy.fleet_feedback`, which routes its weight traffic here
+    when the spec's kernel routing resolves true.
     """
-    g = cfg.grid
-    eta, decay = _sched(cfg, eta, decay)
-    if use_kernel:
-        interp = _interpret_default() if interpret is None else interpret
-        return hedge_feedback_pallas(
-            log_w.astype(jnp.float32), i_f.astype(jnp.int32),
-            sent.astype(jnp.int32), explored.astype(jnp.int32),
-            h_r.astype(jnp.int32), beta.astype(jnp.float32), eta, decay,
-            interpret=interp,
-            stream_block=_stream_block(stream_block, g, log_w.shape[0]),
-            **_loss_kw(cfg))
-    return hedge_feedback_ref(
-        log_w.astype(jnp.float32), i_f.astype(jnp.int32),
-        sent.astype(jnp.int32), explored.astype(jnp.int32),
-        h_r.astype(jnp.int32), beta.astype(jnp.float32), eta, decay,
-        **_loss_kw(cfg))
+    spec = resolve_spec(spec, caller="fleet_hedge_feedback",
+                        use_kernel=use_kernel, interpret=interpret,
+                        stream_block=stream_block)
+    return _fleet_hedge_feedback(cfg, log_w, i_f, sent, explored, h_r, beta,
+                                 eta, decay, spec=spec)

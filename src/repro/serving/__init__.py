@@ -37,6 +37,7 @@ from repro.serving.policy_engine import (
     ShardedEngine,
     available_engines,
     get_engine,
+    list_engines,
     register_engine,
 )
 
@@ -45,6 +46,6 @@ __all__ = [
     "Engine", "EngineConfig", "FusedEngine", "HIServer", "HIServerConfig",
     "HIServerState", "OffloadBatch", "PendingFeedback", "PolicyEngine",
     "ReferenceEngine", "ShardedEngine", "SlotResult", "available_engines",
-    "classifier_fn", "compact_offloads", "get_engine", "register_engine",
-    "rotated_compact", "scatter_results",
+    "classifier_fn", "compact_offloads", "get_engine", "list_engines",
+    "register_engine", "rotated_compact", "scatter_results",
 ]

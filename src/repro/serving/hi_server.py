@@ -56,6 +56,7 @@ import jax.numpy as jnp
 
 from repro.core import FleetDecision, HIConfig
 from repro.core.counter import CounterRNG, check_randomness_mode, seed_from_key
+from repro.core.execspec import ExecSpec
 from repro.core.policy import (
     H2T2State,
     classification_cost,
@@ -78,6 +79,12 @@ class HIServerConfig:
     n_streams: int = 8
     hi: HIConfig = HIConfig()
     engine: str = "fused"              # PolicyEngine registry name
+    # Preferred: one ExecSpec carrying all execution knobs (learner,
+    # use_kernel, interpret, randomness, stream_block, time_block). When
+    # given, the legacy mirror fields below are synced from it; when None,
+    # the spec is assembled from the legacy fields (which default to the
+    # pre-ExecSpec behavior).
+    spec: Optional[ExecSpec] = None
     interpret: Optional[bool] = None   # kernel interpret override
     use_kernel: Optional[bool] = None  # kernel routing override (None = auto)
     # Policy randomness: "pre_draw" (per-stream slot keys, the golden paper
@@ -93,7 +100,18 @@ class HIServerConfig:
     time_block: Optional[int] = None
 
     def __post_init__(self):
-        check_randomness_mode(self.randomness)
+        if self.spec is None:
+            check_randomness_mode(self.randomness)
+            object.__setattr__(self, "spec", ExecSpec(
+                use_kernel=self.use_kernel, interpret=self.interpret,
+                randomness=self.randomness, time_block=self.time_block))
+        else:
+            # Keep the legacy mirror fields readable (serve_slot and the
+            # serving paths still consult cfg.randomness / cfg.time_block).
+            object.__setattr__(self, "interpret", self.spec.interpret)
+            object.__setattr__(self, "use_kernel", self.spec.use_kernel)
+            object.__setattr__(self, "randomness", self.spec.randomness)
+            object.__setattr__(self, "time_block", self.spec.time_block)
         if self.offload_capacity is not None and self.offload_capacity < 1:
             raise ValueError(
                 f"offload_capacity must be ≥ 1 (got {self.offload_capacity}); "
@@ -193,9 +211,7 @@ class HIServer:
         self.cfg = cfg
         self.ldl = ldl
         self.rdl = rdl
-        self.engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret,
-                                 use_kernel=cfg.use_kernel,
-                                 randomness=cfg.randomness)
+        self.engine = get_engine(cfg.engine, cfg.hi, spec=cfg.spec)
         self._serve_block = None    # jitted source-serving scan, built lazily
         self._serve_rounds = None   # jitted multi-round block fn, built lazily
 
@@ -367,7 +383,7 @@ class HIServer:
             return self._serve_rounds
         hi, tb = self.cfg.hi, self.cfg.time_block
         eng = self.engine
-        uk, interp = eng._kernel_opts()
+        espec = eng._exec_spec()
 
         @jax.jit
         def serve_rounds_block(pol, t0, acc, key, batch):
@@ -386,8 +402,7 @@ class HIServer:
                                      slot=jnp.asarray(t, jnp.int32),
                                      stream_offset=jnp.zeros((), jnp.int32))
                     st, out = fleet_rounds_fused(
-                        hi, st, f, None, None, hr, beta,
-                        use_kernel=uk, interpret=interp, rng=rng)
+                        hi, st, f, None, None, hr, beta, rng=rng, spec=espec)
                 else:
                     ts = t + jnp.arange(tb, dtype=jnp.int32)
                     keys = jax.vmap(
@@ -396,8 +411,7 @@ class HIServer:
                         lambda k: draw_psi_zeta(k, hi.eps))(keys)  # (tb, S)
                     tp = lambda a: jnp.swapaxes(a, 0, 1)
                     st, out = fleet_rounds_fused(
-                        hi, st, f, tp(psi), tp(zeta), hr, beta,
-                        use_kernel=uk, interpret=interp)
+                        hi, st, f, tp(psi), tp(zeta), hr, beta, spec=espec)
                 # Serving accounting: β where offloaded (nothing can be
                 # dropped on this path), remote label as the prediction.
                 obs = jnp.where(out.offload, beta, 0.0)

@@ -60,7 +60,7 @@ policy) without touching any caller.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Type
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,11 +68,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.counter import (
-    CounterRNG,
-    check_randomness_mode,
-    seed_from_key,
-)
+from repro.core.counter import CounterRNG, seed_from_key
+from repro.core.execspec import UNSET, ExecSpec, resolve_spec
 from repro.core.policy import (
     FleetDecision,
     H2T2State,
@@ -91,11 +88,21 @@ from repro.core.policy import (
     run_fleet_fused,
     run_fleet_source,
 )
+from repro.core.registry import Registry
 from repro.core.shift import ShiftConfig, ShiftState, shift_init, shift_update
 from repro.core.types import HIConfig
 from repro.data.scenarios import ScenarioSource
 
-_REGISTRY: Dict[str, Type["PolicyEngine"]] = {}
+ENGINES: Registry = Registry("policy engine")
+
+# Pre-registry-consolidation alias (same underlying dict); existing code
+# mutates it for test cleanup.
+_REGISTRY = ENGINES._entries
+
+# ExecSpec fields `get_engine` translates out of a legacy opts dict before
+# handing the remainder (devices, shift, ...) to the engine constructor.
+_EXEC_OPTS = ("interpret", "use_kernel", "randomness", "time_block",
+              "stream_block", "learner")
 
 
 def register_engine(name: str):
@@ -103,25 +110,34 @@ def register_engine(name: str):
 
     def deco(cls):
         cls.name = name
-        _REGISTRY[name] = cls
+        ENGINES.add(name, cls)
         return cls
 
     return deco
 
 
 def available_engines() -> Tuple[str, ...]:
-    return tuple(_REGISTRY)
+    return ENGINES.names()
+
+
+def list_engines() -> Tuple[Tuple[str, str], ...]:
+    """(name, one-line description) pairs for `benchmarks.run --list`."""
+    return ENGINES.describe()
 
 
 def get_engine(name: str, hi_cfg: HIConfig, **opts) -> "PolicyEngine":
-    """Resolve a registered engine name to a constructed instance."""
-    try:
-        cls = _REGISTRY[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown policy engine {name!r}; expected one of "
-            f"{available_engines()}") from None
-    return cls(hi_cfg, **opts)
+    """Resolve a registered engine name to a constructed instance.
+
+    Execution knobs ride in `opts` as `spec=ExecSpec(...)`; the loose
+    spellings (`use_kernel=...`, `learner=...`, ...) still work but are
+    deprecated — they are folded onto the spec here, with the warning
+    attributed to the caller of `get_engine`.
+    """
+    cls = ENGINES.lookup(name)
+    spec = opts.pop("spec", None)
+    legacy = {k: opts.pop(k) for k in _EXEC_OPTS if k in opts}
+    spec = resolve_spec(spec, caller="get_engine", stacklevel=3, **legacy)
+    return cls(hi_cfg, spec=spec, **opts)
 
 
 class PolicyEngine:
@@ -140,38 +156,51 @@ class PolicyEngine:
     name = "abstract"
 
     def __init__(self, hi_cfg: HIConfig,
-                 interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None,
-                 randomness: str = "pre_draw"):
-        # `interpret`/`use_kernel`/`randomness` are accepted uniformly so the
-        # registry can construct any engine from one opts dict.
-        check_randomness_mode(randomness)
+                 interpret=UNSET,
+                 use_kernel=UNSET,
+                 randomness=UNSET,
+                 *, time_block=UNSET,
+                 spec: Optional[ExecSpec] = None):
+        # Execution knobs arrive as one `spec=ExecSpec(...)`; the loose
+        # kwargs are deprecated shims folded onto it here (warning
+        # attributed to the engine's caller, 2 frames above the subclass
+        # __init__ that forwarded them).
+        spec = resolve_spec(
+            spec, caller=type(self).__name__, stacklevel=4,
+            interpret=interpret, use_kernel=use_kernel,
+            randomness=randomness, time_block=time_block)
         self.hi = hi_cfg
-        self.interpret = interpret
-        self.use_kernel = use_kernel
-        self.randomness = randomness
-        uk, interp = self._kernel_opts()
+        self.spec = spec
+        # Mirror attributes: pre-ExecSpec call sites read these directly.
+        self.interpret = spec.interpret
+        self.use_kernel = spec.use_kernel
+        self.randomness = spec.randomness
+        espec = self._exec_spec()
 
-        if randomness == "counter":
+        if spec.randomness == "counter":
             def decide(st, fs, rng):
                 return fleet_decide(hi_cfg, st, fs, None, None, rng=rng,
-                                    use_kernel=uk, interpret=interp)
+                                    spec=espec)
         else:
             def decide(st, fs, keys):
                 psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
-                return fleet_decide(hi_cfg, st, fs, psi, zeta,
-                                    use_kernel=uk, interpret=interp)
+                return fleet_decide(hi_cfg, st, fs, psi, zeta, spec=espec)
 
         self._decide = jax.jit(decide)
         self._feedback = jax.jit(
             lambda st, dec, hrs, betas, sent:
-                fleet_feedback(hi_cfg, st, dec, hrs, betas, sent,
-                               use_kernel=uk, interpret=interp))
+                fleet_feedback(hi_cfg, st, dec, hrs, betas, sent, spec=espec))
+
+    def _exec_spec(self) -> ExecSpec:
+        """The ExecSpec this engine's phases execute under (the reference
+        engine pins use_kernel=False here)."""
+        return self.spec
 
     def _kernel_opts(self):
         """(use_kernel, interpret) this engine's decide/feedback split and
         fused steps resolve against (`core.policy._resolve_use_kernel`)."""
-        return self.use_kernel, self.interpret
+        espec = self._exec_spec()
+        return espec.use_kernel, espec.interpret
 
     def _counter_rng(self, key, slot) -> CounterRNG:
         """Counter position for one slot: `key` is the run key (typed, raw
@@ -188,7 +217,7 @@ class PolicyEngine:
 
     def init(self, n_streams: int) -> H2T2State:
         """Fresh fleet state: every leaf batched over (n_streams,)."""
-        return fleet_init(self.hi, n_streams)
+        return fleet_init(self.hi, n_streams, learner=self.spec.learner)
 
     def step(self, state: H2T2State, fs, betas, hrs, keys, slot=None
              ) -> Tuple[H2T2State, StepOutput]:
@@ -238,8 +267,7 @@ class PolicyEngine:
         source + key + mode.
         """
         return run_fleet_source(self.hi, source, key, state=state,
-                                step_fn=self._step,
-                                randomness=self.randomness)
+                                step_fn=self._step, spec=self._exec_spec())
 
     def decide(self, state: H2T2State, fs, keys, *, slot=None
                ) -> FleetDecision:
@@ -267,18 +295,22 @@ class ReferenceEngine(PolicyEngine):
 
     Every phase (step, run, and the serving decide/feedback split) stays on
     the jnp math regardless of backend; `use_kernel`/`interpret` are
-    accepted for registry uniformity and ignored.
+    accepted for registry uniformity and ignored. Non-dense learners run
+    the same jnp oracles through the fleet ops (there is no per-stream
+    `h2t2_step` for them), still pinned to `use_kernel=False`.
     """
 
-    def _kernel_opts(self):
-        return False, None
+    def _exec_spec(self) -> ExecSpec:
+        return self.spec.evolve(use_kernel=False, interpret=None)
 
     def __init__(self, hi_cfg: HIConfig,
-                 interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None,
-                 randomness: str = "pre_draw"):
-        super().__init__(hi_cfg, interpret, use_kernel, randomness)
-        if randomness == "counter":
+                 interpret=UNSET,
+                 use_kernel=UNSET,
+                 randomness=UNSET,
+                 *, spec: Optional[ExecSpec] = None):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness, spec=spec)
+        espec = self._exec_spec()
+        if espec.randomness == "counter":
             # decide + immediate feedback on the jnp math — the counter
             # analogue of `h2t2_step` (same composition the adaptive engine
             # runs, pinned to use_kernel=False).
@@ -286,9 +318,16 @@ class ReferenceEngine(PolicyEngine):
                 rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
                                  stream_offset=jnp.zeros((), jnp.int32))
                 dec = fleet_decide(hi_cfg, st, f, None, None, rng=rng,
-                                   use_kernel=False)
+                                   spec=espec)
                 return fleet_feedback(hi_cfg, st, dec, hr, b, dec.offload,
-                                      use_kernel=False)
+                                      spec=espec)
+
+            self._step = jax.jit(step)
+        elif espec.learner != "dense":
+            def step(st, f, b, hr, k, t):
+                psi, zeta = draw_psi_zeta(k, hi_cfg.eps)
+                return fleet_step_fused(hi_cfg, st, f, psi, zeta, hr, b,
+                                        spec=espec)
 
             self._step = jax.jit(step)
         else:
@@ -298,12 +337,15 @@ class ReferenceEngine(PolicyEngine):
                 lambda st, f, b, hr, k, t: vstep(st, f, b, hr, k))
 
     def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
-        if self.randomness == "counter":
+        espec = self._exec_spec()
+        if espec.randomness == "counter":
             if stream_keys is not None:
                 raise ValueError("counter randomness is position-keyed; "
                                  "`stream_keys` only applies to pre_draw")
+            return run_fleet_fused(self.hi, fs, hrs, betas, key, spec=espec)
+        if espec.learner != "dense":
             return run_fleet_fused(self.hi, fs, hrs, betas, key,
-                                   use_kernel=False, randomness="counter")
+                                   stream_keys=stream_keys, spec=espec)
         return run_fleet(self.hi, fs, hrs, betas, key,
                          stream_keys=stream_keys)
 
@@ -328,26 +370,28 @@ class FusedEngine(PolicyEngine):
     monolithic_rounds = True
 
     def __init__(self, hi_cfg: HIConfig,
-                 interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None,
-                 time_block: Optional[int] = None,
-                 randomness: str = "pre_draw"):
-        super().__init__(hi_cfg, interpret, use_kernel, randomness)
-        self.time_block = time_block
+                 interpret=UNSET,
+                 use_kernel=UNSET,
+                 time_block=UNSET,
+                 randomness=UNSET,
+                 *, spec: Optional[ExecSpec] = None):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness,
+                         time_block=time_block, spec=spec)
+        self.time_block = self.spec.time_block
+        espec = self._exec_spec()
 
-        if randomness == "counter":
+        if espec.randomness == "counter":
             def step(state, fs, betas, hrs, seed, t):
                 rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
                                  stream_offset=jnp.zeros((), jnp.int32))
                 return fleet_step_fused(
                     hi_cfg, state, fs, None, None, hrs, betas,
-                    use_kernel=use_kernel, interpret=interpret, rng=rng)
+                    rng=rng, spec=espec)
         else:
             def step(state, fs, betas, hrs, keys, t):
                 psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
                 return fleet_step_fused(
-                    hi_cfg, state, fs, psi, zeta, hrs, betas,
-                    use_kernel=use_kernel, interpret=interpret)
+                    hi_cfg, state, fs, psi, zeta, hrs, betas, spec=espec)
 
         self._step = jax.jit(step)
 
@@ -366,12 +410,10 @@ class FusedEngine(PolicyEngine):
         return 1
 
     def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
+        tb = self._resolve_time_block(*fs.shape)
         return run_fleet_fused(self.hi, fs, hrs, betas, key,
-                               use_kernel=self.use_kernel,
-                               interpret=self.interpret,
-                               time_block=self._resolve_time_block(*fs.shape),
                                stream_keys=stream_keys,
-                               randomness=self.randomness)
+                               spec=self._exec_spec().evolve(time_block=tb))
 
 
 @register_engine("sharded")
@@ -398,11 +440,13 @@ class ShardedEngine(PolicyEngine):
     AXIS = "streams"
 
     def __init__(self, hi_cfg: HIConfig,
-                 interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None,
+                 interpret=UNSET,
+                 use_kernel=UNSET,
                  devices: Optional[Sequence[jax.Device]] = None,
-                 randomness: str = "pre_draw"):
-        super().__init__(hi_cfg, interpret, use_kernel, randomness)
+                 randomness=UNSET,
+                 *, spec: Optional[ExecSpec] = None):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness, spec=spec)
+        espec = self._exec_spec()
         devs = list(devices) if devices is not None else jax.devices()
         self.mesh = Mesh(np.array(devs), (self.AXIS,))
         self.n_devices = len(devs)
@@ -422,8 +466,7 @@ class ShardedEngine(PolicyEngine):
 
         sharded_step = shard_map(
             lambda st, f, psi, zeta, hr, beta: fleet_step_fused(
-                hi_cfg, st, f, psi, zeta, hr, beta,
-                use_kernel=use_kernel, interpret=interpret),
+                hi_cfg, st, f, psi, zeta, hr, beta, spec=espec),
             mesh=self.mesh,
             in_specs=(spec, spec, spec, spec, spec, spec),
             out_specs=(spec, spec),
@@ -434,15 +477,14 @@ class ShardedEngine(PolicyEngine):
         sharded_step_counter = shard_map(
             lambda st, f, hr, beta, rng: fleet_step_fused(
                 hi_cfg, st, f, None, None, hr, beta,
-                use_kernel=use_kernel, interpret=interpret,
-                rng=local_rng(rng, f.shape[0])),
+                rng=local_rng(rng, f.shape[0]), spec=espec),
             mesh=self.mesh,
             in_specs=(spec, spec, spec, spec, rng_spec),
             out_specs=(spec, spec),
             check_rep=False,
         )
 
-        if randomness == "counter":
+        if espec.randomness == "counter":
             def step(state, fs, betas, hrs, seed, t):
                 rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
                                  stream_offset=jnp.zeros((), jnp.int32))
@@ -461,7 +503,8 @@ class ShardedEngine(PolicyEngine):
         def run(fs, hrs, betas, psis, zetas):
             s, t = fs.shape
             state_p, *xs_p = self._pad_tree(
-                (fleet_init(hi_cfg, s), fs, psis, zetas, hrs, betas), s)
+                (fleet_init(hi_cfg, s, learner=espec.learner),
+                 fs, psis, zetas, hrs, betas), s)
 
             def body(st, xs):
                 f, psi, zeta, hr, beta = xs
@@ -478,7 +521,8 @@ class ShardedEngine(PolicyEngine):
         def run_counter(fs, hrs, betas, seed):
             s, t = fs.shape
             state_p, *xs_p = self._pad_tree(
-                (fleet_init(hi_cfg, s), fs, hrs, betas), s)
+                (fleet_init(hi_cfg, s, learner=espec.learner),
+                 fs, hrs, betas), s)
             slots = jnp.arange(t, dtype=jnp.int32)
 
             def body(st, xs):
@@ -500,20 +544,18 @@ class ShardedEngine(PolicyEngine):
         # step/run do.
         sharded_decide = shard_map(
             lambda st, fs, psi, zeta: fleet_decide(
-                hi_cfg, st, fs, psi, zeta,
-                use_kernel=use_kernel, interpret=interpret),
+                hi_cfg, st, fs, psi, zeta, spec=espec),
             mesh=self.mesh, in_specs=(spec, spec, spec, spec),
             out_specs=spec, check_rep=False)
 
         sharded_decide_counter = shard_map(
             lambda st, fs, rng: fleet_decide(
                 hi_cfg, st, fs, None, None,
-                rng=local_rng(rng, fs.shape[0]),
-                use_kernel=use_kernel, interpret=interpret),
+                rng=local_rng(rng, fs.shape[0]), spec=espec),
             mesh=self.mesh, in_specs=(spec, spec, rng_spec),
             out_specs=spec, check_rep=False)
 
-        if randomness == "counter":
+        if espec.randomness == "counter":
             def decide(state, fs, rng):
                 s = fs.shape[0]
                 args = self._pad_tree((state, fs), s)
@@ -529,8 +571,7 @@ class ShardedEngine(PolicyEngine):
 
         sharded_feedback = shard_map(
             lambda st, dec, hrs, betas, sent: fleet_feedback(
-                hi_cfg, st, dec, hrs, betas, sent,
-                use_kernel=use_kernel, interpret=interpret),
+                hi_cfg, st, dec, hrs, betas, sent, spec=espec),
             mesh=self.mesh, in_specs=(spec, spec, spec, spec, spec),
             out_specs=(spec, spec), check_rep=False)
 
@@ -625,17 +666,18 @@ class AdaptiveEngine(PolicyEngine):
     """
 
     def __init__(self, hi_cfg: HIConfig,
-                 interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None,
+                 interpret=UNSET,
+                 use_kernel=UNSET,
                  shift: Optional[ShiftConfig] = None,
                  restart: bool = True,
-                 randomness: str = "pre_draw"):
-        super().__init__(hi_cfg, interpret, use_kernel, randomness)
+                 randomness=UNSET,
+                 *, spec: Optional[ExecSpec] = None):
+        super().__init__(hi_cfg, interpret, use_kernel, randomness, spec=spec)
         self.shift_cfg = ShiftConfig() if shift is None else shift
         self.restart = bool(restart)
         scfg = self.shift_cfg
         do_restart = scfg.enabled and self.restart
-        uk, interp = self._kernel_opts()
+        espec = self._exec_spec()
 
         def feedback(state, decision, hrs, betas, sent):
             if scfg.enabled:
@@ -646,29 +688,29 @@ class AdaptiveEngine(PolicyEngine):
             # (S,) VMEM vectors — the adaptive schedule runs at kernel speed.
             policy, out = fleet_feedback(hi_cfg, state.policy, decision, hrs,
                                          betas, sent, eta=eta, decay=decay,
-                                         use_kernel=uk, interpret=interp)
+                                         spec=espec)
             if scfg.signal == "confidence":
                 x = decision.i_f.astype(hi_cfg.dtype) / hi_cfg.grid
             else:
                 x = out.loss
             shift_state, alarm = shift_update(scfg, state.shift, x)
             if do_restart:
-                policy = fleet_restart(hi_cfg, policy, alarm)
+                policy = fleet_restart(hi_cfg, policy, alarm,
+                                       learner=espec.learner)
             return AdaptiveState(policy=policy, shift=shift_state), out
 
         self._feedback = jax.jit(feedback)
 
-        if randomness == "counter":
+        if espec.randomness == "counter":
             def decide(state, fs, rng):
                 return fleet_decide(hi_cfg, state.policy, fs, None, None,
-                                    rng=rng, use_kernel=uk, interpret=interp)
+                                    rng=rng, spec=espec)
 
             def step(state, fs, betas, hrs, seed, t):
                 rng = CounterRNG(seed=seed, slot=jnp.asarray(t, jnp.int32),
                                  stream_offset=jnp.zeros((), jnp.int32))
                 decision = fleet_decide(hi_cfg, state.policy, fs, None, None,
-                                        rng=rng, use_kernel=uk,
-                                        interpret=interp)
+                                        rng=rng, spec=espec)
                 return feedback(state, decision, hrs, betas, decision.offload)
 
             def run(state, fs, hrs, betas, seed):
@@ -686,12 +728,12 @@ class AdaptiveEngine(PolicyEngine):
             def decide(state, fs, keys):
                 psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
                 return fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
-                                    use_kernel=uk, interpret=interp)
+                                    spec=espec)
 
             def step(state, fs, betas, hrs, keys, t):
                 psi, zeta = draw_psi_zeta(keys, hi_cfg.eps)
                 decision = fleet_decide(hi_cfg, state.policy, fs, psi, zeta,
-                                        use_kernel=uk, interpret=interp)
+                                        spec=espec)
                 return feedback(state, decision, hrs, betas, decision.offload)
 
             def run(state, fs, hrs, betas, keys_t):
@@ -710,8 +752,9 @@ class AdaptiveEngine(PolicyEngine):
         self._run = jax.jit(run)
 
     def init(self, n_streams: int) -> AdaptiveState:
-        return AdaptiveState(policy=fleet_init(self.hi, n_streams),
-                             shift=shift_init(n_streams, self.hi.dtype))
+        return AdaptiveState(
+            policy=fleet_init(self.hi, n_streams, learner=self.spec.learner),
+            shift=shift_init(n_streams, self.hi.dtype))
 
     def run_arrays(self, fs, hrs, betas, key=None, *, stream_keys=None):
         s, t = fs.shape
@@ -738,5 +781,4 @@ class AdaptiveEngine(PolicyEngine):
         if state is None:
             state = self.init(source.n_streams)
         return run_fleet_source(self.hi, source, key, state=state,
-                                step_fn=self._step,
-                                randomness=self.randomness)
+                                step_fn=self._step, spec=self._exec_spec())

@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 from repro.core.counter import check_randomness_mode
+from repro.core.execspec import ExecSpec
 from repro.core.types import HIConfig
 from repro.serving.policy_engine import get_engine
 from repro.serving.request_plane.admission import (
@@ -169,6 +170,10 @@ class RequestPlaneConfig:
     n_streams: int = 8
     hi: HIConfig = dataclasses.field(default_factory=HIConfig)
     engine: str = "fused"
+    # Preferred: one ExecSpec for all execution knobs; when given, the
+    # legacy mirror fields below are synced from it (when None, it is
+    # assembled from them).
+    spec: Optional[ExecSpec] = None
     use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None
     randomness: str = "pre_draw"             # "counter" → in-place PRNG draws
@@ -185,7 +190,15 @@ class RequestPlaneConfig:
     record_rounds: bool = False        # keep per-round arrays (replay parity)
 
     def __post_init__(self):
-        check_randomness_mode(self.randomness)
+        if self.spec is None:
+            check_randomness_mode(self.randomness)
+            object.__setattr__(self, "spec", ExecSpec(
+                use_kernel=self.use_kernel, interpret=self.interpret,
+                randomness=self.randomness))
+        else:
+            object.__setattr__(self, "interpret", self.spec.interpret)
+            object.__setattr__(self, "use_kernel", self.spec.use_kernel)
+            object.__setattr__(self, "randomness", self.spec.randomness)
         if self.n_streams < 1:
             raise ValueError(f"n_streams must be ≥ 1 (got {self.n_streams})")
         if not (1 <= self.batch_limit <= self.n_streams):
@@ -222,9 +235,7 @@ class RequestPlane:
         self.sessions = SessionTable(cfg.n_streams)
         self.link = SimulatedLink(cfg.link)
         self.estimator = NetworkEstimator(cfg.estimator, cfg.n_streams)
-        engine = get_engine(cfg.engine, cfg.hi, interpret=cfg.interpret,
-                            use_kernel=cfg.use_kernel,
-                            randomness=cfg.randomness)
+        engine = get_engine(cfg.engine, cfg.hi, spec=cfg.spec)
         self.batcher = MicroBatcher(
             hi=cfg.hi, engine=engine, n_streams=cfg.n_streams,
             capacity=cfg.capacity, max_batch=cfg.batch_limit,

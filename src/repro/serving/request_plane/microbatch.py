@@ -146,7 +146,7 @@ class MicroBatcher:
                 f"state is a plain H2T2State; engine {engine.name!r} "
                 f"carries {type(self.state).__name__} (partial-round "
                 "masking cannot freeze its extra state)")
-        uk, interp = engine._kernel_opts()
+        espec = engine._exec_spec()
         s, cap = self.n_streams, self.capacity
 
         # Partial-round feedback: per-stream (η, decay) masked to (0, 1)
@@ -156,7 +156,7 @@ class MicroBatcher:
         self._feedback_fn = jax.jit(
             lambda st, dec, hrs, betas, sent, eta, decay: fleet_feedback(
                 hi, st, dec, hrs, betas, sent, eta=eta, decay=decay,
-                use_kernel=uk, interpret=interp))
+                spec=espec))
 
         def route(hrs, offload, t):
             # The per-request payload is the (S, 1) remote-label column, so
@@ -171,7 +171,8 @@ class MicroBatcher:
 
         self._route = jax.jit(route)
         self._restart = jax.jit(
-            lambda st, mask: fleet_restart(hi, st, mask))
+            lambda st, mask: fleet_restart(hi, st, mask,
+                                           learner=espec.learner))
 
         self._queues: List[Deque[Request]] = [deque() for _ in range(s)]
         self._n_queued = 0

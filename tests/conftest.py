@@ -13,6 +13,15 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jax_caches_between_modules():
+    """Release compiled executables at module boundaries: the accumulated
+    live-executable load of the full suite can segfault XLA:CPU's compiler
+    late in the run (jax 0.4.37), and no module needs another's jit cache."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,201 @@
+"""Public-API pins: export surface, ExecSpec shims, and registry identity.
+
+Three guarantees this suite freezes:
+
+  1. The export surface of `repro.core` / `repro.serving` — additions are
+     deliberate (update the pin), removals are breaking.
+  2. The deprecated per-call kwargs (`use_kernel=`, `interpret=`,
+     `randomness=`, `time_block=`, and the engine-opt spellings) still
+     work, produce BIT-IDENTICAL results to their `spec=ExecSpec(...)`
+     equivalents, and emit exactly one DeprecationWarning per resolved
+     call. In-repo code never warns: pytest.ini escalates
+     DeprecationWarning from `repro`/`benchmarks` modules to errors, so
+     the shims are only exercised here, from test modules.
+  3. Routing `learner="dense"` through the registry is the identity: the
+     registry-spec path reproduces the default path bit-for-bit on every
+     engine and both randomness modes.
+"""
+import importlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core
+import repro.serving
+from conftest import fleet_trace as _fleet_trace
+from repro.core import ExecSpec, HIConfig, run_fleet_fused
+from repro.serving import HIServerConfig, get_engine
+from repro.serving.request_plane import RequestPlaneConfig
+
+CORE_EXPORTS = frozenset({
+    "COUNTER_CAP", "CounterRNG", "RANDOMNESS_MODES",
+    "ExecSpec", "Registry", "UNSET",
+    "HIConfig", "StreamSpec", "FleetDecision", "H2T2State",
+    "ShiftConfig", "ShiftState",
+    "SourceRunOutput", "StepOutput", "adapt_schedule", "classification_cost",
+    "counter_rng", "detect_shifts",
+    "draw_fleet_randomness", "draw_fleet_slot_randomness",
+    "draw_psi_zeta", "effective_local_pred",
+    "fleet_decide", "fleet_feedback", "fleet_init", "fleet_restart",
+    "fleet_rounds_fused", "fleet_step_fused",
+    "get_learner", "h2t2_init", "h2t2_step", "list_learners",
+    "local_fallback_pred", "pseudo_loss",
+    "psi_zeta_from_counter", "quantize", "region_masks", "register_learner",
+    "resolve_spec",
+    "run_fleet", "run_fleet_fused", "run_fleet_source", "run_stream",
+    "seed_from_key", "shift_init", "shift_update",
+    "source_slot_keys", "true_loss_fleet",
+    "CalibratedDecision", "calibrated_rule", "chow_rule",
+    "multiclass_regions", "multiclass_rule", "optimal_thresholds",
+    "baselines", "multiclass", "offline", "regret",
+})
+
+SERVING_EXPORTS = frozenset({
+    "AdaptiveEngine", "AdaptiveState",
+    "Engine", "EngineConfig", "FusedEngine", "HIServer", "HIServerConfig",
+    "HIServerState", "OffloadBatch", "PendingFeedback", "PolicyEngine",
+    "ReferenceEngine", "ShardedEngine", "SlotResult", "available_engines",
+    "classifier_fn", "compact_offloads", "get_engine", "list_engines",
+    "register_engine", "rotated_compact", "scatter_results",
+})
+
+
+def _tree_equal(a, b):
+    fa, fb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def _deprecations(record):
+    return [w for w in record if issubclass(w.category, DeprecationWarning)]
+
+
+# ------------------------------ export surface --------------------------------
+
+
+def test_core_export_surface_is_pinned():
+    assert set(repro.core.__all__) == CORE_EXPORTS
+    for name in CORE_EXPORTS:
+        assert getattr(repro.core, name, None) is not None, name
+
+
+def test_serving_export_surface_is_pinned():
+    assert set(repro.serving.__all__) == SERVING_EXPORTS
+    for name in SERVING_EXPORTS:
+        assert getattr(repro.serving, name, None) is not None, name
+
+
+def test_streams_module_is_a_warning_shim():
+    sys.modules.pop("repro.data.streams", None)
+    with pytest.warns(DeprecationWarning, match="repro.data.streams"):
+        import repro.data.streams as streams
+        importlib.reload(streams)
+    # The shim's names are the scenarios module's objects, not copies.
+    import repro.data.scenarios as scenarios
+    assert streams.sample_trace is scenarios.sample_trace
+    assert streams.Trace is scenarios.Trace
+
+
+# --------------------------- deprecated kwarg shims ---------------------------
+
+
+def test_run_fleet_fused_kwargs_warn_once_and_match_spec():
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(0), 4, 64)
+    key = jax.random.PRNGKey(7)
+    spec = ExecSpec(use_kernel=True, interpret=True, time_block=4)
+    want = run_fleet_fused(cfg, fs, hrs, betas, key, spec=spec)
+    with pytest.warns(DeprecationWarning, match="spec=ExecSpec") as record:
+        got = run_fleet_fused(cfg, fs, hrs, betas, key,
+                              use_kernel=True, interpret=True, time_block=4)
+    assert len(_deprecations(record)) == 1
+    _tree_equal(want, got)
+
+
+def test_fleet_decide_kwargs_warn_once_and_match_spec():
+    from repro.core import fleet_decide, fleet_init
+
+    cfg = HIConfig(bits=3, eps=0.1)
+    state = fleet_init(cfg, 8)
+    key = jax.random.PRNGKey(1)
+    fs = jax.random.uniform(key, (8,))
+    psi = jax.random.uniform(jax.random.fold_in(key, 1), (8,))
+    zeta = jnp.zeros((8,), jnp.int32)
+    want = fleet_decide(cfg, state, fs, psi, zeta,
+                        spec=ExecSpec(use_kernel=False))
+    with pytest.warns(DeprecationWarning, match="fleet_decide") as record:
+        got = fleet_decide(cfg, state, fs, psi, zeta, use_kernel=False)
+    assert len(_deprecations(record)) == 1
+    _tree_equal(want, got)
+
+
+def test_get_engine_legacy_opts_warn_once_and_match_spec():
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(2), 4, 64)
+    key = jax.random.PRNGKey(11)
+    spec = ExecSpec(randomness="counter")
+    want = get_engine("fused", cfg, spec=spec).run(fs, hrs, betas, key)
+    with pytest.warns(DeprecationWarning, match="get_engine") as record:
+        eng = get_engine("fused", cfg, randomness="counter")
+    assert len(_deprecations(record)) == 1
+    assert eng.spec == spec
+    _tree_equal(want, eng.run(fs, hrs, betas, key))
+
+
+def test_engine_constructor_kwargs_warn_once():
+    from repro.serving import FusedEngine
+
+    cfg = HIConfig(bits=3)
+    with pytest.warns(DeprecationWarning, match="FusedEngine") as record:
+        eng = FusedEngine(cfg, use_kernel=False)
+    assert len(_deprecations(record)) == 1
+    assert eng.spec == ExecSpec(use_kernel=False)
+
+
+def test_spec_only_paths_do_not_warn():
+    import warnings
+
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(3), 2, 32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = get_engine("fused", cfg, spec=ExecSpec())
+        eng.run(fs, hrs, betas, jax.random.PRNGKey(1))
+        run_fleet_fused(cfg, fs, hrs, betas, jax.random.PRNGKey(1),
+                        spec=ExecSpec())
+
+
+def test_configs_sync_legacy_fields_into_spec():
+    cfg = HIConfig(bits=3)
+    hs = HIServerConfig(hi=cfg, n_streams=4, randomness="counter",
+                        use_kernel=False)
+    assert hs.spec == ExecSpec(use_kernel=False, randomness="counter")
+    rp = RequestPlaneConfig(hi=cfg, n_streams=4, randomness="counter")
+    assert rp.spec.randomness == "counter"
+    # And the spec-first spelling keeps the mirror attributes coherent.
+    hs2 = HIServerConfig(hi=cfg, n_streams=4,
+                         spec=ExecSpec(randomness="counter", time_block=4))
+    assert hs2.randomness == "counter" and hs2.time_block == 4
+
+
+# --------------------------- dense registry identity --------------------------
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused", "sharded",
+                                    "adaptive"])
+@pytest.mark.parametrize("randomness", ["pre_draw", "counter"])
+def test_dense_registry_path_is_identity(engine, randomness):
+    """learner='dense' through the registry == the pre-registry default."""
+    cfg = HIConfig(bits=3, eps=0.1, eta=1.0)
+    fs, hrs, betas = _fleet_trace(jax.random.PRNGKey(4), 4, 64)
+    key = jax.random.PRNGKey(13)
+    default = get_engine(engine, cfg,
+                         spec=ExecSpec(randomness=randomness))
+    named = get_engine(engine, cfg,
+                       spec=ExecSpec(learner="dense", randomness=randomness))
+    _tree_equal(default.run(fs, hrs, betas, key),
+                named.run(fs, hrs, betas, key))
