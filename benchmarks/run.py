@@ -25,6 +25,9 @@ configuration, matching the paper's artifacts:
     learners BEYOND-PAPER: learner-registry rows — factored vs dense H2T2
               regret parity on manuscript workloads, plus the factored
               + counter-RNG million-stream scaling smoke
+    faults  BEYOND-PAPER: degradation-ladder sweep under injected link
+              faults (drop × outage × retry-budget grid through
+              FaultyLink + ResilientSender, virtual-clock deterministic)
 
 ``--list`` prints every registered policy engine, workload scenario, and
 hedge learner with its one-line description, then exits.
@@ -45,6 +48,7 @@ from typing import Dict, Tuple
 from benchmarks import (
     bench_adaptive,
     bench_drift,
+    bench_faults,
     bench_multiclass,
     bench_fig2,
     bench_fig4,
@@ -72,6 +76,7 @@ MODULES = {
     "adaptive": bench_adaptive,
     "request_plane": bench_request_plane,
     "learners": bench_learners,
+    "faults": bench_faults,
 }
 
 

@@ -1,18 +1,27 @@
 """Async request plane: the served front half of the system.
 
 Concurrent per-session requests enter through `RequestPlane.submit`
-(admission → slot lease), coalesce in the `MicroBatcher` into fleet-wide
-`decide` rounds, route offloads through the same rotating compaction and
-delayed feedback as `HIServer`, and price every offload with a live β from
-`NetworkEstimator` over measured link transfers — replacing the
-generator-supplied β of trace replay end to end. Everything runs on
-`VirtualTimeLoop` simulated time under test and benchmark, so a fixed seed
-produces the identical summary.
+(admission + degradation ladder → slot lease), coalesce in the
+`MicroBatcher` into fleet-wide `decide` rounds, route offloads through the
+same rotating compaction and delayed feedback as `HIServer`, and price
+every offload with a live β from `NetworkEstimator` over measured link
+transfers — replacing the generator-supplied β of trace replay end to end.
+
+The offload path is fault-tolerant: any `Link` backend (the deterministic
+`SimulatedLink`, a fault-injecting `FaultyLink`, or a future real probe)
+sits behind `ResilientSender` — per-send deadlines, capped-backoff retries,
+and per-stream circuit breakers — and a send that exhausts its retries
+degrades to the conditional local fallback with its feedback slot masked,
+so futures never hang and the policy never trains on labels that never
+arrived. Everything runs on `VirtualTimeLoop` simulated time under test
+and benchmark, so a fixed seed produces the identical summary.
 """
 from repro.serving.request_plane.admission import (   # noqa: F401
+    REASON_BREAKER_OPEN,
     REASON_NO_SLOT,
     REASON_QUEUE_FULL,
     REASON_RATE_LIMITED,
+    REASON_SLO,
     AdmissionConfig,
     AdmissionController,
 )
@@ -38,7 +47,24 @@ from repro.serving.request_plane.microbatch import (  # noqa: F401
 )
 from repro.serving.request_plane.netem import (       # noqa: F401
     EstimatorConfig,
+    FaultConfig,
+    FaultyLink,
+    Link,
     LinkConfig,
+    LinkError,
+    LinkOutage,
     NetworkEstimator,
+    SendCorrupted,
+    SendDropped,
     SimulatedLink,
+)
+from repro.serving.request_plane.resilience import (  # noqa: F401
+    BREAKER_CLOSED,
+    BREAKER_HALF_OPEN,
+    BREAKER_OPEN,
+    CircuitBreaker,
+    ResilienceConfig,
+    ResilientSender,
+    RetriesExhausted,
+    SendTimeout,
 )

@@ -1,4 +1,5 @@
-"""Admission control: token-bucket rate limiting + queue-depth shedding.
+"""Admission control: token-bucket rate limiting, queue-depth shedding, and
+the health rungs of the degradation ladder.
 
 The compactor's rotating drop (`serving.hi_server.rotated_compact`) already
 bounds the *RDL batch*; admission bounds the *queue in front of the
@@ -8,11 +9,18 @@ before it is even decided. Denial is graceful degradation, never an error:
 the ingress answers a denied request immediately with a local-only fallback
 prediction (`RequestPlane`), so callers always get a classification.
 
+Beyond load, the ladder also sheds on predicted *offload-path health*
+(`RequestPlane._ladder_deny`): a leased stream whose circuit breaker is
+open (`breaker_open`), or whose estimator-predicted p-quantile transfer
+time would miss the latency SLO (`slo_miss`, `slo_deadline`/`slo_quantile`
+below), is denied to the local fallback *before* any network budget is
+spent — the cheap rung of degradation, ahead of retries and fallbacks.
+
 Every denial increments a per-reason counter (`denied_{reason}`) plus the
 `denied_total` aggregate, so the overload invariant is checkable exactly:
 
     requests_total == admitted_total + denied_total
-    fallback_total == denied_total + capacity_dropped
+    fallback_total == denied_total + capacity_dropped + retry_exhausted
 """
 from __future__ import annotations
 
@@ -25,6 +33,8 @@ from repro.serving.request_plane.metrics import Metrics
 REASON_QUEUE_FULL = "queue_full"
 REASON_RATE_LIMITED = "rate_limited"
 REASON_NO_SLOT = "no_slot"
+REASON_BREAKER_OPEN = "breaker_open"   # stream's offload circuit is open
+REASON_SLO = "slo_miss"                # predicted transfer misses the SLO
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,11 +46,20 @@ class AdmissionConfig:
     bounds p99 at saturation: with `max_queue=Q` and per-round service of S
     requests, an admitted request waits at most ~⌈Q/S⌉ + 1 micro-batch
     deadlines before its decide round.
+
+    `slo_deadline` (seconds, None → off) arms the latency-SLO rung of the
+    degradation ladder: a request whose leased stream's predicted
+    `slo_quantile` transfer time (estimator percentile + payload
+    serialization) exceeds the deadline is denied to the local fallback
+    before any network budget is spent — the ROADMAP's "deny when the
+    estimator's p95 predicts a deadline miss" admission mode.
     """
 
     rate: Optional[float] = None   # sustained requests/s; None → unlimited
     burst: float = 32.0            # bucket capacity (peak admissions)
     max_queue: Optional[int] = None  # batcher queue-depth cap; None → unbounded
+    slo_deadline: Optional[float] = None  # s; None → no latency-SLO rung
+    slo_quantile: float = 0.95     # estimator percentile the SLO prices
     enabled: bool = True
 
     def __post_init__(self):
@@ -52,6 +71,13 @@ class AdmissionConfig:
             raise ValueError(
                 f"max_queue must be ≥ 1 (got {self.max_queue}); use None "
                 "for unbounded")
+        if self.slo_deadline is not None and self.slo_deadline <= 0:
+            raise ValueError(
+                f"slo_deadline must be positive (got {self.slo_deadline}); "
+                "use None to disable the SLO rung")
+        if not 0.0 < self.slo_quantile < 1.0:
+            raise ValueError(
+                f"slo_quantile must lie in (0, 1) (got {self.slo_quantile})")
 
 
 class AdmissionController:

@@ -12,8 +12,10 @@ Three layers, composed by `RequestPlane`:
       slots: free-list lease, LRU reclaim of idle sessions, pin counts so a
       slot with requests in flight is never reassigned under them.
   `RequestPlane` — per-request flow: admission (deny → immediate local
-      fallback prediction, never an error) → slot lease → micro-batcher
-      enqueue → await the decide/offload future → release.
+      fallback prediction, never an error) → slot lease → degradation
+      ladder (open circuit breaker or predicted latency-SLO miss on the
+      leased stream ⇒ deny-to-local before spending network budget) →
+      micro-batcher enqueue → await the decide/offload future → release.
 
 `serve_traffic` is the open-loop driver the benchmark and tests share: it
 replays a seeded `ArrivalBatch` (`repro.data.traffic`) against a plane on
@@ -35,7 +37,9 @@ from repro.core.execspec import ExecSpec
 from repro.core.types import HIConfig
 from repro.serving.policy_engine import get_engine
 from repro.serving.request_plane.admission import (
+    REASON_BREAKER_OPEN,
     REASON_NO_SLOT,
+    REASON_SLO,
     AdmissionConfig,
     AdmissionController,
 )
@@ -48,9 +52,15 @@ from repro.serving.request_plane.microbatch import (
 )
 from repro.serving.request_plane.netem import (
     EstimatorConfig,
+    FaultConfig,
+    FaultyLink,
     LinkConfig,
     NetworkEstimator,
     SimulatedLink,
+)
+from repro.serving.request_plane.resilience import (
+    ResilienceConfig,
+    ResilientSender,
 )
 
 
@@ -184,6 +194,9 @@ class RequestPlaneConfig:
     admission: AdmissionConfig = dataclasses.field(
         default_factory=AdmissionConfig)
     link: LinkConfig = dataclasses.field(default_factory=LinkConfig)
+    fault: Optional[FaultConfig] = None   # wrap the link in FaultyLink
+    resilience: ResilienceConfig = dataclasses.field(
+        default_factory=ResilienceConfig)
     estimator: EstimatorConfig = dataclasses.field(
         default_factory=EstimatorConfig)
     restart_on_reclaim: bool = False   # wipe a slot's weights on session reclaim
@@ -234,14 +247,35 @@ class RequestPlane:
         self.admission = AdmissionController(cfg.admission, self.metrics)
         self.sessions = SessionTable(cfg.n_streams)
         self.link = SimulatedLink(cfg.link)
+        if cfg.fault is not None:
+            self.link = FaultyLink(self.link, cfg.fault)
         self.estimator = NetworkEstimator(cfg.estimator, cfg.n_streams)
+        self.sender = ResilientSender(
+            self.link, self.estimator, self.metrics, cfg.resilience,
+            cfg.n_streams)
         engine = get_engine(cfg.engine, cfg.hi, spec=cfg.spec)
         self.batcher = MicroBatcher(
             hi=cfg.hi, engine=engine, n_streams=cfg.n_streams,
             capacity=cfg.capacity, max_batch=cfg.batch_limit,
-            max_wait=cfg.max_wait, link=self.link, estimator=self.estimator,
-            metrics=self.metrics, key=key,
+            max_wait=cfg.max_wait, sender=self.sender,
+            estimator=self.estimator, metrics=self.metrics, key=key,
             record_rounds=cfg.record_rounds)
+
+    def _ladder_deny(self, slot: int, payload_bytes: float,
+                     now: float) -> Optional[str]:
+        """The health rungs of the degradation ladder, checked after the
+        slot lease but before any network budget is spent: an open circuit
+        breaker on the leased stream, or an estimator-predicted transfer
+        that would miss the latency SLO, denies the request to the local
+        fallback immediately."""
+        if self.sender.breaker_blocking(slot, now):
+            return self.admission.deny(REASON_BREAKER_OPEN)
+        slo = self.cfg.admission.slo_deadline
+        if slo is not None and self.estimator.predict_transfer(
+                slot, payload_bytes,
+                q=self.cfg.admission.slo_quantile) > slo:
+            return self.admission.deny(REASON_SLO)
+        return None
 
     async def submit(self, session: int, f: float, hr: int, y: int = -1,
                      payload_bytes: Optional[float] = None) -> PlaneResult:
@@ -251,6 +285,8 @@ class RequestPlane:
         loop = asyncio.get_running_loop()
         now = loop.time()
         self.metrics.counter("requests_total").inc()
+        payload = float(self.cfg.default_payload_bytes
+                        if payload_bytes is None else payload_bytes)
         reason = self.admission.admit(now, self.batcher.queue_depth)
         lease = None
         if reason is None:
@@ -259,6 +295,11 @@ class RequestPlane:
                 reason = self.admission.deny(REASON_NO_SLOT)
                 # The rate token is spent; under a full-pinned table that
                 # is the conservative direction (sheds harder, not softer).
+            else:
+                reason = self._ladder_deny(lease[0], payload, now)
+                if reason is not None:
+                    self.sessions.release(lease[0])
+                    lease = None
         if reason is not None:
             pred = 1 if f >= 0.5 else 0
             self.metrics.counter("fallback_total").inc()
@@ -272,10 +313,7 @@ class RequestPlane:
                 self.batcher.restart_stream(slot)
         req = Request(
             session=int(session), stream=slot, f=float(f), hr=int(hr),
-            y=int(y),
-            payload_bytes=float(self.cfg.default_payload_bytes
-                                if payload_bytes is None else payload_bytes),
-            t_arrival=now)
+            y=int(y), payload_bytes=payload, t_arrival=now)
         try:
             return await self.batcher.enqueue(req)
         finally:
@@ -294,6 +332,8 @@ class RequestPlane:
         snap["deny_rate"] = snap.get("denied_total", 0.0) / n
         snap["offload_rate"] = snap.get("completed_remote", 0.0) / n
         snap["drop_rate"] = snap.get("capacity_dropped", 0.0) / n
+        snap["fallback_rate"] = snap.get("fallback_total", 0.0) / n
+        snap["exhausted_rate"] = snap.get("retry_exhausted", 0.0) / n
         snap["avg_offload_cost"] = snap.get("observed_cost", 0.0) / n
         snap["avg_true_cost"] = snap.get("true_cost", 0.0) / labeled
         snap["accuracy"] = snap.get("correct_total", 0.0) / labeled

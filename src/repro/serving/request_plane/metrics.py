@@ -10,6 +10,29 @@ contract that the same seed produces the identical exported summary.
 
 Everything exports through `Metrics.snapshot()` as one flat name → float
 dict, the shape the server summary and the benchmark rows consume.
+
+The metric namespace, by layer (counters unless noted):
+
+  ingress     requests_total, admitted_total, denied_total +
+              denied_{reason} per denial reason (`admission.py` — incl. the
+              ladder's `breaker_open`/`slo_miss`), fallback_total,
+              slot_reclaims
+  batcher     rounds_total, batched_requests, feedback_rounds,
+              completed_local, completed_remote, capacity_dropped,
+              retry_exhausted, queue_depth (gauge), latency_ms (quantiles)
+  resilience  retries_total, retry_backoff_s, send_timeouts, send_drops,
+              send_outages, send_corrupted, send_recovered,
+              breaker_opens/breaker_closes/breaker_probes, and the state
+              gauges breaker_{closed,open,half_open}_streams
+  accounting  observed_cost, true_cost, labeled_total, correct_total
+
+The conservation identities every run must satisfy exactly (chaos-tested
+under injected faults):
+
+  requests_total == admitted_total + denied_total
+  admitted_total == completed_local + completed_remote
+                    + capacity_dropped + retry_exhausted
+  fallback_total == denied_total + capacity_dropped + retry_exhausted
 """
 from __future__ import annotations
 

@@ -13,16 +13,25 @@ request granularity:
      replay via `source_slot_keys`, which is what makes the low-load plane
      bit-compatible with `HIServer.run_source`),
   2. compact only the offloaded requests at `capacity` with the rotating
-     drop priority (`rotated_compact`), send each survivor over the link
-     (measured transfer → `NetworkEstimator.observe` → next round's β),
-     and complete every request's future: remote label where sent, the
-     conditional local fallback where capacity-dropped, the local decision
+     drop priority (`rotated_compact`), send each survivor through the
+     resilient offload path (`ResilientSender`: deadline, retries with
+     backoff, circuit breaker; measured transfer → `NetworkEstimator` →
+     next round's β), and complete every request's future: remote label
+     where the send succeeded, the conditional local fallback where
+     capacity-dropped OR where every retry failed, the local decision
      otherwise.
 
 A flush fires when `max_batch` distinct streams have work OR `max_wait`
 elapses after the first queued request — whichever comes first. Streams
 not in the batch are frozen exactly: their (η, decay) are masked to
 (0, 1), so a partial round leaves their expert weights bit-identical.
+
+Lost-feedback recovery reuses the same freezing: a send that exhausts its
+retries resolves the request with the conditional local fallback (a future
+never hangs), decrements the batch's `outstanding` count so pending
+feedback still drains, and masks that slot's (η, decay) to (0, 1) in its
+feedback entry — the request is charged the β its attempts actually spent,
+but the policy never trains on a remote label that never arrived.
 
 The batcher is event-loop native but does all device work synchronously
 inside the flush callback; only link transfers are awaited.
@@ -43,6 +52,7 @@ from repro.core.policy import (
     effective_local_pred,
     fleet_feedback,
     fleet_restart,
+    local_fallback_pred,
     source_slot_keys,
 )
 from repro.core.types import HIConfig
@@ -50,7 +60,11 @@ from repro.serving.batching import scatter_results
 from repro.serving.hi_server import rotated_compact
 from repro.serving.policy_engine import PolicyEngine
 from repro.serving.request_plane.metrics import Metrics
-from repro.serving.request_plane.netem import NetworkEstimator, SimulatedLink
+from repro.serving.request_plane.netem import NetworkEstimator
+from repro.serving.request_plane.resilience import (
+    ResilientSender,
+    RetriesExhausted,
+)
 
 
 @dataclasses.dataclass
@@ -70,18 +84,26 @@ class Request:
 @dataclasses.dataclass(frozen=True)
 class PlaneResult:
     """What a request's future resolves to — always a prediction, never an
-    error (denials and capacity drops degrade to local-only predictions)."""
+    error (denials, capacity drops, and exhausted retries all degrade to
+    local-only predictions)."""
 
     pred: int
     offloaded: bool = False
     dropped: bool = False    # offload decision shed by RDL capacity
     denied: bool = False     # shed by admission before reaching the batcher
+    failed: bool = False     # offload sent but every retry failed
     reason: Optional[str] = None
     latency: float = 0.0     # seconds from arrival to completion
 
 
 class _FeedbackEntry:
-    """One flush's delayed feedback, waiting for its transfers to land."""
+    """One flush's delayed feedback, waiting for its transfers to land.
+
+    `eta`/`decay` stay host-side (numpy) until the entry is applied, so a
+    transfer that exhausts its retries can still `mask_slot` its stream —
+    freezing that slot's weights exactly as an off-batch stream is frozen —
+    before the batch reaches `fleet_feedback`.
+    """
 
     __slots__ = ("decision", "hrs", "sent", "betas", "eta", "decay",
                  "outstanding")
@@ -91,10 +113,16 @@ class _FeedbackEntry:
         self.decision = decision
         self.hrs = hrs
         self.sent = sent
-        self.betas = betas
-        self.eta = eta
-        self.decay = decay
+        self.betas = betas       # (S,) np — decision-time β snapshot
+        self.eta = eta           # (S,) np — mutable until applied
+        self.decay = decay       # (S,) np — mutable until applied
         self.outstanding = outstanding
+
+    def mask_slot(self, slot: int) -> None:
+        """Freeze `slot` out of this batch's weight update: (η=0, decay=1)
+        make `fleet_feedback` the exact identity for that stream."""
+        self.eta[slot] = 0.0
+        self.decay[slot] = 1.0
 
 
 def account_outcome(metrics: Metrics, hi: HIConfig, pred: int, y: int,
@@ -123,7 +151,7 @@ class MicroBatcher:
         capacity: int,
         max_batch: int,
         max_wait: float,
-        link: SimulatedLink,
+        sender: ResilientSender,
         estimator: NetworkEstimator,
         metrics: Metrics,
         key: jax.Array,
@@ -135,7 +163,7 @@ class MicroBatcher:
         self.capacity = int(capacity)
         self.max_batch = int(max_batch)
         self.max_wait = float(max_wait)
-        self.link = link
+        self.sender = sender
         self.estimator = estimator
         self.metrics = metrics
         self.key = key
@@ -227,8 +255,8 @@ class MicroBatcher:
         while self._pending and self._pending[0].outstanding == 0:
             e = self._pending.popleft()
             self.state, _ = self._feedback_fn(
-                self.state, e.decision, e.hrs, e.betas, e.sent, e.eta,
-                e.decay)
+                self.state, e.decision, e.hrs, jnp.asarray(e.betas), e.sent,
+                jnp.asarray(e.eta), jnp.asarray(e.decay))
             self.metrics.counter("feedback_rounds").inc()
 
     def _flush(self) -> None:
@@ -284,6 +312,10 @@ class MicroBatcher:
         sent_np = np.asarray(sent)
         off_np = np.asarray(decision.offload)
         local_pred = np.asarray(effective_local_pred(decision, sent))
+        # The conditional fallback draw for sent slots whose transfer later
+        # exhausts its retries (capacity drops get theirs via
+        # `effective_local_pred`; this is the same draw, precomputed).
+        fallback_pred = np.asarray(local_fallback_pred(decision))
 
         n_sent = int(sent_np.sum())
         n_drop = int((off_np & ~sent_np).sum())
@@ -296,8 +328,7 @@ class MicroBatcher:
         decay = np.where(active, np.float32(self.hi.decay), np.float32(1.0))
         entry = _FeedbackEntry(
             decision=decision, hrs=hrs_back, sent=sent,
-            betas=jnp.asarray(betas), eta=jnp.asarray(eta),
-            decay=jnp.asarray(decay), outstanding=n_sent)
+            betas=betas.copy(), eta=eta, decay=decay, outstanding=n_sent)
         self._pending.append(entry)
 
         if self.record is not None:
@@ -308,7 +339,8 @@ class MicroBatcher:
             if sent_np[slot]:
                 self.stream_sent[slot] += 1
                 loop.create_task(
-                    self._transfer(entry, r, float(betas[slot])))
+                    self._transfer(entry, r, float(betas[slot]),
+                                   int(fallback_pred[slot])))
             else:
                 dropped = bool(off_np[slot])
                 self._complete(r, int(local_pred[slot]), offloaded=False,
@@ -323,34 +355,44 @@ class MicroBatcher:
                                        self._timer_fire)
 
     async def _transfer(self, entry: _FeedbackEntry, req: Request,
-                        beta: float) -> None:
-        """One offload: ship the payload, measure, feed the estimator."""
-        loop = asyncio.get_running_loop()
+                        beta: float, fallback_pred: int) -> None:
+        """One offload through the resilient path: the sender owns retries,
+        timeouts, the breaker, and every estimator observation. A send that
+        exhausts its retries degrades to `fallback_pred` (the conditional
+        local draw), masks its slot out of the batch's weight update, and
+        still decrements `outstanding` — feedback drains, futures resolve.
+        """
         self._inflight += 1
         try:
-            t0 = loop.time()
-            await self.link.send(req.stream, req.payload_bytes)
-            measured = loop.time() - t0
-            self.estimator.observe(req.stream, measured, req.payload_bytes)
+            await self.sender.send(req.stream, req.payload_bytes)
             self.metrics.counter("completed_remote").inc()
             self._complete(req, int(req.hr), offloaded=True, dropped=False,
                            beta=beta)
+        except RetriesExhausted as e:
+            entry.mask_slot(req.stream)
+            self.metrics.counter("retry_exhausted").inc()
+            self.metrics.counter("fallback_total").inc()
+            # β is charged only where attempts actually hit the link — a
+            # breaker fast-fail spent no network budget.
+            self._complete(req, fallback_pred, offloaded=False,
+                           dropped=False, failed=True,
+                           beta=beta if e.attempts > 0 else 0.0)
         finally:
             self._inflight -= 1
             entry.outstanding -= 1
 
     def _complete(self, req: Request, pred: int, offloaded: bool,
-                  dropped: bool, beta: float) -> None:
+                  dropped: bool, beta: float, failed: bool = False) -> None:
         loop = asyncio.get_running_loop()
         latency = loop.time() - req.t_arrival
         self.metrics.quantiles("latency_ms").observe(latency * 1e3)
-        if not offloaded and not dropped:
+        if not offloaded and not dropped and not failed:
             self.metrics.counter("completed_local").inc()
         account_outcome(self.metrics, self.hi, pred, req.y, beta)
         if not req.future.done():
             req.future.set_result(PlaneResult(
                 pred=pred, offloaded=offloaded, dropped=dropped,
-                latency=latency))
+                failed=failed, latency=latency))
 
     # ------------------------------- lifecycle ----------------------------------
 

@@ -1,23 +1,41 @@
-"""Live network estimation: measured transfer times → the per-stream β vector.
+"""The transport layer: the `Link` protocol, its deterministic doubles, and
+live network estimation (measured transfer times → the per-stream β vector).
 
 Everywhere else in this repo the offloading cost β is *synthesized* by a
-`ScenarioSource`; a deployed edge system has to measure it. This module
-closes that loop with two pieces:
+`ScenarioSource`; a deployed edge system has to measure it — over a network
+that drops, stalls, and garbles. This module closes that loop:
 
-  `SimulatedLink`   — the pluggable transport backend: per-stream RTT with
+  `Link`            — the transport protocol every backend implements:
+                      `send(stream, payload_bytes) -> float` (the measured
+                      transfer seconds) plus capability flags. A send may
+                      raise a `LinkError` subclass; the resilience layer
+                      (`resilience.py`) owns retries and timeouts, the link
+                      only reports what the wire did. A real deployment
+                      implements this with an aiohttp probe or the actual
+                      RDL RPC (ROADMAP follow-up).
+  `SimulatedLink`   — the deterministic healthy double: per-stream RTT with
                       jitter, payload/bandwidth serialization, and two-state
                       Markov congestion episodes (the `beta_process`
                       "bursty" dynamics, but happening *to* the transport
-                      instead of being handed to the policy). A real
-                      deployment swaps in an aiohttp-probe backend with the
-                      same `send(stream, payload_bytes)` coroutine.
+                      instead of being handed to the policy). Never raises.
+  `FaultyLink`      — a composable fault injector wrapping any `Link`:
+                      seeded per-send drops, corrupted responses, Pareto
+                      (heavy-tailed) straggler delays, and full outage
+                      windows — scheduled on the loop clock or driven by a
+                      per-send Markov chain. With every fault knob at zero
+                      it is a pure passthrough (no PRNG draws, no time
+                      added), so a fault-free wrapped run is bit-identical
+                      to the bare link.
   `NetworkEstimator`— rolling per-stream estimation over whatever the link
                       reports: EWMA of the de-payloaded RTT plus a windowed
                       percentile (the SNIPPETS.md `offloadagent.py` recipe:
                       rolling RTT window + a transmit-cost model), converted
                       into the β each stream would pay to offload right now
                       (`beta_vector`, consumed by the micro-batcher every
-                      decide round).
+                      decide round). Failed/timed-out sends fold into the
+                      percentile window only (`observe(..., ok=False)`) —
+                      they are the tail congestion p95 must price, but
+                      their caps are not measured RTTs the EWMA may trust.
 
 β conversion: a predicted transfer of `latency_ref` seconds costs β = 1
 (the paper's normalized β ≤ 1); everything scales linearly and clips to
@@ -30,9 +48,59 @@ import asyncio
 import dataclasses
 import random
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
+
+
+# ------------------------------ link protocol ---------------------------------
+
+
+class LinkError(RuntimeError):
+    """A send failed at the transport. `elapsed` is the loop-seconds the
+    sender spent before the failure surfaced (0 for fast failures) — what a
+    caller actually observed, and all it may feed the estimator."""
+
+    def __init__(self, msg: str, elapsed: float = 0.0):
+        super().__init__(msg)
+        self.elapsed = float(elapsed)
+
+
+class SendDropped(LinkError):
+    """The payload (or its response) was lost in flight: the full transfer
+    time passed, then the connection reset — no result ever arrived."""
+
+
+class SendCorrupted(LinkError):
+    """A response arrived on time but failed integrity checks. Its timing
+    IS a valid RTT measurement; its content is unusable."""
+
+
+class LinkOutage(LinkError):
+    """The remote is unreachable (connection refused): fails fast, before
+    any transfer time is spent."""
+
+
+@runtime_checkable
+class Link(Protocol):
+    """What the request plane requires of a transport backend.
+
+    `send` transfers `payload_bytes` on `stream`'s connection and returns
+    the measured transfer seconds; it may raise a `LinkError` subclass.
+    Capability flags let callers reason about a backend without probing it:
+
+      `deterministic` — same seed ⇒ same transfer times and faults (true
+          for the simulated doubles; False for any real transport). Tests
+          and benchmarks only assert reproducibility when the link says so.
+      `lossy` — `send` may raise `LinkError` (True for `FaultyLink` and any
+          real transport; the bare `SimulatedLink` never fails).
+    """
+
+    deterministic: bool
+    lossy: bool
+
+    async def send(self, stream: int, payload_bytes: float) -> float:
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +135,9 @@ class LinkConfig:
 class SimulatedLink:
     """Deterministic simulated transport with per-stream congestion state."""
 
+    deterministic = True
+    lossy = False
+
     def __init__(self, cfg: LinkConfig):
         self.cfg = cfg
         self._rngs: Dict[int, random.Random] = {}
@@ -99,6 +170,145 @@ class SimulatedLink:
         Under `VirtualTimeLoop` the sleep is instantaneous wall-clock."""
         dt = self.transfer_time(stream, payload_bytes)
         await asyncio.sleep(dt)
+        return dt
+
+
+# ------------------------------ fault injection -------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fault model for `FaultyLink`, reproducible on a virtual clock.
+
+    Four independent fault families, each off at its default:
+
+      drops       — with `drop_prob` per send, the transfer's full time
+                    passes, then `SendDropped` (response lost in flight).
+      corruption  — with `corrupt_prob` per (non-dropped) send, the response
+                    arrives on schedule but raises `SendCorrupted`.
+      stragglers  — with `straggler_prob` per send, a Pareto-distributed
+                    extra delay of `straggler_scale·((1−u)^(−1/shape) − 1)`
+                    seconds stretches the transfer: the heavy tail that
+                    makes per-send deadlines (not means) the right defense.
+      outages     — the remote is unreachable: `LinkOutage` raised fast,
+                    before any transfer time. Scheduled `outage_windows`
+                    are (start, end) pairs on the loop clock; the Markov
+                    mode steps a per-stream chain once per send
+                    (`outage_p_enter` to go dark, `outage_p_exit` to come
+                    back) — bursty unavailability like the congestion
+                    episodes, but fatal instead of slow.
+
+    All randomness comes from one seeded PRNG per stream (disjoint from the
+    wrapped link's), so fault traces are exactly reproducible and the
+    wrapped link's own draw sequence is never perturbed.
+    """
+
+    drop_prob: float = 0.0
+    corrupt_prob: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_scale: float = 0.2       # s, Pareto scale of the extra delay
+    straggler_shape: float = 1.5       # Pareto tail index (lower = heavier)
+    outage_windows: Tuple[Tuple[float, float], ...] = ()
+    outage_p_enter: float = 0.0        # per-send P(reachable → outage)
+    outage_p_exit: float = 0.25        # per-send P(outage → reachable)
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("drop_prob", "corrupt_prob", "straggler_prob",
+                     "outage_p_enter", "outage_p_exit"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must lie in [0, 1] (got {v})")
+        if self.straggler_scale < 0 or self.straggler_shape <= 0:
+            raise ValueError("straggler scale must be ≥ 0 and shape > 0")
+        windows = tuple((float(a), float(b)) for a, b in self.outage_windows)
+        if any(b <= a for a, b in windows):
+            raise ValueError(
+                f"outage windows must be (start, end) with end > start "
+                f"(got {windows})")
+        object.__setattr__(self, "outage_windows", windows)
+
+    @property
+    def fault_free(self) -> bool:
+        """True when every fault family is disabled — `FaultyLink` is then
+        a pure passthrough (the parity guarantee)."""
+        return (self.drop_prob == 0.0 and self.corrupt_prob == 0.0
+                and self.straggler_prob == 0.0 and not self.outage_windows
+                and self.outage_p_enter == 0.0)
+
+
+class FaultyLink:
+    """Composable fault injector over any `Link` (see `FaultConfig`).
+
+    Per-send draw order is fixed (outage chain, drop, corrupt, straggler),
+    each guarded by its knob so disabled families consume no randomness:
+    with `cfg.fault_free` the wrapper forwards the send untouched, which is
+    what makes the zero-fault run bit-identical to the bare link.
+
+    `injected` counts faults by family — ground truth for chaos tests
+    (the resilience layer's counters must reconcile against it).
+    """
+
+    deterministic = True
+    lossy = True
+
+    def __init__(self, inner: Link, cfg: FaultConfig):
+        self.inner = inner
+        self.cfg = cfg
+        self._rngs: Dict[int, random.Random] = {}
+        self._out: Dict[int, bool] = {}
+        self.injected = {"outage": 0, "drop": 0, "corrupt": 0,
+                         "straggler": 0}
+
+    def _rng(self, stream: int) -> random.Random:
+        rng = self._rngs.get(stream)
+        if rng is None:
+            rng = self._rngs[stream] = random.Random(
+                self.cfg.seed * 2_000_003 + stream)
+        return rng
+
+    def in_scheduled_outage(self, now: float) -> bool:
+        return any(a <= now < b for a, b in self.cfg.outage_windows)
+
+    async def send(self, stream: int, payload_bytes: float) -> float:
+        cfg = self.cfg
+        if cfg.fault_free:
+            return await self.inner.send(stream, payload_bytes)
+        if cfg.outage_windows:
+            now = asyncio.get_running_loop().time()
+            if self.in_scheduled_outage(now):
+                self.injected["outage"] += 1
+                raise LinkOutage(f"scheduled outage at t={now:.3f}")
+        rng = self._rng(stream)
+        if cfg.outage_p_enter > 0.0:
+            out = self._out.get(stream, False)
+            u = rng.random()
+            out = (u >= cfg.outage_p_exit) if out else (u < cfg.outage_p_enter)
+            self._out[stream] = out
+            if out:
+                self.injected["outage"] += 1
+                raise LinkOutage(f"markov outage on stream {stream}")
+        drop = cfg.drop_prob > 0.0 and rng.random() < cfg.drop_prob
+        corrupt = (cfg.corrupt_prob > 0.0
+                   and rng.random() < cfg.corrupt_prob and not drop)
+        extra = 0.0
+        if cfg.straggler_prob > 0.0 and rng.random() < cfg.straggler_prob:
+            u = rng.random()
+            extra = cfg.straggler_scale * (
+                (1.0 - u) ** (-1.0 / cfg.straggler_shape) - 1.0)
+            self.injected["straggler"] += 1
+        dt = await self.inner.send(stream, payload_bytes)
+        if extra > 0.0:
+            await asyncio.sleep(extra)
+            dt += extra
+        if drop:
+            self.injected["drop"] += 1
+            raise SendDropped(
+                f"response lost on stream {stream}", elapsed=dt)
+        if corrupt:
+            self.injected["corrupt"] += 1
+            raise SendCorrupted(
+                f"corrupted response on stream {stream}", elapsed=dt)
         return dt
 
 
@@ -146,6 +356,12 @@ class NetworkEstimator:
     in; `beta_vector(payloads)` prices an offload *now* for every stream.
     Streams with no samples yet sit at `prior_rtt` so cold-start β is
     defined (and conservative rather than free).
+
+    `observe(..., ok=False)` records a failed or timed-out send: the
+    elapsed time (the timeout cap, or the time until the reset) enters the
+    percentile window — exactly the tail congestion a p95 predictor must
+    price — but never the EWMA, which models *measured* RTTs and would be
+    silently biased by caps that are lower bounds, not measurements.
     """
 
     def __init__(self, cfg: EstimatorConfig, n_streams: int):
@@ -156,17 +372,26 @@ class NetworkEstimator:
         self._windows: List[Deque[float]] = [
             deque(maxlen=cfg.window) for _ in range(n_streams)]
         self.n_samples = 0
+        self.n_failures = 0
 
     def observe(self, stream: int, seconds: float,
-                payload_bytes: float) -> None:
-        """Fold one measured transfer into stream `stream`'s estimate."""
+                payload_bytes: float, ok: bool = True) -> None:
+        """Fold one transfer observation into stream `stream`'s estimate.
+
+        `ok=False` marks a send that never completed (`seconds` is then the
+        elapsed time until the failure surfaced): it inflates the windowed
+        percentile but leaves the EWMA untouched.
+        """
         cfg = self.cfg
         rtt = max(seconds - payload_bytes / cfg.bw_hint, 0.0)
-        if self._seen[stream]:
-            self._rtt[stream] += cfg.alpha * (rtt - self._rtt[stream])
+        if ok:
+            if self._seen[stream]:
+                self._rtt[stream] += cfg.alpha * (rtt - self._rtt[stream])
+            else:
+                self._rtt[stream] = rtt      # first sample replaces the prior
+                self._seen[stream] = True
         else:
-            self._rtt[stream] = rtt          # first sample replaces the prior
-            self._seen[stream] = True
+            self.n_failures += 1
         self._windows[stream].append(rtt)
         self.n_samples += 1
 
@@ -184,6 +409,16 @@ class NetworkEstimator:
         if not pooled:
             return float(np.mean(self._rtt))
         return float(np.percentile(np.asarray(pooled), q * 100.0))
+
+    def predict_transfer(self, stream: int, payload_bytes: float = 0.0,
+                         q: float = 0.95) -> float:
+        """Pessimistic transfer-time prediction for one stream: the windowed
+        q-percentile RTT (EWMA before any windowed sample) plus the payload
+        serialization term — what the latency-SLO admission ladder compares
+        against its deadline *before* spending network budget."""
+        rtt = (self.rtt_percentile(q, stream) if self._windows[stream]
+               else float(self._rtt[stream]))
+        return rtt + payload_bytes / self.cfg.bw_hint
 
     def _predict(self, payloads: np.ndarray) -> np.ndarray:
         cfg = self.cfg

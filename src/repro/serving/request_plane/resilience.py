@@ -1,0 +1,321 @@
+"""Fault tolerance for the offload path: deadlines, retries, backoff, and
+per-stream circuit breaking — all on the loop clock, so every test is
+virtual-time deterministic.
+
+The `Link` protocol (`netem.py`) reports what the wire did; this module
+decides what to do about it. `ResilientSender.send` wraps one logical
+offload in the full recovery loop:
+
+  attempt     — the raw `link.send`, bounded by a per-attempt `deadline`
+                (`asyncio.wait_for`; a straggler past the deadline is
+                cancelled and treated as failed).
+  retry       — up to `max_retries` re-sends after the first attempt, each
+                preceded by capped exponential backoff with deterministic
+                seeded jitter (`base·factor^k`, clipped at `cap`, stretched
+                by up to `jitter`× a seeded uniform — decorrelating retry
+                storms without wall-clock randomness).
+  breaker     — a per-stream circuit breaker: CLOSED → OPEN when failures
+                run hot (consecutive count OR an EWMA failure rate over a
+                threshold), OPEN → HALF_OPEN after `cooldown` seconds of
+                loop time, HALF_OPEN admits exactly one probe whose outcome
+                closes or re-opens the circuit. An open breaker fails the
+                send fast — and the ingress ladder consults
+                `breaker_blocking` to deny-to-local before any network
+                budget is spent.
+
+Every outcome feeds `NetworkEstimator.observe`: successes as measured RTTs
+(`ok=True`), timeouts and drops as tail observations (`ok=False`, the
+percentile window only), corrupted responses as real timings whose payload
+was garbage (`ok=True` — the wire worked, the bytes didn't). A send that
+exhausts every attempt raises `RetriesExhausted`, which carries how many
+attempts actually reached the link — the micro-batcher charges β only when
+network budget was truly spent (`attempts > 0`).
+
+Metrics emitted (all in the plane summary): `retries_total`,
+`send_timeouts`, `send_drops`, `send_outages`, `send_corrupted`,
+`send_recovered` (succeeded on a retry), `retry_backoff_s` (cumulative),
+`breaker_opens`/`breaker_closes`/`breaker_probes`, and the state gauges
+`breaker_{closed,open,half_open}_streams`.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import random
+from typing import Optional
+
+from repro.serving.request_plane.metrics import Metrics
+from repro.serving.request_plane.netem import (
+    Link,
+    LinkError,
+    LinkOutage,
+    NetworkEstimator,
+    SendCorrupted,
+)
+
+#: Circuit-breaker states (the `breaker_{state}_streams` gauge suffixes).
+BREAKER_CLOSED = "closed"
+BREAKER_OPEN = "open"
+BREAKER_HALF_OPEN = "half_open"
+
+
+class SendTimeout(LinkError):
+    """A single attempt exceeded the per-send deadline and was cancelled."""
+
+
+class RetriesExhausted(LinkError):
+    """Every attempt of one logical send failed (or the breaker refused to
+    try). `attempts` counts sends that actually reached the link — 0 means
+    the breaker failed the request fast and no network budget was spent.
+    `last_error` is the final attempt's failure (None when `attempts` is 0).
+    """
+
+    def __init__(self, stream: int, attempts: int,
+                 last_error: Optional[LinkError]):
+        detail = ("breaker open, nothing sent" if attempts == 0
+                  else f"last error: {last_error}")
+        super().__init__(
+            f"offload on stream {stream} failed after {attempts} "
+            f"attempt(s); {detail}")
+        self.stream = int(stream)
+        self.attempts = int(attempts)
+        self.last_error = last_error
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Retry/timeout/backoff/breaker knobs, all loop-clock driven.
+
+    `deadline=None` disables per-attempt timeouts (safe with the simulated
+    doubles, whose failures always surface in finite time; set it for any
+    link with stragglers). The defaults are deliberately inert on a healthy
+    link: no timeout, backoff only after a failure, breaker only opens on
+    real failure runs — so the resilience layer is free when nothing fails.
+    """
+
+    deadline: Optional[float] = None   # s per attempt; None → no timeout
+    max_retries: int = 2               # re-sends after the first attempt
+    backoff_base: float = 0.01         # s, delay before the first retry
+    backoff_factor: float = 2.0        # exponential growth per retry
+    backoff_cap: float = 0.5           # s, delay ceiling
+    backoff_jitter: float = 0.5        # stretch: delay ·= 1 + U[0, jitter]
+    seed: int = 0                      # jitter PRNG seed
+    breaker_enabled: bool = True
+    breaker_consecutive: int = 5       # consecutive failures → OPEN
+    breaker_alpha: float = 0.2         # failure-rate EWMA weight
+    breaker_threshold: float = 0.7     # EWMA rate → OPEN (after min samples)
+    breaker_min_samples: int = 5       # EWMA trips only past this many sends
+    breaker_cooldown: float = 1.0      # s OPEN before the half-open probe
+
+    def __post_init__(self):
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"deadline must be positive (got {self.deadline})")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be ≥ 0 (got {self.max_retries})")
+        if (self.backoff_base < 0 or self.backoff_cap < 0
+                or self.backoff_factor < 1.0 or self.backoff_jitter < 0):
+            raise ValueError(
+                "backoff needs base ≥ 0, cap ≥ 0, factor ≥ 1, jitter ≥ 0 "
+                f"(got base={self.backoff_base}, cap={self.backoff_cap}, "
+                f"factor={self.backoff_factor}, jitter={self.backoff_jitter})")
+        if self.breaker_consecutive < 1:
+            raise ValueError(
+                f"breaker_consecutive must be ≥ 1 (got {self.breaker_consecutive})")
+        if not 0 < self.breaker_alpha <= 1:
+            raise ValueError(
+                f"breaker_alpha must lie in (0, 1] (got {self.breaker_alpha})")
+        if not 0 < self.breaker_threshold <= 1:
+            raise ValueError(
+                f"breaker_threshold must lie in (0, 1] "
+                f"(got {self.breaker_threshold})")
+        if self.breaker_cooldown < 0:
+            raise ValueError(
+                f"breaker_cooldown must be ≥ 0 (got {self.breaker_cooldown})")
+
+
+class CircuitBreaker:
+    """One stream's failure-driven circuit: CLOSED → OPEN → HALF_OPEN.
+
+    `allow(now)` is the mutating gate (claims the half-open probe);
+    `blocking(now)` is the non-mutating view the admission ladder reads.
+    `record_success`/`record_failure` return the transition that happened
+    (`"opened"`/`"closed"`/None) so the sender can keep gauges exact.
+    """
+
+    __slots__ = ("cfg", "state", "consecutive", "rate", "samples",
+                 "opened_at", "probing")
+
+    def __init__(self, cfg: ResilienceConfig):
+        self.cfg = cfg
+        self.state = BREAKER_CLOSED
+        self.consecutive = 0
+        self.rate = 0.0            # EWMA failure rate
+        self.samples = 0
+        self.opened_at = 0.0
+        self.probing = False
+
+    def blocking(self, now: float) -> bool:
+        """Would a send right now be refused? (No state change.)"""
+        if not self.cfg.breaker_enabled or self.state == BREAKER_CLOSED:
+            return False
+        if self.state == BREAKER_OPEN:
+            return now - self.opened_at < self.cfg.breaker_cooldown
+        return self.probing        # HALF_OPEN: blocked while a probe flies
+
+    def allow(self, now: float) -> bool:
+        """Gate one attempt; OPEN past its cooldown becomes HALF_OPEN and
+        grants the caller the (single) probe."""
+        if not self.cfg.breaker_enabled or self.state == BREAKER_CLOSED:
+            return True
+        if self.state == BREAKER_OPEN:
+            if now - self.opened_at < self.cfg.breaker_cooldown:
+                return False
+            self.state = BREAKER_HALF_OPEN
+            self.probing = True
+            return True
+        if not self.probing:       # HALF_OPEN, probe slot free
+            self.probing = True
+            return True
+        return False
+
+    def record_success(self) -> Optional[str]:
+        self.probing = False
+        self.consecutive = 0
+        self.samples += 1
+        self.rate += self.cfg.breaker_alpha * (0.0 - self.rate)
+        if self.state != BREAKER_CLOSED:
+            self.state = BREAKER_CLOSED
+            self.rate = 0.0        # a closed circuit starts clean
+            return "closed"
+        return None
+
+    def record_failure(self, now: float) -> Optional[str]:
+        self.probing = False
+        self.consecutive += 1
+        self.samples += 1
+        self.rate += self.cfg.breaker_alpha * (1.0 - self.rate)
+        if self.state == BREAKER_HALF_OPEN:
+            self.state = BREAKER_OPEN
+            self.opened_at = now   # failed probe: full cooldown again
+            return "opened"
+        if self.state == BREAKER_CLOSED and (
+                self.consecutive >= self.cfg.breaker_consecutive
+                or (self.samples >= self.cfg.breaker_min_samples
+                    and self.rate >= self.cfg.breaker_threshold)):
+            self.state = BREAKER_OPEN
+            self.opened_at = now
+            return "opened"
+        return None
+
+
+class ResilientSender:
+    """The retry/timeout/backoff/breaker loop around one `Link`, shared by
+    every in-flight transfer of the micro-batcher."""
+
+    def __init__(self, link: Link, estimator: NetworkEstimator,
+                 metrics: Metrics, cfg: ResilienceConfig, n_streams: int):
+        self.link = link
+        self.estimator = estimator
+        self.metrics = metrics
+        self.cfg = cfg
+        self.breakers = [CircuitBreaker(cfg) for _ in range(int(n_streams))]
+        self._jitter = random.Random(cfg.seed * 7_368_787 + 0x5DEECE66D)
+        self._update_breaker_gauges()
+
+    # ------------------------------ breaker views ------------------------------
+
+    def breaker_blocking(self, stream: int, now: float) -> bool:
+        """The ingress ladder's view: is this stream's circuit refusing?"""
+        return self.breakers[stream].blocking(now)
+
+    def breaker_state(self, stream: int) -> str:
+        return self.breakers[stream].state
+
+    def _update_breaker_gauges(self) -> None:
+        counts = {BREAKER_CLOSED: 0, BREAKER_OPEN: 0, BREAKER_HALF_OPEN: 0}
+        for b in self.breakers:
+            counts[b.state] += 1
+        for state, n in counts.items():
+            self.metrics.gauge(f"breaker_{state}_streams").set(n)
+
+    # ------------------------------ the send loop ------------------------------
+
+    def _backoff(self, retry_index: int) -> float:
+        cfg = self.cfg
+        delay = min(cfg.backoff_cap,
+                    cfg.backoff_base * cfg.backoff_factor ** retry_index)
+        if cfg.backoff_jitter > 0.0:
+            delay *= 1.0 + cfg.backoff_jitter * self._jitter.random()
+        return delay
+
+    async def send(self, stream: int, payload_bytes: float) -> float:
+        """One logical offload: returns the successful attempt's measured
+        transfer seconds, or raises `RetriesExhausted`."""
+        loop = asyncio.get_running_loop()
+        cfg = self.cfg
+        breaker = self.breakers[stream]
+        attempts = 0
+        last: Optional[LinkError] = None
+        for attempt in range(cfg.max_retries + 1):
+            if not breaker.allow(loop.time()):
+                break              # open circuit: fail fast, spend nothing
+            if breaker.state == BREAKER_HALF_OPEN:
+                self.metrics.counter("breaker_probes").inc()
+                self._update_breaker_gauges()   # OPEN → HALF_OPEN in allow()
+            if attempt > 0:
+                self.metrics.counter("retries_total").inc()
+            attempts += 1
+            t0 = loop.time()
+            try:
+                if cfg.deadline is not None:
+                    await asyncio.wait_for(
+                        self.link.send(stream, payload_bytes), cfg.deadline)
+                else:
+                    await self.link.send(stream, payload_bytes)
+            except asyncio.TimeoutError:
+                elapsed = loop.time() - t0
+                last = SendTimeout(
+                    f"attempt {attempt} on stream {stream} exceeded the "
+                    f"{cfg.deadline}s deadline", elapsed=elapsed)
+                self.metrics.counter("send_timeouts").inc()
+                self.estimator.observe(stream, elapsed, payload_bytes,
+                                       ok=False)
+                self._record_failure(breaker, loop.time())
+            except LinkOutage as e:
+                last = e           # fast failure: no timing worth recording
+                self.metrics.counter("send_outages").inc()
+                self._record_failure(breaker, loop.time())
+            except SendCorrupted as e:
+                last = e           # the wire worked — a real RTT measurement
+                self.metrics.counter("send_corrupted").inc()
+                self.estimator.observe(stream, e.elapsed, payload_bytes,
+                                       ok=True)
+                self._record_failure(breaker, loop.time())
+            except LinkError as e:  # SendDropped + any transport failure
+                last = e
+                self.metrics.counter("send_drops").inc()
+                self.estimator.observe(
+                    stream, max(e.elapsed, loop.time() - t0), payload_bytes,
+                    ok=False)
+                self._record_failure(breaker, loop.time())
+            else:
+                measured = loop.time() - t0
+                if breaker.record_success() == "closed":
+                    self.metrics.counter("breaker_closes").inc()
+                    self._update_breaker_gauges()
+                self.estimator.observe(stream, measured, payload_bytes,
+                                       ok=True)
+                if attempt > 0:
+                    self.metrics.counter("send_recovered").inc()
+                return measured
+            if attempt < cfg.max_retries and not breaker.blocking(loop.time()):
+                delay = self._backoff(attempt)
+                if delay > 0.0:
+                    self.metrics.counter("retry_backoff_s").inc(delay)
+                    await asyncio.sleep(delay)
+        raise RetriesExhausted(stream, attempts, last)
+
+    def _record_failure(self, breaker: CircuitBreaker, now: float) -> None:
+        if breaker.record_failure(now) == "opened":
+            self.metrics.counter("breaker_opens").inc()
+            self._update_breaker_gauges()

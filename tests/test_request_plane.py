@@ -456,11 +456,13 @@ def test_sustained_overload_fairness_and_exact_accounting():
     assert summary["requests_total"] == \
         summary["admitted_total"] + summary["denied_total"]
     assert summary["fallback_total"] == \
-        summary["denied_total"] + summary["capacity_dropped"]
+        summary["denied_total"] + summary["capacity_dropped"] \
+        + summary.get("retry_exhausted", 0.0)
     assert summary["admitted_total"] == summary["latency_ms_count"]
     assert summary["admitted_total"] == (summary["completed_local"]
                                          + summary["completed_remote"]
-                                         + summary["capacity_dropped"])
+                                         + summary["capacity_dropped"]
+                                         + summary.get("retry_exhausted", 0.0))
     # Rotating compaction shares the RDL: no stream starves.
     assert plane.batcher.stream_sent.min() >= 1
     # Queue-depth admission bounds tail latency at saturation.

@@ -1,0 +1,505 @@
+"""Fault tolerance of the offload path: fault injection, retry/timeout/
+backoff, circuit breaking, lost-feedback recovery, and the degradation
+ladder — all on the virtual clock, so chaos is exactly reproducible.
+
+The conservation chaos test is hypothesis-driven where hypothesis is
+installed (seeded fault schedules via `derandomize=True`) and falls back to
+a fixed seed sweep otherwise — either way the invariants are asserted on
+deterministic virtual-clock runs.
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.traffic import TrafficProcess
+from repro.serving.request_plane import (
+    BREAKER_CLOSED,
+    BREAKER_HALF_OPEN,
+    BREAKER_OPEN,
+    AdmissionConfig,
+    CircuitBreaker,
+    EstimatorConfig,
+    FaultConfig,
+    FaultyLink,
+    Link,
+    LinkConfig,
+    LinkOutage,
+    Metrics,
+    NetworkEstimator,
+    RequestPlaneConfig,
+    ResilienceConfig,
+    ResilientSender,
+    RetriesExhausted,
+    SendCorrupted,
+    SendDropped,
+    SendTimeout,
+    SimulatedLink,
+    run_virtual,
+    serve_traffic,
+)
+
+K = jax.random.PRNGKey
+
+
+# ------------------------------ circuit breaker -------------------------------
+
+
+def test_breaker_opens_on_consecutive_failures_then_probes_closed():
+    cfg = ResilienceConfig(breaker_consecutive=3, breaker_cooldown=2.0)
+    b = CircuitBreaker(cfg)
+    assert b.state == BREAKER_CLOSED and not b.blocking(0.0)
+    assert b.record_failure(0.0) is None
+    assert b.record_failure(0.1) is None
+    assert b.record_failure(0.2) == "opened"
+    assert b.state == BREAKER_OPEN and b.blocking(0.3)
+    assert not b.allow(1.0)                    # cooldown not elapsed
+    assert b.allow(2.5)                        # OPEN → HALF_OPEN, probe claimed
+    assert b.state == BREAKER_HALF_OPEN
+    assert not b.allow(2.5)                    # only one probe at a time
+    assert b.record_success() == "closed"
+    assert b.state == BREAKER_CLOSED and b.rate == 0.0   # closes clean
+
+
+def test_breaker_failed_probe_reopens_with_full_cooldown():
+    cfg = ResilienceConfig(breaker_consecutive=2, breaker_cooldown=1.0)
+    b = CircuitBreaker(cfg)
+    b.record_failure(0.0)
+    b.record_failure(0.0)
+    assert b.state == BREAKER_OPEN
+    assert b.allow(1.5)                        # half-open probe
+    assert b.record_failure(1.5) == "opened"   # probe failed
+    assert b.state == BREAKER_OPEN and b.opened_at == 1.5
+    assert not b.allow(2.4) and b.allow(2.6)
+
+
+def test_breaker_ewma_rate_trip_and_disabled_never_blocks():
+    cfg = ResilienceConfig(breaker_consecutive=100, breaker_alpha=0.5,
+                           breaker_threshold=0.6, breaker_min_samples=3)
+    b = CircuitBreaker(cfg)
+    # Consecutive stays far below 100; the EWMA failure rate trips instead,
+    # but only once min_samples is reached.
+    assert b.record_failure(0.0) is None       # rate 0.5, 1 sample
+    assert b.record_failure(0.1) is None       # rate 0.75, 2 samples
+    assert b.record_failure(0.2) == "opened"   # rate 0.875 ≥ 0.6, 3 samples
+    off = CircuitBreaker(ResilienceConfig(breaker_enabled=False))
+    for _ in range(20):
+        off.record_failure(0.0)
+    assert not off.blocking(0.0) and off.allow(0.0)
+
+
+# ------------------------------ backoff ---------------------------------------
+
+
+def _sender(res_cfg, link=None, n_streams=1, metrics=None):
+    return ResilientSender(
+        link if link is not None else SimulatedLink(LinkConfig()),
+        NetworkEstimator(EstimatorConfig(), n_streams),
+        metrics if metrics is not None else Metrics(), res_cfg, n_streams)
+
+
+def test_backoff_is_seeded_capped_and_jitter_bounded():
+    cfg = ResilienceConfig(seed=3, backoff_base=0.1, backoff_factor=2.0,
+                           backoff_cap=0.3, backoff_jitter=0.5)
+    seq = lambda c: [_sender(c)._backoff(k) for k in range(6)]
+    a = seq(cfg)
+    assert a == seq(cfg)                                   # same seed, same jitter
+    assert seq(dataclasses.replace(cfg, seed=4)) != a
+    for k, d in enumerate(a):
+        raw = min(0.3, 0.1 * 2.0 ** k)                     # capped exponential
+        assert raw <= d <= raw * 1.5                       # jitter stretch only
+    plain = dataclasses.replace(cfg, backoff_jitter=0.0)
+    assert seq(plain) == [0.1, 0.2, 0.3, 0.3, 0.3, 0.3]
+
+
+def test_resilience_and_fault_config_validation():
+    for bad in (dict(deadline=0.0), dict(max_retries=-1),
+                dict(backoff_factor=0.5), dict(breaker_threshold=0.0),
+                dict(breaker_consecutive=0), dict(breaker_cooldown=-1.0)):
+        with pytest.raises(ValueError):
+            ResilienceConfig(**bad)
+    for bad in (dict(drop_prob=1.5), dict(outage_p_enter=-0.1),
+                dict(straggler_shape=0.0),
+                dict(outage_windows=((2.0, 1.0),))):
+        with pytest.raises(ValueError):
+            FaultConfig(**bad)
+
+
+# ------------------------------ faulty link -----------------------------------
+
+
+def _collect_sends(link, n, stream=0, payload=0.0):
+    """Drive `n` sends under the virtual clock; tag each outcome."""
+
+    async def main():
+        out = []
+        for _ in range(n):
+            try:
+                out.append(("ok", await link.send(stream, payload)))
+            except LinkOutage:
+                out.append(("outage", 0.0))
+            except SendDropped as e:
+                out.append(("drop", e.elapsed))
+            except SendCorrupted as e:
+                out.append(("corrupt", e.elapsed))
+        return out
+
+    return run_virtual(main())
+
+
+def test_link_protocol_and_capability_flags():
+    bare = SimulatedLink(LinkConfig())
+    faulty = FaultyLink(bare, FaultConfig(drop_prob=0.1))
+    assert isinstance(bare, Link) and isinstance(faulty, Link)
+    assert bare.deterministic and not bare.lossy
+    assert faulty.deterministic and faulty.lossy
+
+
+def test_faulty_link_traces_are_seeded_and_counted():
+    fc = FaultConfig(drop_prob=0.3, corrupt_prob=0.2, straggler_prob=0.2,
+                     straggler_scale=0.05, outage_p_enter=0.1, seed=11)
+    mk = lambda c=fc: FaultyLink(SimulatedLink(LinkConfig(seed=2)), c)
+    a = _collect_sends(mk(), 60)
+    assert a == _collect_sends(mk(), 60)                   # same seed, same trace
+    assert {"ok", "drop", "corrupt", "outage"} <= {k for k, _ in a}
+    assert _collect_sends(mk(dataclasses.replace(fc, seed=12)), 60) != a
+    # `injected` is ground truth for what actually surfaced.
+    link = mk()
+    trace = _collect_sends(link, 60)
+    for fam in ("drop", "corrupt", "outage"):
+        assert link.injected[fam] == sum(1 for k, _ in trace if k == fam)
+    assert link.injected["straggler"] > 0
+
+
+def test_zero_fault_wrapper_is_pure_passthrough():
+    assert FaultConfig().fault_free
+    bare = _collect_sends(SimulatedLink(LinkConfig(seed=4)), 30)
+    wrapped_link = FaultyLink(SimulatedLink(LinkConfig(seed=4)), FaultConfig())
+    assert _collect_sends(wrapped_link, 30) == bare
+    assert wrapped_link._rngs == {}            # no fault PRNG ever materialized
+
+
+def test_scheduled_outage_windows_follow_the_loop_clock():
+    link = FaultyLink(
+        SimulatedLink(LinkConfig(base_rtt=0.01, jitter=0.0,
+                                 congested_extra=0.0, p_up=0.0)),
+        FaultConfig(outage_windows=((1.0, 2.0),)))
+    assert link.in_scheduled_outage(1.5) and not link.in_scheduled_outage(2.0)
+
+    async def main():
+        loop = asyncio.get_running_loop()
+        log = []
+        while loop.time() < 3.0:
+            t0 = loop.time()
+            try:
+                await link.send(0, 0.0)
+                log.append((t0, "ok"))
+            except LinkOutage:
+                log.append((t0, "outage"))
+                await asyncio.sleep(0.05)
+        return log
+
+    log = run_virtual(main())
+    assert any(kind == "outage" for _, kind in log)
+    for t0, kind in log:
+        assert kind == ("outage" if 1.0 <= t0 < 2.0 else "ok")
+    assert link.injected["outage"] == sum(1 for _, k in log if k == "outage")
+
+
+# ------------------------------ estimator ok flag -----------------------------
+
+
+def test_estimator_failures_feed_tail_window_not_ewma():
+    est = NetworkEstimator(EstimatorConfig(alpha=0.5, window=8,
+                                           prior_rtt=0.05), 2)
+    est.observe(0, 0.02, 0.0)
+    assert est.rtt_estimate(0) == pytest.approx(0.02)
+    for _ in range(3):
+        est.observe(0, 0.25, 0.0, ok=False)    # timeout caps, not RTTs
+    assert est.rtt_estimate(0) == pytest.approx(0.02)      # EWMA untouched
+    assert est.n_failures == 3 and est.n_samples == 4
+    assert est.rtt_percentile(0.95, 0) > 0.2               # window inflated
+    # The SLO rung's prediction: windowed percentile + payload term.
+    assert est.predict_transfer(0, payload_bytes=1.0e4, q=0.95) == \
+        pytest.approx(est.rtt_percentile(0.95, 0) + 0.01)
+    # A cold stream predicts from its EWMA prior.
+    assert est.predict_transfer(1) == pytest.approx(0.05)
+
+
+# ------------------------------ resilient sender ------------------------------
+
+
+class _ScriptLink:
+    """Scripted transport for sender unit tests: each entry is ("ok", dt),
+    ("drop", dt), ("outage",), or ("hang", dt)."""
+
+    deterministic = True
+    lossy = True
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.sent = 0
+
+    async def send(self, stream, payload_bytes):
+        step = self.script[self.sent] if self.sent < len(self.script) \
+            else ("ok", 0.01)
+        self.sent += 1
+        kind = step[0]
+        if kind == "outage":
+            raise LinkOutage("scripted outage")
+        await asyncio.sleep(step[1])
+        if kind == "drop":
+            raise SendDropped("scripted drop", elapsed=step[1])
+        return step[1]
+
+
+def test_sender_retries_through_drops_and_recovers():
+    m = Metrics()
+    sender = _sender(ResilienceConfig(max_retries=2, backoff_base=0.01,
+                                      backoff_jitter=0.0),
+                     link=_ScriptLink([("drop", 0.02), ("drop", 0.02),
+                                       ("ok", 0.03)]), metrics=m)
+    measured = run_virtual(sender.send(0, 0.0))
+    assert measured == pytest.approx(0.03)
+    snap = m.snapshot()
+    assert snap["retries_total"] == 2.0 and snap["send_drops"] == 2.0
+    assert snap["send_recovered"] == 1.0
+    assert snap["retry_backoff_s"] == pytest.approx(0.01 + 0.02)
+    assert sender.estimator.n_failures == 2 and sender.estimator.n_samples == 3
+
+
+def test_sender_deadline_timeouts_exhaust_and_observe_caps():
+    m = Metrics()
+    sender = _sender(ResilienceConfig(deadline=0.05, max_retries=2,
+                                      backoff_base=0.01, backoff_jitter=0.0),
+                     link=_ScriptLink([("hang", 1.0)] * 3), metrics=m)
+    with pytest.raises(RetriesExhausted) as exc:
+        run_virtual(sender.send(0, 0.0))
+    assert exc.value.attempts == 3
+    assert isinstance(exc.value.last_error, SendTimeout)
+    assert m.snapshot()["send_timeouts"] == 3.0
+    # Each cap entered the percentile window as a failure observation.
+    assert sender.estimator.n_failures == 3
+    assert sender.estimator.rtt_percentile(0.95, 0) == pytest.approx(
+        0.05, abs=1e-6)
+
+
+def test_sender_breaker_fast_fails_then_probe_closes():
+    m = Metrics()
+    link = _ScriptLink([("outage",), ("outage",), ("ok", 0.02)])
+    sender = _sender(ResilienceConfig(max_retries=0, breaker_consecutive=2,
+                                      breaker_cooldown=0.5), link=link,
+                     metrics=m)
+
+    async def main():
+        for _ in range(2):                     # two real failures → OPEN
+            with pytest.raises(RetriesExhausted):
+                await sender.send(0, 0.0)
+        assert sender.breaker_state(0) == BREAKER_OPEN
+        assert sender.breaker_blocking(0, asyncio.get_running_loop().time())
+        # Open circuit: fail fast, nothing reaches the link.
+        with pytest.raises(RetriesExhausted) as exc:
+            await sender.send(0, 0.0)
+        assert exc.value.attempts == 0 and exc.value.last_error is None
+        assert link.sent == 2
+        await asyncio.sleep(0.6)               # past the cooldown
+        return await sender.send(0, 0.0)       # the half-open probe
+
+    assert run_virtual(main()) == pytest.approx(0.02)
+    assert sender.breaker_state(0) == BREAKER_CLOSED
+    snap = m.snapshot()
+    assert snap["send_outages"] == 2.0 and snap["breaker_opens"] == 1.0
+    assert snap["breaker_probes"] == 1.0 and snap["breaker_closes"] == 1.0
+    assert snap["breaker_closed_streams"] == 1.0
+    assert snap["breaker_open_streams"] == 0.0
+
+
+# ------------------------------ the plane under faults ------------------------
+
+
+def _plane_cfg(s=8, mw=0.02, **kw):
+    return RequestPlaneConfig(
+        n_streams=s, max_wait=mw, offload_capacity=s // 2,
+        admission=AdmissionConfig(max_queue=4 * s), **kw)
+
+
+def _load(s, mw, n, key=3):
+    """Offered load 1.0: arrival rate matched to one fleet round per
+    `max_wait` deadline."""
+    return TrafficProcess(process="poisson", rate=s / mw, n_arrivals=n,
+                          n_sessions=s, key=K(key)).materialize()
+
+
+def _assert_conservation(summary, n_requests):
+    g = lambda k: summary.get(k, 0.0)
+    assert g("requests_total") == float(n_requests)
+    assert g("requests_total") == g("admitted_total") + g("denied_total")
+    assert g("admitted_total") == (g("completed_local") + g("completed_remote")
+                                   + g("capacity_dropped")
+                                   + g("retry_exhausted"))
+    assert g("fallback_total") == (g("denied_total") + g("capacity_dropped")
+                                   + g("retry_exhausted"))
+    assert g("admitted_total") == g("latency_ms_count")
+
+
+def test_zero_fault_plane_summary_is_bit_identical():
+    """The parity guarantee end to end: a `FaultyLink` with every knob at
+    zero yields the exact summary of the bare `SimulatedLink` run."""
+    arr = _load(8, 0.02, 200)
+    cfg = _plane_cfg(resilience=ResilienceConfig(deadline=0.25))
+    clean = serve_traffic(cfg, arr, K(5))[2]
+    wrapped = serve_traffic(
+        dataclasses.replace(cfg, fault=FaultConfig()), arr, K(5))[2]
+    assert wrapped == clean
+
+
+def _chaos_invariants(seed):
+    """One seeded chaos run: randomized drop/corrupt/straggler/outage
+    schedule + randomized resilience knobs; every future must resolve and
+    the accounting must balance exactly."""
+    rng = np.random.default_rng(seed)
+    fault = FaultConfig(
+        drop_prob=float(rng.uniform(0.0, 0.4)),
+        corrupt_prob=float(rng.uniform(0.0, 0.2)),
+        straggler_prob=float(rng.uniform(0.0, 0.3)),
+        straggler_scale=0.1,
+        outage_p_enter=float(rng.uniform(0.0, 0.08)),
+        outage_p_exit=float(rng.uniform(0.2, 0.6)),
+        outage_windows=((0.4, 0.6),) if rng.random() < 0.5 else (),
+        seed=int(rng.integers(0, 2 ** 31)))
+    res = ResilienceConfig(
+        deadline=float(rng.uniform(0.08, 0.3)),
+        max_retries=int(rng.integers(0, 4)),
+        breaker_consecutive=int(rng.integers(2, 6)),
+        breaker_cooldown=float(rng.uniform(0.1, 1.0)),
+        seed=seed)
+    s, mw, n = 6, 0.02, 220
+    cfg = _plane_cfg(s=s, mw=mw, fault=fault, resilience=res)
+    plane, results, summary = serve_traffic(cfg, _load(s, mw, n, key=seed + 1),
+                                            K(seed))
+    # No hung futures, no leaked in-flight work, feedback fully drained.
+    assert len(results) == n and all(r.pred in (0, 1) for r in results)
+    assert plane.batcher.idle and plane.batcher._inflight == 0
+    assert not plane.batcher._pending
+    _assert_conservation(summary, n)
+    # The sender's failure counters reconcile with the injector's ground
+    # truth (stragglers excluded: they are delays, not failures — and a
+    # straggler cancelled by the deadline surfaces as a timeout instead).
+    g = lambda k: summary.get(k, 0.0)
+    inj = plane.link.injected
+    assert g("send_outages") == float(inj["outage"])
+    assert g("send_drops") == float(inj["drop"])
+    assert g("send_corrupted") == float(inj["corrupt"])
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2 ** 16 - 1))
+    @settings(max_examples=6, deadline=None, derandomize=True)
+    def test_chaos_conservation_under_random_faults(seed):
+        _chaos_invariants(seed)
+except ImportError:                            # fixed sweep, same invariants
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+    def test_chaos_conservation_under_random_faults(seed):
+        _chaos_invariants(seed)
+
+
+def test_retry_exhaustion_degrades_to_fallback_and_drains_feedback():
+    """Every send drops: all offloads exhaust their retries, yet every
+    future resolves (failed, local fallback), feedback drains with the dead
+    slots masked out, and β is still charged for the budget actually
+    spent."""
+    s, mw, n = 4, 0.02, 80
+    cfg = _plane_cfg(s=s, mw=mw, fault=FaultConfig(drop_prob=1.0, seed=3),
+                     resilience=ResilienceConfig(max_retries=1,
+                                                 breaker_enabled=False))
+    plane, results, summary = serve_traffic(cfg, _load(s, mw, n, key=2), K(2))
+    g = lambda k: summary.get(k, 0.0)
+    assert g("completed_remote") == 0.0 and g("retry_exhausted") > 0
+    assert g("retry_exhausted") == float(sum(r.failed for r in results))
+    for r in results:
+        assert r.pred in (0, 1)
+        if r.failed:
+            assert not r.offloaded and not r.dropped
+    # max_retries=1 → exactly two dropped attempts per exhausted send.
+    assert g("send_drops") == 2.0 * g("retry_exhausted")
+    assert g("observed_cost") > 0.0            # β charged: attempts > 0
+    _assert_conservation(summary, n)
+    # Feedback never wedged on the lost labels.
+    assert plane.batcher.idle and not plane.batcher._pending
+    assert g("feedback_rounds") == g("rounds_total")
+
+
+def test_slo_rung_denies_before_spending_network_budget():
+    """With the estimator still at its cold-start prior (0.05 s) and an SLO
+    of 0.01 s, every request is denied at the ladder before any send."""
+    s = 4
+    cfg = RequestPlaneConfig(
+        n_streams=s, max_wait=0.02,
+        admission=AdmissionConfig(slo_deadline=0.01, slo_quantile=0.9))
+    plane, results, summary = serve_traffic(cfg, _load(s, 0.02, 40, key=6),
+                                            K(1))
+    assert summary.get("denied_slo_miss", 0.0) == 40.0
+    assert all(r.denied and r.reason == "slo_miss" and r.pred in (0, 1)
+               for r in results)
+    assert plane.estimator.n_samples == 0      # the link was never touched
+    _assert_conservation(summary, 40)
+
+
+def test_breaker_rung_denies_and_gauges_track_states():
+    """Sustained harsh faults open per-stream breakers; once open, the
+    ladder denies at ingress (`breaker_open`) instead of burning retries."""
+    s, mw, n = 8, 0.02, 300
+    cfg = _plane_cfg(
+        s=s, mw=mw,
+        fault=FaultConfig(drop_prob=0.6, outage_p_enter=0.10,
+                          outage_p_exit=0.15, seed=2),
+        resilience=ResilienceConfig(deadline=0.25, max_retries=1,
+                                    breaker_consecutive=3,
+                                    breaker_cooldown=0.5))
+    plane, results, summary = serve_traffic(cfg, _load(s, mw, n), K(5))
+    g = lambda k: summary.get(k, 0.0)
+    assert len(results) == n and all(r.pred in (0, 1) for r in results)
+    assert g("denied_breaker_open") > 0 and g("breaker_opens") > 0
+    assert g("breaker_probes") > 0             # half-open probes happened
+    _assert_conservation(summary, n)
+    # The state gauges partition the fleet.
+    assert (g("breaker_closed_streams") + g("breaker_open_streams")
+            + g("breaker_half_open_streams")) == float(s)
+    assert summary["exhausted_rate"] >= 0.0 and summary["fallback_rate"] > 0.0
+
+
+def test_acceptance_faulty_run_stays_within_25pct_of_clean_cost():
+    """The PR's acceptance bar: 10% drops plus a bursty outage (scheduled
+    burst + Markov episodes) at offered load 1.0 — the plane completes with
+    zero hung futures, exact conservation, and cumulative true cost within
+    25% of the fault-free run."""
+    s, mw, n = 8, 0.02, 400
+    arr = _load(s, mw, n)
+    base = _plane_cfg(s=s, mw=mw,
+                      resilience=ResilienceConfig(deadline=0.25,
+                                                  max_retries=2,
+                                                  breaker_consecutive=3,
+                                                  breaker_cooldown=0.1))
+    _, clean_results, clean = serve_traffic(base, arr, K(5))
+    faulty_cfg = dataclasses.replace(
+        base, fault=FaultConfig(drop_prob=0.10,
+                                outage_windows=((0.1, 0.2),),
+                                outage_p_enter=0.02, outage_p_exit=0.25,
+                                seed=7))
+    plane, results, faulty = serve_traffic(faulty_cfg, arr, K(5))
+    g = lambda k: faulty.get(k, 0.0)
+    assert len(results) == n and all(r.pred in (0, 1) for r in results)
+    assert plane.batcher.idle and not plane.batcher._pending
+    # Faults really fired and the recovery path really ran.
+    assert g("send_drops") > 0 and g("send_outages") > 0
+    assert g("retries_total") > 0 and g("send_recovered") > 0
+    _assert_conservation(faulty, n)
+    # Degradation, not collapse: cumulative ground-truth cost within 25%.
+    assert faulty["true_cost"] == pytest.approx(clean["true_cost"], rel=0.25)
+    assert faulty["labeled_total"] == clean["labeled_total"]
